@@ -1,0 +1,128 @@
+"""Shared benchmark scaffolding: workloads, builders, result tables.
+
+The paper's Figs. 6/7 use FunctionBench micro-benchmarks spanning process
+type / memory footprint / latency.  The LLM-serving analogues here span the
+same axes: small-vs-large working set, short-vs-long requests, and the
+program-language-runtime variety maps to architecture families.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, scaled_config, tiny_config
+from repro.core.instance import _path_str
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.models import model
+from repro.serving import Request, ServingEngine
+
+#: the benchmark suite (Fig. 6/7 analogue).  (name, arch, prompt_len,
+#: new_tokens, scale) — float-operation ~ tiny/short; video-processing ~
+#: scaled/long; image-processing two sizes; hello-world per runtime family.
+WORKLOADS = [
+    ("hello-dense",   "llama3.2-3b",     8,  4, "tiny"),
+    ("hello-moe",     "arctic-480b",     8,  4, "tiny"),
+    ("hello-ssm",     "mamba2-130m",     8,  4, "tiny"),
+    ("hello-hybrid",  "hymba-1.5b",      8,  4, "tiny"),
+    ("float-op",      "phi4-mini-3.8b",  4,  2, "tiny"),
+    ("image-small",   "yi-6b",          32,  8, "scaled"),
+    ("image-large",   "yi-6b",         128,  8, "scaled"),
+    ("video-proc",    "chatglm3-6b",   256, 16, "scaled"),
+]
+
+
+def build_factory(scale: str = "tiny") -> Callable:
+    cache: Dict[str, tuple] = {}
+
+    def factory(arch_key: str):
+        if arch_key not in cache:
+            cfg = get_config(arch_key)
+            cfg = tiny_config(cfg) if scale == "tiny" else \
+                scaled_config(cfg)
+            params = model.init_params(jax.random.PRNGKey(0), cfg)
+            cache[arch_key] = (cfg, params)
+        cfg, params = cache[arch_key]
+        return cfg, jax.tree.map(lambda x: x.copy(), params)
+
+    return factory
+
+
+def shared_loader_for(factory):
+    def loader(base_id):
+        cfg, params = factory(base_id)
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        return {_path_str(p): np.asarray(v) for p, v in flat
+                if _path_str(p) in SHARED_PATHS}
+    return loader
+
+
+#: §3.5: the "runtime binary" analogue — the embedding table is the
+#: shared read-only base across instances of one model
+SHARED_PATHS = {"embed"}
+
+
+def make_engine(spool: str, scale: str = "tiny", wake_mode: str = "reap",
+                share: bool = False):
+    shutil.rmtree(spool, ignore_errors=True)
+    os.makedirs(spool, exist_ok=True)
+    factory = build_factory(scale)
+    mgr = InstanceManager(
+        ManagerConfig(spool_dir=spool, wake_mode=wake_mode,
+                      share_base_weights=share),
+        factory, shared_loader=shared_loader_for(factory) if share else None)
+    return ServingEngine(mgr), mgr
+
+
+def request_for(cfg, iid, sid, prompt_len, new_tokens, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    if cfg.frontend.kind == "vision":
+        kw.setdefault("embeds", np.ones(
+            (cfg.frontend.num_embeddings, cfg.frontend.embed_dim),
+            np.float32))
+    if cfg.is_encoder_decoder:
+        kw.setdefault("frames", np.ones((8, cfg.frontend.embed_dim),
+                                        np.float32))
+    return Request(iid, sid, prompt, max_new_tokens=new_tokens, **kw)
+
+
+@dataclass
+class Table:
+    title: str
+    columns: List[str]
+    rows: List[List] = field(default_factory=list)
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def render(self) -> str:
+        w = [max(len(str(c)), *(len(str(r[i])) for r in self.rows))
+             if self.rows else len(str(c))
+             for i, c in enumerate(self.columns)]
+        out = [f"## {self.title}"]
+        out.append(" | ".join(str(c).ljust(w[i])
+                              for i, c in enumerate(self.columns)))
+        out.append("-|-".join("-" * x for x in w))
+        for r in self.rows:
+            out.append(" | ".join(str(c).ljust(w[i])
+                                  for i, c in enumerate(r)))
+        return "\n".join(out)
+
+    def to_dict(self):
+        return {"title": self.title, "columns": self.columns,
+                "rows": self.rows}
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.1f}"
+
+
+def fmt_mb(b: float) -> str:
+    return f"{b / 2**20:.2f}"

@@ -1,0 +1,58 @@
+"""Deployment density: how many tenants fit a fixed memory budget.
+
+Co-deployment of Hibernate + Woken containers vs Warm-only (the paper's
+overall-system conclusion).  We pack instances until the budget is hit
+under three policies:
+  warm-only        — every tenant stays inflated (the baseline platform)
+  hibernate-all    — deflate after each request
+  woken-mix        — REAP-wake with woken residency (working set only)
+"""
+from __future__ import annotations
+
+from benchmarks.common import Table, fmt_mb, make_engine, request_for
+from repro.core.metrics import memory_report
+
+ARCH = "llama3.2-3b"
+BUDGET = 256 << 20          # 256 MB of "device" memory
+
+
+def packed_instances(policy: str, spool: str) -> int:
+    eng, mgr = make_engine(f"{spool}/{policy}", "tiny", "reap", share=True)
+    count = 0
+    while count < 200:
+        iid = f"i{count}"
+        inst = eng.start_instance(iid, ARCH, shared_paths={"embed"})
+        eng.handle(request_for(inst.cfg, iid, "s", 8, 4,
+                               close_session=True))
+        if policy != "warm-only":
+            eng.record_sample(iid, request_for(inst.cfg, iid, "p", 8, 4,
+                                               close_session=True))
+            mgr.deflate(iid)
+            if policy == "woken-mix":
+                # woken residency: wake with the working set resident
+                mgr.predictive_wake(iid)
+        total = sum(memory_report(i, mgr.shared).pss_total
+                    for i in mgr.instances.values())
+        if total > BUDGET:
+            mgr.evict(iid)
+            break
+        count += 1
+    return count
+
+
+def main(quick: bool = False):
+    tab = Table(f"Density: tenants within {BUDGET >> 20} MB ({ARCH})",
+                ["policy", "instances", "x vs warm-only"])
+    base = packed_instances("warm-only", "/tmp/bench_density")
+    rows = [("warm-only", base)]
+    for pol in (["hibernate-all"] if quick
+                else ["hibernate-all", "woken-mix"]):
+        rows.append((pol, packed_instances(pol, "/tmp/bench_density")))
+    for pol, n in rows:
+        tab.add(pol, n, f"{n / max(base, 1):.1f}x")
+    print(tab.render())
+    return tab, [("density", rows[1][1] > rows[0][1])]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Fig. 6 reproduction: request response latency per container state.
+
+Per workload, measure end-to-end request latency for:
+  cold        — cold start + first request (init + compile + process)
+  warm        — request on a Warm Container
+  hib-pf      — first request on a Hibernate Container, page-fault swap-in
+  hib-reap    — first request on a Hibernate Container, REAP batch swap-in
+  woken       — request on a Woken-up Container
+
+Expected orderings (the paper's claims): warm ~ woken < hib-reap <=
+hib-pf << cold (REAP may lose to page-fault only for tiny working sets —
+the paper's image-processing-2.6MB exception).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (WORKLOADS, Table, fmt_ms, make_engine,
+                               request_for)
+
+
+def run_workload(name, arch, plen, ntok, scale, spool="/tmp/bench_lat"):
+    res = {}
+
+    # --- cold: fresh manager; includes init + first-compile + process
+    eng, mgr = make_engine(f"{spool}/{name}/cold", scale, "reap")
+    t0 = time.monotonic()
+    inst = eng.start_instance("i", arch)
+    r = eng.handle(request_for(inst.cfg, "i", "cold", plen, ntok,
+                               close_session=True))
+    res["cold"] = time.monotonic() - t0
+
+    # --- warm
+    r = eng.handle(request_for(inst.cfg, "i", "warm", plen, ntok,
+                               close_session=True))
+    res["warm"] = r.spans["e2e"]
+
+    # --- record the REAP working set with a sample request (§3.4.2)
+    eng.record_sample("i", request_for(inst.cfg, "i", "probe", plen, ntok,
+                                       close_session=True))
+
+    # --- hibernate + page-fault wake
+    mgr.cfg.wake_mode = "pagefault"
+    mgr.deflate("i")
+    r = eng.handle(request_for(inst.cfg, "i", "pf", plen, ntok,
+                               close_session=True))
+    res["hib-pf"] = r.spans["e2e"]
+    res["pf-faults"] = r.faults
+    res["pf-bytes"] = r.faulted_bytes
+
+    # --- hibernate + REAP wake
+    mgr.cfg.wake_mode = "reap"
+    mgr.deflate("i")
+    r = eng.handle(request_for(inst.cfg, "i", "reap", plen, ntok,
+                               close_session=True))
+    res["hib-reap"] = r.spans["e2e"]
+    res["reap-bytes"] = r.prefetched_bytes
+    res["reap-faults"] = r.faults
+
+    # --- woken
+    r = eng.handle(request_for(inst.cfg, "i", "wk", plen, ntok,
+                               close_session=True))
+    res["woken"] = r.spans["e2e"]
+    return res
+
+
+def main(quick: bool = False):
+    tab = Table("Fig.6: request latency per state (ms)",
+                ["workload", "arch", "cold", "warm", "hib-pf", "hib-reap",
+                 "woken", "reap/cold", "pf faults"])
+    checks = []
+    wls = WORKLOADS[:4] if quick else WORKLOADS
+    for name, arch, plen, ntok, scale in wls:
+        r = run_workload(name, arch, plen, ntok, scale)
+        tab.add(name, arch, fmt_ms(r["cold"]), fmt_ms(r["warm"]),
+                fmt_ms(r["hib-pf"]), fmt_ms(r["hib-reap"]),
+                fmt_ms(r["woken"]), f"{r['hib-reap'] / r['cold']:.0%}",
+                r["pf-faults"])
+        checks.append((name,
+                       r["hib-reap"] < r["cold"],
+                       r["hib-pf"] < r["cold"],
+                       r["woken"] < 2.5 * r["warm"]))
+    print(tab.render())
+    print("\nclaims: hib<cold(reap) hib<cold(pf) woken~warm")
+    for c in checks:
+        print(f"  {c[0]:14s} {c[1]} {c[2]} {c[3]}")
+    return tab, checks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Fig. 7 reproduction: memory (PSS) per container state, 10 instances.
+
+The paper collects pmap PSS for 10 co-running instances per benchmark in
+Warm / Hibernate / Woken states, with the Quark runtime binary shared
+(here: the shared base-weight registry).  Claims: Hibernate ~ 7-25% of
+Warm; Woken 28-90% of Warm.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (WORKLOADS, Table, fmt_mb, make_engine,
+                               request_for)
+from repro.core.metrics import memory_report
+
+N_INSTANCES = 10
+
+
+def run_workload(name, arch, plen, ntok, scale, spool="/tmp/bench_mem"):
+    eng, mgr = make_engine(f"{spool}/{name}", scale, "reap", share=True)
+    insts = []
+    for i in range(N_INSTANCES):
+        iid = f"i{i}"
+        inst = eng.start_instance(iid, arch,
+                                  shared_paths={"embed"})
+        eng.handle(request_for(inst.cfg, iid, "s", plen, ntok,
+                               close_session=True))
+        # record working set so deflation splits reap/swap like production
+        eng.record_sample(iid, request_for(inst.cfg, iid, "probe", plen,
+                                           ntok, close_session=True))
+        insts.append(inst)
+
+    def pss_total():
+        return sum(memory_report(i, mgr.shared).pss_total for i in insts)
+
+    warm = pss_total()
+    for i in range(N_INSTANCES):
+        mgr.deflate(f"i{i}")
+    hib = pss_total()
+    for i in range(N_INSTANCES):
+        inst = insts[i]
+        eng.handle(request_for(inst.cfg, f"i{i}", "s2", plen, ntok,
+                               close_session=True))
+    woken = pss_total()
+    return {"warm": warm, "hib": hib, "woken": woken}
+
+
+def main(quick: bool = False):
+    tab = Table(f"Fig.7: PSS memory per state ({N_INSTANCES} instances, MB)",
+                ["workload", "arch", "warm", "hibernate", "woken",
+                 "hib/warm", "woken/warm"])
+    checks = []
+    wls = WORKLOADS[:4] if quick else WORKLOADS
+    for name, arch, plen, ntok, scale in wls:
+        r = run_workload(name, arch, plen, ntok, scale)
+        hw, ww = r["hib"] / r["warm"], r["woken"] / r["warm"]
+        tab.add(name, arch, fmt_mb(r["warm"]), fmt_mb(r["hib"]),
+                fmt_mb(r["woken"]), f"{hw:.0%}", f"{ww:.0%}")
+        checks.append((name, hw < 0.5, ww <= 1.0))
+    print(tab.render())
+    print("\nclaims: hib<<warm woken<=warm")
+    for c in checks:
+        print(f"  {c[0]:14s} {c[1]} {c[2]}")
+    return tab, checks
+
+
+if __name__ == "__main__":
+    main()

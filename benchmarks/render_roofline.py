@@ -1,0 +1,78 @@
+"""Render EXPERIMENTS.md-style roofline tables from dry-run JSONL files.
+
+  PYTHONPATH=src python -m benchmarks.render_roofline dryrun_single.jsonl
+  PYTHONPATH=src python -m benchmarks.render_roofline --compare \
+      dryrun_single.jsonl dryrun_single_opt.jsonl
+
+``--compare`` prints per-pair dominant-term ratios (baseline/optimized) —
+the §Perf summary table is generated this way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(fn):
+    out = {}
+    for line in open(fn):
+        r = json.loads(line)
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def dominant(r):
+    return max(r.get("compute_s", 0), r.get("memory_s", 0),
+               r.get("collective_s", 0))
+
+
+def render(fn):
+    rows = load(fn)
+    print(f"\n### {fn}\n")
+    print("| arch | shape | GiB/dev | compute_s | memory_s | coll_s "
+          "| bottleneck | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s), r in rows.items():
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | — | — | — | — | {r['status']} | — |")
+            continue
+        gb = (r.get("bytes_per_device") or 0) / 2**30
+        print(f"| {a} | {s} | {gb:.2f} | {r['compute_s']:.4f} "
+              f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+              f"| {r['bottleneck']} | {r['useful_flops_frac']:.2f} |")
+
+
+def compare(base_fn, opt_fn):
+    base, opt = load(base_fn), load(opt_fn)
+    print(f"\n### dominant-term ratio: {base_fn} -> {opt_fn}\n")
+    print("| arch | shape | baseline dom. | optimized dom. | gain |")
+    print("|---|---|---|---|---|")
+    for key in sorted(base):
+        b, o = base[key], opt.get(key)
+        if b["status"] != "ok" or o is None or o["status"] != "ok":
+            continue
+        db, do = dominant(b), dominant(o)
+        if do <= 0:
+            continue
+        print(f"| {key[0]} | {key[1]} | {db:.3f} s ({b['bottleneck']}) "
+              f"| {do:.3f} s ({o['bottleneck']}) | {db / do:.2f}x |")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--compare", action="store_true")
+    args = ap.parse_args(argv)
+    if args.compare:
+        if len(args.files) != 2:
+            ap.error("--compare needs exactly 2 files")
+        compare(*args.files)
+    else:
+        for fn in args.files:
+            render(fn)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

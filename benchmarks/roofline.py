@@ -1,0 +1,67 @@
+"""Roofline table from the dry-run JSONL artifacts (launch/dryrun.py).
+
+Reads dryrun_single.jsonl / dryrun_multi.jsonl if present and renders the
+per-(arch x shape x mesh) three-term roofline with bottleneck + useful-
+FLOPs fraction.  Run `python -m repro.launch.dryrun --all --out ...` to
+regenerate (it needs the 512-placeholder-device env and so cannot run
+inside this process).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Table
+
+FILES = [("single", "dryrun_single.jsonl"), ("multi", "dryrun_multi.jsonl"),
+         ("single-opt", "dryrun_single_opt.jsonl"),
+         ("multi-opt", "dryrun_multi_opt.jsonl")]
+
+
+def load_rows(root="."):
+    rows = []
+    for tag, fn in FILES:
+        path = os.path.join(root, fn)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                r["mesh"] = tag
+                rows.append(r)
+    return rows
+
+
+def main(quick: bool = False):
+    rows = load_rows()
+    tab = Table("Roofline per (arch x shape x mesh)",
+                ["arch", "shape", "mesh", "GiB/dev", "compute_ms",
+                 "memory_ms", "coll_ms", "bottleneck", "useful"])
+    checks = []
+    n_ok = 0
+    for r in rows:
+        if r.get("status") == "skipped":
+            tab.add(r["arch"], r["shape"], r["mesh"], "-", "-", "-", "-",
+                    "skipped by design", "-")
+            continue
+        if r.get("status") != "ok":
+            tab.add(r["arch"], r["shape"], r["mesh"], "-", "-", "-", "-",
+                    "ERROR", "-")
+            checks.append((f"{r['arch']}x{r['shape']}x{r['mesh']}", False))
+            continue
+        n_ok += 1
+        gb = (r.get("bytes_per_device") or 0) / 2**30
+        tab.add(r["arch"], r["shape"], r["mesh"], f"{gb:.2f}",
+                f"{r['compute_s'] * 1e3:.2f}",
+                f"{r['memory_s'] * 1e3:.2f}",
+                f"{r['collective_s'] * 1e3:.2f}",
+                r["bottleneck"], f"{r['useful_flops_frac']:.2f}")
+    print(tab.render())
+    if not rows:
+        print("  (no dryrun_*.jsonl found — run repro.launch.dryrun --all)")
+    checks.append(("dryrun cases ok", n_ok >= 39 * 2 or (n_ok and not rows)))
+    return tab, checks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  latency_states   — Fig. 6 (request latency per container state)
+  memory_states    — Fig. 7 (PSS per state, 10 instances, sharing on)
+  density          — deployment-density conclusion
+  swap_throughput  — §3.4 random-vs-sequential storage asymmetry
+  sharing          — §3.5 runtime-binary (base-weight) sharing
+  allocator        — §3.3 bitmap allocator vs free-list baseline
+  roofline         — brief: per-(arch x shape x mesh) roofline table
+
+`python -m benchmarks.run [--quick] [--only NAME]`
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="bench_results.json")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (allocator, density, latency_states,
+                            memory_states, reap_ablation, roofline,
+                            sharing, swap_throughput)
+    suites = [
+        ("allocator", allocator),
+        ("swap_throughput", swap_throughput),
+        ("latency_states", latency_states),
+        ("memory_states", memory_states),
+        ("density", density),
+        ("sharing", sharing),
+        ("reap_ablation", reap_ablation),
+        ("roofline", roofline),
+    ]
+    results = {}
+    all_checks = []
+    for name, mod in suites:
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.monotonic()
+        tab, checks = mod.main(quick=args.quick)
+        dt = time.monotonic() - t0
+        print(f"({name}: {dt:.1f}s)")
+        results[name] = {"table": tab.to_dict(),
+                         "checks": [(c[0], bool(all(c[1:]))) for c in checks],
+                         "seconds": dt}
+        all_checks += [(name, c[0], bool(all(c[1:]))) for c in checks]
+
+    print("\n===== claim checks =====")
+    n_bad = 0
+    for suite, claim, ok in all_checks:
+        print(f"  [{'PASS' if ok else 'FAIL'}] {suite}: {claim}")
+        n_bad += (not ok)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\n{len(all_checks) - n_bad}/{len(all_checks)} claim checks pass"
+          f" -> {args.out}")
+    return 0 if n_bad == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Long-context serving demo: the two sub-quadratic long_500k paths,
+scaled to CPU (1,024-token context, reduced models).
+
+  1. dense + sliding window — ring-buffered KV cache of `window` slots:
+     memory is O(window), not O(context); logits equal full windowed
+     attention (verified inline).
+  2. SSM (mamba2) — O(1) state decode: cache size is context-independent.
+
+This is the design that makes the assigned long_500k shape feasible:
+524,288-token decode costs a 4,096-slot cache on dense archs and a fixed
+(heads x state x head_dim) state on SSM archs (EXPERIMENTS.md §Roofline,
+long_500k rows).
+
+Run:  PYTHONPATH=src python examples/long_context.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, tiny_config
+from repro.models import model
+
+CTX = 1024
+WINDOW = 64
+
+
+def dense_ring():
+    cfg = tiny_config(get_config("llama3.2-3b"))
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, CTX),
+                              0, cfg.vocab_size)
+
+    # ring decode: cache holds WINDOW slots regardless of context length
+    t0 = time.monotonic()
+    _, cache = model.prefill(params, cfg, toks[:, :1], max_len=WINDOW,
+                             window=WINDOW)
+    step = jax.jit(lambda p, t, c: model.decode_step(p, cfg, t, c,
+                                                     window=WINDOW))
+    logits = None
+    for t in range(1, CTX):
+        logits, cache = step(params, toks[:, t], cache)
+    dt = time.monotonic() - t0
+
+    cache_bytes = sum(np.asarray(v).nbytes
+                      for v in jax.tree.leaves(cache["layers"]))
+    # reference: full-sequence forward with the same window
+    x, _, _ = model.forward_hidden(params, cfg, toks, window=WINDOW)
+    ref = model.unembed(params, cfg, x[:, -1])
+    err = float(jnp.max(jnp.abs(logits - ref)))
+    full_bytes = cache_bytes * CTX // WINDOW
+    print(f"dense+SWA : {CTX} tokens, ring cache {cache_bytes >> 10} KB "
+          f"(full cache would be ~{full_bytes >> 10} KB), "
+          f"max|logit delta| vs windowed reference = {err:.2e}, "
+          f"{CTX / dt:.0f} tok/s")
+
+
+def ssm_state():
+    cfg = tiny_config(get_config("mamba2-130m"))
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, CTX),
+                              0, cfg.vocab_size)
+    t0 = time.monotonic()
+    _, cache = model.prefill(params, cfg, toks[:, :1], max_len=1)
+    step = jax.jit(lambda p, t, c: model.decode_step(p, cfg, t, c))
+    for t in range(1, CTX):
+        logits, cache = step(params, toks[:, t], cache)
+    dt = time.monotonic() - t0
+    state_bytes = sum(np.asarray(v).nbytes
+                      for v in jax.tree.leaves(cache["layers"]))
+    # the state is the whole cache: context-independent
+    print(f"mamba2 SSD: {CTX} tokens, state cache {state_bytes >> 10} KB "
+          f"(identical at 524k tokens), {CTX / dt:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    dense_ring()
+    ssm_state()

@@ -1,0 +1,78 @@
+"""Beyond-paper demo: COW KV prefix sharing on the refcounted allocator.
+
+The paper refcounts pages for process clone/COW (§3.3).  The LLM analogue:
+N sessions sharing a long system prompt hold ONE physical copy of its KV
+pages.  This example measures pool usage and per-session PSS with and
+without forking, and shows hibernation handles shared pages correctly.
+
+Run:  PYTHONPATH=src python examples/prefix_sharing.py
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, tiny_config
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.models import model
+from repro.serving import Request, ServingEngine
+
+SPOOL = "/tmp/repro_prefix"
+N_SESSIONS = 6
+SYS_PROMPT = list(range(1, 49))      # 48-token shared system prompt
+
+
+def main():
+    shutil.rmtree(SPOOL, ignore_errors=True)
+
+    def factory(arch):
+        cfg = tiny_config(get_config(arch))
+        return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
+
+    mgr = InstanceManager(ManagerConfig(spool_dir=SPOOL), factory)
+    eng = ServingEngine(mgr)
+    inst = eng.start_instance("i0", "llama3.2-3b")
+    pool = mgr.pool
+
+    # --- baseline: every session prefills the system prompt privately
+    for j in range(N_SESSIONS):
+        eng.handle(Request("i0", f"private{j}",
+                           np.asarray(SYS_PROMPT, np.int32),
+                           max_new_tokens=1))
+    private_bytes = pool.rss_bytes("i0")
+    print(f"private prefills: {N_SESSIONS} sessions -> "
+          f"{private_bytes >> 10} KB of KV pages")
+    for j in range(N_SESSIONS):
+        inst.kv.close_session(f"private{j}")
+    inst.kv.trim()
+
+    # --- COW: prefill once, fork the page table N-1 times
+    eng.handle(Request("i0", "base", np.asarray(SYS_PROMPT, np.int32),
+                       max_new_tokens=1))
+    for j in range(1, N_SESSIONS):
+        inst.kv.fork_session("base", f"fork{j}")
+    shared_bytes = pool.rss_bytes("i0")
+    print(f"COW forks:        {N_SESSIONS} sessions -> "
+          f"{shared_bytes >> 10} KB of KV pages "
+          f"({shared_bytes / private_bytes:.0%} of private)")
+
+    # forks diverge independently
+    r1 = eng.handle(Request("i0", "fork1", np.asarray([99], np.int32),
+                            max_new_tokens=3))
+    r2 = eng.handle(Request("i0", "fork2", np.asarray([7], np.int32),
+                            max_new_tokens=3))
+    print(f"fork1 continues -> {r1.tokens}; fork2 -> {r2.tokens}")
+
+    # hibernation round-trips shared pages through the swap files once
+    eng.record_sample("i0", Request("i0", "probe", np.asarray([3], np.int32),
+                                    max_new_tokens=1, close_session=True))
+    st = mgr.deflate("i0")
+    print(f"deflated: {st.kv_pages_swapped} kv pages swapped "
+          f"({(st.reap_bytes + st.swap_bytes) >> 10} KB)")
+    r = eng.handle(Request("i0", "fork1", np.asarray([5], np.int32),
+                           max_new_tokens=2))
+    print(f"woken, fork1 -> {r.tokens} (faults={r.faults})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Quickstart: one tenant through the full container lifecycle.
+
+  cold start -> warm request -> REAP record -> hibernate -> request-driven
+  wake -> woken request -> evict
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--arch llama3.2-3b]
+"""
+import argparse
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, tiny_config
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.core.metrics import memory_report
+from repro.models import model
+from repro.serving import Request, ServingEngine
+
+SPOOL = "/tmp/repro_quickstart"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", choices=ARCH_IDS)
+    args = ap.parse_args()
+
+    shutil.rmtree(SPOOL, ignore_errors=True)
+
+    def factory(arch):
+        cfg = tiny_config(get_config(arch))
+        return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
+
+    mgr = InstanceManager(ManagerConfig(spool_dir=SPOOL, wake_mode="reap"),
+                          factory)
+    eng = ServingEngine(mgr)
+
+    def req(sid, toks, n=6, **kw):
+        cfg = mgr.instances["tenant0"].cfg
+        if cfg.frontend.kind == "vision":
+            kw.setdefault("embeds", np.ones(
+                (cfg.frontend.num_embeddings, cfg.frontend.embed_dim),
+                np.float32))
+        if cfg.is_encoder_decoder:
+            kw.setdefault("frames",
+                          np.ones((8, cfg.frontend.embed_dim), np.float32))
+        return Request("tenant0", sid, np.asarray(toks, np.int32),
+                       max_new_tokens=n, **kw)
+
+    def report(stage):
+        inst = mgr.instances["tenant0"]
+        print(f"  [{stage:9s}] state={inst.state.value:10s} "
+              f"weights={inst.weight_bytes() >> 10:6d} KB "
+              f"kv={inst.kv_bytes() >> 10:4d} KB")
+
+    print(f"== quickstart: {args.arch} (reduced config) ==")
+    inst = eng.start_instance("tenant0", args.arch)
+    report("cold")
+
+    r = eng.handle(req("chat", [1, 2, 3, 4]))
+    print(f"  warm request -> tokens {r.tokens} "
+          f"({r.spans['e2e'] * 1e3:.0f} ms)")
+    report("warm")
+
+    # §3.4.2: record the working set with a sample request
+    ws = eng.record_sample("tenant0", req("probe", [5, 6], n=3,
+                                          close_session=True))
+    print(f"  REAP recorded {len(ws)} working-set units")
+
+    # ④ SIGSTOP: deflate
+    st = mgr.deflate("tenant0")
+    print(f"  deflated: reap={st.reap_bytes >> 10} KB "
+          f"swap={st.swap_bytes >> 10} KB "
+          f"kv_pages={st.kv_pages_swapped} in {st.seconds * 1e3:.0f} ms")
+    report("hibernate")
+
+    # ⑦ request wakes it; the chat session continues where it left off
+    r = eng.handle(req("chat", [9, 8]))
+    print(f"  wake request -> tokens {r.tokens} "
+          f"({r.spans['e2e'] * 1e3:.0f} ms, prefetched "
+          f"{r.prefetched_bytes >> 10} KB, {r.faults} faults)")
+    report("woken")
+
+    rep = memory_report(inst)
+    print(f"  PSS total: {rep.pss_total / 2**20:.2f} MB")
+    mgr.evict("tenant0")
+    print("  evicted; swap files deleted.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Hibernate Container reproduced as a JAX/TPU serving framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,9 @@
+from repro.configs.base import (ARCH_IDS, FrontendConfig, MLAConfig,
+                                MoEConfig, ModelConfig, SSMConfig,
+                                get_config, list_archs, scaled_config,
+                                tiny_config)
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+__all__ = ["ARCH_IDS", "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+           "FrontendConfig", "get_config", "list_archs", "tiny_config",
+           "scaled_config", "SHAPES", "InputShape", "get_shape"]

@@ -1,0 +1,22 @@
+"""arctic-480b — 128-expert top-2 MoE + parallel dense residual MLP.
+
+[hf:Snowflake/snowflake-arctic-base] — dense-MoE hybrid: every block has a
+dense FFN residual in parallel with the routed MoE (d_ff=4864 for both).
+"""
+from repro.configs.base import MoEConfig, ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="arctic-480b", family="moe",
+        citation="hf:Snowflake/snowflake-arctic-base",
+        num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=4864, vocab_size=32000,
+        attention="gqa",
+        moe=MoEConfig(num_experts=128, top_k=2, num_shared_experts=0,
+                      expert_d_ff=4864, dense_residual=True,
+                      capacity_factor=1.25),
+        activation="swiglu", norm="rmsnorm", rope_theta=10_000.0,
+        long_context_mode="sliding_window",
+        tp=8, sp=2,
+    )

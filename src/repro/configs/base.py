@@ -1,0 +1,286 @@
+"""Configuration system for the repro framework.
+
+A single :class:`ModelConfig` dataclass covers every assigned architecture
+family (dense / MoE / MLA / SSM / hybrid / enc-dec / VLM / audio).  Each
+architecture lives in its own ``configs/<arch>.py`` module exposing
+``make_config() -> ModelConfig`` with the exact assigned hyper-parameters and
+a source citation.  ``get_config(arch_id)`` resolves through the registry and
+``tiny_config(cfg)`` derives the reduced smoke-test variant (2 layers,
+d_model <= 512, <= 4 experts) mandated for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration."""
+
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0          # DeepSeek-style always-on experts
+    expert_d_ff: int = 0                 # per-expert FFN hidden size
+    dense_residual: bool = False         # Arctic: dense FFN in parallel w/ MoE
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01        # load-balance loss
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention configuration."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 SSD (state-space duality) configuration."""
+
+    state_dim: int = 128                 # N: per-head state size
+    head_dim: int = 64                   # P: channels per SSD head
+    expand: int = 2                      # d_inner = expand * d_model
+    chunk_size: int = 256                # SSD chunk length
+    conv_width: int = 4                  # depthwise conv kernel
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB (vision patches / audio frames).
+
+    Per the brief, only the transformer backbone is implemented; the frontend
+    supplies precomputed embeddings of the right shape via ``input_specs``.
+    """
+
+    kind: str = "none"                   # "vision" | "audio" | "none"
+    num_embeddings: int = 0              # patches per image / encoder frames
+    embed_dim: int = 0                   # pre-projection embedding dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                          # dense | moe | ssm | hybrid | vlm | audio
+    citation: str
+
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # attention flavour
+    attention: str = "gqa"               # gqa | mla | none
+    rope_theta: float = 10_000.0
+    rope_mode: str = "full"              # full | 2d (chatglm partial rotary) | none
+    max_position: int = 1 << 20
+
+    # long-context handling: "full" archs skip long_500k unless a
+    # sliding-window variant is enabled (DESIGN.md §5).
+    long_context_mode: str = "sliding_window"   # sliding_window | native | skip
+    sliding_window: int = 4096
+
+    activation: str = "swiglu"           # swiglu | gelu
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+
+    # enc-dec (whisper): decoder uses the top-level fields; encoder below.
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_max_len: int = 0
+
+    # hybrid (hymba): parallel attention + SSD heads inside one block
+    hybrid_parallel_ssm: bool = False
+
+    # distribution: refinement of the production "model" axis (DESIGN.md §4)
+    tp: int = 1                          # tensor-parallel degree (divides heads)
+    sp: int = 1                          # sequence/context-parallel degree
+
+    # serving
+    kv_page_size: int = 16               # tokens per KV page
+
+    def __post_init__(self):
+        if self.attention == "gqa" and self.num_heads and self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived quantities -------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so it shards over the mesh
+        (e.g. hymba's 32001).  Logical vocab stays ``vocab_size``."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return (self.ssm.expand * self.d_model) if self.ssm else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm.head_dim if self.ssm else 0
+
+    def kv_token_bytes(self, bytes_per_el: int = 2) -> int:
+        """KV-cache bytes per token (per layer): what one pool page stores."""
+        if self.attention == "mla":
+            per = self.mla.kv_lora_rank + self.mla.qk_rope_head_dim
+        elif self.attention == "none":
+            per = 0
+        else:
+            per = 2 * self.num_kv_heads * self.head_dim
+        return per * bytes_per_el
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.attention == "mla":
+            m = self.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            attn = (d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * self.num_heads
+                    * (m.qk_nope_head_dim + m.v_head_dim)
+                    + self.num_heads * m.v_head_dim * d)
+        elif self.attention == "none":
+            attn = 0
+        else:
+            attn = (d * self.num_heads * self.head_dim
+                    + 2 * d * self.num_kv_heads * self.head_dim
+                    + self.num_heads * self.head_dim * d)
+        n_mats = 3 if self.activation == "swiglu" else 2
+        mlp = n_mats * d * f if f else 0
+        if self.moe:
+            mo = self.moe
+            expert = n_mats * d * mo.expert_d_ff
+            mlp = (mo.num_experts + mo.num_shared_experts) * expert
+            mlp += d * mo.num_experts                       # router
+            if mo.dense_residual:
+                mlp += n_mats * d * self.d_ff
+        ssm = 0
+        if self.ssm:
+            di, s = self.d_inner, self.ssm
+            ssm = (d * (2 * di + 2 * self.ssm_heads * s.state_dim + self.ssm_heads)
+                   + di * d + s.conv_width * di)
+        per_layer = attn + mlp + ssm
+        enc = 0
+        if self.is_encoder_decoder:
+            enc = self.encoder_layers * (attn + n_mats * d * f) + per_layer * 0
+            per_layer += attn + self.num_heads * self.head_dim * d  # cross-attn
+        return emb + L * per_layer + enc
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed experts only)."""
+        if not self.moe:
+            return self.param_count()
+        mo = self.moe
+        n_mats = 3 if self.activation == "swiglu" else 2
+        expert = n_mats * self.d_model * mo.expert_d_ff
+        inactive = (mo.num_experts - mo.top_k) * expert
+        return self.param_count() - self.num_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "llava-next-34b",
+    "phi4-mini-3.8b",
+    "deepseek-v2-236b",
+    "yi-6b",
+    "chatglm3-6b",
+    "llama3.2-3b",
+    "arctic-480b",
+    "hymba-1.5b",
+    "mamba2-130m",
+    "whisper-large-v3",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    cfg = mod.make_config()
+    assert cfg.arch_id == arch_id, (cfg.arch_id, arch_id)
+    return cfg
+
+
+def list_archs() -> tuple:
+    return ARCH_IDS
+
+
+def tiny_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts."""
+    d = min(cfg.d_model, 256)
+    heads = min(cfg.num_heads, 4)
+    kv = max(1, min(cfg.num_kv_heads, 2))
+    heads = (heads // kv) * kv or kv
+    updates = dict(
+        num_layers=2, d_model=d, num_heads=heads, num_kv_heads=kv,
+        head_dim=d // max(heads, 1),
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        max_position=2_048, sliding_window=64, kv_page_size=8,
+        tp=1, sp=1, dtype="float32",
+    )
+    if cfg.moe:
+        # capacity_factor 4.0: no token dropping at smoke-test batch sizes,
+        # so decode-vs-full consistency is exact (GShard dropping makes
+        # outputs depend on co-batched tokens otherwise)
+        updates["moe"] = replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            expert_d_ff=128, capacity_factor=4.0)
+    if cfg.mla:
+        updates["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=64,
+                                   qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                   v_head_dim=32)
+        updates["head_dim"] = 0
+    if cfg.ssm:
+        updates["ssm"] = replace(cfg.ssm, state_dim=16, head_dim=32,
+                                 chunk_size=32)
+    if cfg.frontend.kind != "none":
+        updates["frontend"] = replace(cfg.frontend, num_embeddings=8,
+                                      embed_dim=64)
+    if cfg.is_encoder_decoder:
+        updates["encoder_layers"] = 2
+        updates["encoder_max_len"] = 64
+    return replace(cfg, **updates)
+
+
+def scaled_config(cfg: ModelConfig, d_model: int = 512, layers: int = 4) -> ModelConfig:
+    """Mid-size variant for benchmarks (bigger than tiny, CPU-runnable)."""
+    t = tiny_config(cfg)
+    heads = max(4, min(cfg.num_heads, 8))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    heads = (heads // kv) * kv or kv
+    return replace(t, num_layers=layers, d_model=d_model, num_heads=heads,
+                   num_kv_heads=kv, head_dim=d_model // heads,
+                   d_ff=2 * d_model, vocab_size=min(cfg.vocab_size, 2048))

@@ -1,0 +1,15 @@
+"""chatglm3-6b — dense decoder, 2d (partial) RoPE, GQA kv=2. [arXiv:2406.12793]"""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="chatglm3-6b", family="dense",
+        citation="arXiv:2406.12793",
+        num_layers=28, d_model=4096, num_heads=32, num_kv_heads=2,
+        d_ff=13696, vocab_size=65024,
+        attention="gqa", activation="swiglu", norm="rmsnorm",
+        rope_mode="2d", rope_theta=10_000.0,
+        long_context_mode="sliding_window",
+        tp=2, sp=8,
+    )

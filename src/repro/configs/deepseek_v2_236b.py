@@ -1,0 +1,28 @@
+"""deepseek-v2-236b — MoE with Multi-head Latent Attention. [arXiv:2405.04434]
+
+MLA kv_lora_rank=512; 2 shared + 160 routed experts, top-6; per-expert
+d_ff=1536 (the assigned d_ff is the expert hidden size). 128 q-heads share
+the compressed KV latent, so TP=16 is head-divisible.
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="deepseek-v2-236b", family="moe",
+        citation="arXiv:2405.04434",
+        num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+        d_ff=1536, vocab_size=102400,
+        attention="mla",
+        mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(num_experts=160, top_k=6, num_shared_experts=2,
+                      expert_d_ff=1536, capacity_factor=1.25),
+        activation="swiglu", norm="rmsnorm", rope_theta=10_000.0,
+        long_context_mode="sliding_window",
+        # tp=8 (128 q-heads / 8), sp=2: the 32k latent cache (60L x 32k x 576)
+        # is 2.26 GB/sequence — sequence-sharding over sp=2 keeps decode_32k
+        # under the 16 GB v5e HBM budget (see EXPERIMENTS.md §Dry-run).
+        tp=8, sp=2,
+    )

@@ -1,0 +1,24 @@
+"""llava-next-34b — VLM backbone (Yi-34B-style decoder) with anyres tiling.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf] (anyres tiling scheme; 34B variant
+backbone dims per assignment: 60L, d_model=7168, 56 heads, GQA kv=8,
+d_ff=20480, vocab=64000). Vision frontend (CLIP ViT-L/14-336 + projector)
+is a STUB per the brief: input_specs supplies patch embeddings.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="llava-next-34b", family="vlm",
+        citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+        num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=20480, vocab_size=64000,
+        attention="gqa", activation="swiglu", norm="rmsnorm",
+        rope_theta=5_000_000.0,
+        # anyres: up to 4 tiles + base image, 576 patches each, CLIP-L dim 1024
+        frontend=FrontendConfig(kind="vision", num_embeddings=2880,
+                                embed_dim=1024),
+        long_context_mode="sliding_window",
+        tp=8, sp=2,
+    )

@@ -1,0 +1,21 @@
+"""mamba2-130m — attention-free SSD (state-space duality). [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="mamba2-130m", family="ssm",
+        citation="arXiv:2405.21060",
+        num_layers=24, d_model=768, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=50280,
+        attention="none", rope_mode="none",
+        ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk_size=256),
+        activation="swiglu", norm="rmsnorm", tie_embeddings=True,
+        long_context_mode="native",
+        # 130M params replicate trivially; the in_proj output mixes z|x|B|C|dt
+        # semantics so d_inner tensor-parallelism would cut across semantic
+        # split points (2*768 + 2*768 + 256 + 24 = 3352 is not 16-divisible).
+        # The model axis instead joins batch parallelism where the batch
+        # allows (launch/sharding.py) — the right call at this model size.
+        tp=1, sp=16,
+    )

@@ -1,0 +1,15 @@
+"""phi4-mini-3.8b — dense decoder, RoPE + SwiGLU + GQA. [arXiv:2412.08905]"""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="phi4-mini-3.8b", family="dense",
+        citation="arXiv:2412.08905",
+        num_layers=32, d_model=3072, num_heads=24, num_kv_heads=8,
+        d_ff=8192, vocab_size=200064,
+        attention="gqa", activation="swiglu", norm="rmsnorm",
+        rope_theta=10_000.0, tie_embeddings=True,
+        long_context_mode="sliding_window",
+        tp=8, sp=2,
+    )

@@ -1,0 +1,26 @@
+"""whisper-large-v3 — encoder-decoder; conv/mel frontend is a STUB.
+
+[arXiv:2212.04356] — 32 encoder + 32 decoder layers, d_model=1280, 20 MHA
+heads, d_ff=5120, vocab=51866, GELU + LayerNorm, learned positions (no RoPE).
+input_specs supplies precomputed 1500-frame encoder embeddings.  decode_32k
+extends the decoder position table beyond the native 448 (deviation noted in
+DESIGN.md §5); long_500k is skipped for this family.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="whisper-large-v3", family="audio",
+        citation="arXiv:2212.04356",
+        num_layers=32, d_model=1280, num_heads=20, num_kv_heads=20,
+        d_ff=5120, vocab_size=51866,
+        attention="gqa", activation="gelu", norm="layernorm",
+        rope_mode="none",
+        is_encoder_decoder=True, encoder_layers=32, encoder_max_len=1500,
+        max_position=40_000,     # learned positions; covers decode_32k (+pad)
+        frontend=FrontendConfig(kind="audio", num_embeddings=1500,
+                                embed_dim=1280),
+        long_context_mode="skip",
+        tp=4, sp=4,
+    )

@@ -1,0 +1,15 @@
+"""yi-6b — llama-architecture dense decoder with GQA kv=4. [arXiv:2403.04652]"""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="yi-6b", family="dense",
+        citation="arXiv:2403.04652",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=4,
+        d_ff=11008, vocab_size=64000,
+        attention="gqa", activation="swiglu", norm="rmsnorm",
+        rope_theta=5_000_000.0,
+        long_context_mode="sliding_window",
+        tp=4, sp=4,
+    )

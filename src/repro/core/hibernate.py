@@ -1,0 +1,133 @@
+"""HibernationManager — the 4-step deflation of §3.2 and both inflate paths.
+
+Deflate (Warm/Woken -> Hibernate):
+  1. *Pause*: SIGSTOP transition; the engine stops scheduling the instance
+     (its compiled executables — the "blocked runtime threads" — stay alive).
+  2. *Reclaim freed memory*: trim KV-cache slack pages back to the shared
+     pool (the Bitmap allocator returns fully-free blocks to the host).
+  3. *Swap out committed memory*: weight units + live KV pages.  Working-set
+     units (from the REAP recorder) go to the REAP file with one batched
+     sequential write; the rest go to the page-fault swap file.
+  4. *Clean file-backed mmap*: shared base-weight leaves are decref'd in the
+     registry (dropped at zero; re-read from the checkpoint on demand).
+
+Wake:
+  * ``mode="reap"``      — one batched sequential read restores the working
+                           set; everything else page-faults later.
+  * ``mode="pagefault"`` — nothing restored upfront; each unit is a random
+                           read on first access.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.instance import ModelInstance
+from repro.core.state import ContainerState, Event
+
+
+@dataclass
+class DeflateStats:
+    reap_bytes: int = 0
+    swap_bytes: int = 0
+    kv_pages_swapped: int = 0
+    kv_pages_reclaimed: int = 0
+    shared_bytes_released: int = 0
+    seconds: float = 0.0
+
+
+@dataclass
+class WakeStats:
+    mode: str = "reap"
+    prefetched_bytes: int = 0
+    faulted_bytes: int = 0
+    faults: int = 0
+    seconds: float = 0.0
+
+
+class HibernationManager:
+    def __init__(self, shared_registry=None):
+        self.shared_registry = shared_registry      # manager's weight registry
+        self.log: List[Tuple[str, str, object]] = []
+
+    # ------------------------------------------------------------- deflate
+    def deflate(self, inst: ModelInstance) -> DeflateStats:
+        t0 = time.monotonic()
+        st = DeflateStats()
+
+        # step 1: pause (SIGSTOP).  Raises if a request is in flight.
+        inst.sm.fire(Event.SIGSTOP)
+
+        # step 2: reclaim freed memory — trim KV slack back to the pool
+        if inst.kv is not None:
+            st.kv_pages_reclaimed = inst.kv.trim()
+
+        # step 3: swap out committed memory (weights + live KV pages)
+        ws = inst.recorder.working_set
+        w_reap, w_swap = inst.collect_weight_items(ws)
+        kv_reap, kv_swap, n_pages = ([], [], 0)
+        if inst.kv is not None:
+            kv_reap, kv_swap = inst.kv.export_items(ws)
+            n_pages = len(kv_reap) + len(kv_swap)
+        # unconditional: an empty working set must CLEAR the REAP file,
+        # or a later wake would prefetch a previous cycle's stale extents
+        inst.reap_file.write_batch(w_reap + kv_reap)
+        inst.swap_file.write_units(w_swap + kv_swap)
+        inst.drop_weights()
+        if inst.kv is not None:
+            inst.kv.drop_pages()
+        st.reap_bytes = sum(a.nbytes for _, a in w_reap + kv_reap)
+        st.swap_bytes = sum(a.nbytes for _, a in w_swap + kv_swap)
+        st.kv_pages_swapped = n_pages
+
+        # step 4: clean up file-backed (shared) memory
+        if self.shared_registry is not None and inst.base_id:
+            st.shared_bytes_released = self.shared_registry.release(
+                inst.base_id)
+
+        st.seconds = time.monotonic() - t0
+        self.log.append(("deflate", inst.instance_id, st))
+        return st
+
+    # ------------------------------------------------------------- wake
+    def wake(self, inst: ModelInstance, mode: str = "reap",
+             trigger: str = "request") -> WakeStats:
+        """Inflate.  ``trigger="sigcont"`` is the predictive control-plane
+        wake (⑤); ``trigger="request"`` is the request-driven wake (⑦) —
+        the state transition to HIBERNATE_RUNNING is fired by the engine."""
+        t0 = time.monotonic()
+        st = WakeStats(mode=mode)
+
+        # re-acquire shared base weights (file-backed: from checkpoint)
+        if self.shared_registry is not None and inst.base_id:
+            self.shared_registry.acquire(inst.base_id, inst)
+
+        if mode == "reap" and inst.reap_file.extents:
+            # ONE batched sequential read (preadv), dispatched to weights + KV
+            data = inst.reap_file.read_batch()
+            st.prefetched_bytes += inst.apply_prefetch(data)
+            if inst.kv is not None:
+                st.prefetched_bytes += inst.kv.apply_prefetch(data)
+        # pagefault mode restores nothing here; units fault in on access
+
+        if trigger == "sigcont":
+            inst.sm.fire(Event.SIGCONT)
+        st.seconds = time.monotonic() - t0
+        self.log.append(("wake", inst.instance_id, st))
+        return st
+
+    # ------------------------------------------------------------- faults
+    def fault(self, inst: ModelInstance, keys) -> WakeStats:
+        """Page-fault path: random reads for weight and KV unit keys."""
+        t0 = time.monotonic()
+        st = WakeStats(mode="pagefault")
+        wkeys = [k for k in keys if k and k[0] == "w"]
+        kvkeys = [k for k in keys if k and k[0] in ("kv", "kvh")]
+        st.faulted_bytes += inst.fault_in(wkeys)
+        if kvkeys and inst.kv is not None:
+            st.faulted_bytes += inst.kv.fault_in(
+                kvkeys, inst.swap_file, inst.reap_file)
+        st.faults = len(wkeys) + len(kvkeys)
+        st.seconds = time.monotonic() - t0
+        return st

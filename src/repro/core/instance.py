@@ -1,0 +1,274 @@
+"""ModelInstance: one tenant's fully-initialized model — the "container".
+
+Holds the weight leaves (host-simulated HBM), the per-instance KV cache (in
+the shared page pool), the compiled-function cache (the "host OS objects"
+that hibernation keeps alive), swap files and the REAP recorder.
+
+Weight *resource units* are the swappable granularity:
+  * ordinary leaves -> one unit each;
+  * MoE expert tensors (leading E axis) -> one unit per expert — so REAP can
+    prefetch only the experts a workload actually routes to;
+  * the embedding table -> row blocks of ``EMBED_BLOCK`` — only rows of
+    tokens actually seen are in the working set.
+
+Shared base weights (§3.5 "file-backed mmap") are *not* swapped: they are
+refcounted in the manager's registry, dropped at refcount zero and re-read
+from the checkpoint on demand.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+import jax
+
+from repro.core.reap import ReapRecorder
+from repro.core.state import ContainerState, Event, StateMachine
+from repro.core.swap import ReapFile, SwapFile
+
+EMBED_BLOCK = 4096          # embedding rows per swappable unit
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclass
+class WeightUnit:
+    key: Tuple                       # ("w", path, sub)
+    path: str
+    sub: int                         # -1 whole leaf; else expert/block index
+    nbytes: int
+
+
+class ModelInstance:
+    def __init__(self, instance_id: str, cfg, params, *, pool,
+                 spool_dir: str, shared_paths: Optional[Set[str]] = None,
+                 base_id: Optional[str] = None):
+        self.instance_id = instance_id
+        self.cfg = cfg
+        self.base_id = base_id
+        self.pool = pool
+        self.sm = StateMachine()
+        self.recorder = ReapRecorder()
+        self.compiled: Dict[Hashable, object] = {}     # kept across hibernation
+        self.kv = None                                  # PagedKVCache, set by engine
+        self.shared_paths: Set[str] = set(shared_paths or ())
+
+        # host-simulated HBM weight leaves, keyed by path
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        self.treedef = jax.tree_util.tree_structure(params)
+        self.paths: List[str] = [_path_str(p) for p, _ in flat]
+        self.weights: Dict[str, np.ndarray] = {
+            _path_str(p): np.array(v) for p, v in flat}   # writable copies
+
+        # embedding rows per swappable unit: small vocabularies still get
+        # >=4 blocks so REAP can keep untouched rows swapped out
+        vocab_rows = self.weights["embed"].shape[0] \
+            if "embed" in self.weights else EMBED_BLOCK
+        self.embed_block = min(EMBED_BLOCK, max(64, vocab_rows // 4))
+
+        self.units: Dict[Tuple, WeightUnit] = {}
+        self._build_catalog()
+        self.resident: Set[Tuple] = set(self.units)   # all resident at start
+
+        self.swap_file = SwapFile(f"{spool_dir}/{instance_id}.swap")
+        self.reap_file = ReapFile(f"{spool_dir}/{instance_id}.reap")
+        self.fault_log: List[Tuple[float, Tuple]] = []
+        self.created_at = time.monotonic()
+        self.last_used = self.created_at
+
+    # ------------------------------------------------------------------ catalog
+    def _is_expert_leaf(self, path: str, arr: np.ndarray) -> bool:
+        moe = self.cfg.moe
+        return (moe is not None and "/moe/" in path and arr.ndim >= 3
+                and path.rsplit("/", 1)[-1] in ("w_gate", "w_up", "w_down")
+                and arr.shape[-3] == moe.num_experts)
+
+    def _build_catalog(self) -> None:
+        for path, arr in self.weights.items():
+            if self._is_expert_leaf(path, arr):
+                per = arr.nbytes // arr.shape[-3]
+                for e in range(arr.shape[-3]):
+                    k = ("w", path, e)
+                    self.units[k] = WeightUnit(k, path, e, per)
+            elif path == "embed" and arr.shape[0] > self.embed_block:
+                nblk = -(-arr.shape[0] // self.embed_block)
+                per = arr.nbytes // arr.shape[0] * self.embed_block
+                for b in range(nblk):
+                    k = ("w", path, b)
+                    self.units[k] = WeightUnit(k, path, b, per)
+            else:
+                k = ("w", path, -1)
+                self.units[k] = WeightUnit(k, path, -1, arr.nbytes)
+
+    def _get_unit(self, u: WeightUnit) -> np.ndarray:
+        arr = self.weights[u.path]
+        if u.sub < 0:
+            return arr
+        if u.path == "embed":
+            eb = self.embed_block
+            return arr[u.sub * eb:(u.sub + 1) * eb]
+        # expert slice: leading-dims-agnostic (layers may be stacked first)
+        return arr[..., u.sub, :, :] if arr.ndim > 3 else arr[u.sub]
+
+    def _set_unit(self, u: WeightUnit, val: np.ndarray) -> None:
+        arr = self.weights[u.path]
+        if u.sub < 0:
+            self.weights[u.path] = np.asarray(val).reshape(arr.shape)
+        elif u.path == "embed":
+            eb = self.embed_block
+            arr[u.sub * eb:(u.sub + 1) * eb] = val
+        elif arr.ndim > 3:
+            arr[..., u.sub, :, :] = val
+        else:
+            arr[u.sub] = val
+
+    def _zero_unit(self, u: WeightUnit) -> None:
+        if u.sub < 0:
+            self.weights[u.path] = np.zeros_like(self.weights[u.path])
+        else:
+            self._set_unit(u, np.zeros_like(self._get_unit(u)))
+
+    # ------------------------------------------------------------------ params
+    def params_pytree(self):
+        """Rebuild the params pytree for jitted calls."""
+        leaves = [self.weights[p] for p in self.paths]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # ------------------------------------------------------------------ swap
+    def swappable_units(self) -> List[WeightUnit]:
+        """Anonymous (non-shared) weight units (§3.5)."""
+        return [u for u in self.units.values()
+                if u.path not in self.shared_paths]
+
+    def collect_weight_items(self, working_set: Optional[frozenset] = None):
+        """Partition resident anonymous units into (reap, swap) item lists."""
+        ws = working_set or frozenset()
+        reap_items, swap_items = [], []
+        for u in self.swappable_units():
+            if u.key not in self.resident:
+                continue
+            data = np.ascontiguousarray(self._get_unit(u))
+            (reap_items if u.key in ws else swap_items).append((u.key, data))
+        return reap_items, swap_items
+
+    def drop_weights(self) -> int:
+        """Zero every swappable resident unit (post swap-out madvise)."""
+        n = 0
+        for u in self.swappable_units():
+            if u.key in self.resident:
+                self._zero_unit(u)
+                self.resident.discard(u.key)
+                n += u.nbytes
+        return n
+
+    def swap_out_weights(self, working_set: Optional[frozenset] = None
+                         ) -> Dict[str, int]:
+        """Write resident anonymous units to disk, then drop them.
+
+        Working-set units go to the REAP file (batch sequential write);
+        everything else goes to the page-fault swap file.
+        """
+        reap_items, swap_items = self.collect_weight_items(working_set)
+        if reap_items:
+            self.reap_file.write_batch(reap_items)
+        self.swap_file.write_units(swap_items)
+        self.drop_weights()
+        return {"reap_bytes": sum(a.nbytes for _, a in reap_items),
+                "swap_bytes": sum(a.nbytes for _, a in swap_items)}
+
+    def prefetch_reap(self) -> int:
+        """Batch-sequential swap-in of the recorded working set."""
+        if not self.reap_file.extents:
+            return 0
+        return self.apply_prefetch(self.reap_file.read_batch())
+
+    def apply_prefetch(self, data: Dict[Hashable, np.ndarray]) -> int:
+        """Install weight units from a batch read (KV keys are skipped —
+        :meth:`PagedKVCache.apply_prefetch` owns those)."""
+        n = 0
+        for key, arr in data.items():
+            if key[0] != "w":
+                continue
+            self._set_unit(self.units[key], arr)
+            self.resident.add(key)
+            n += arr.nbytes
+        return n
+
+    def fault_in(self, keys: Sequence[Tuple]) -> int:
+        """Page-fault swap-in: one random read per unit."""
+        n = 0
+        for key in keys:
+            if key in self.resident:
+                continue
+            u = self.units[key]
+            if key in self.swap_file:
+                arr = self.swap_file.read_unit(key)
+            elif key in self.reap_file.extents:
+                # unit was in the REAP file but prefetch didn't run (pagefault
+                # mode wake) — still a random read
+                arr = self.reap_file.read_unit(key)
+            else:
+                raise KeyError(f"unit {key} neither resident nor swapped")
+            self._set_unit(u, arr)
+            self.resident.add(key)
+            self.fault_log.append((time.monotonic(), key))
+            n += u.nbytes
+        return n
+
+    def ensure_all_resident(self) -> int:
+        return self.fault_in([k for k in self.units
+                              if k not in self.resident
+                              and self.units[k].path not in self.shared_paths])
+
+    def nonresident_keys(self) -> List[Tuple]:
+        return [k for k in self.units if k not in self.resident]
+
+    # ------------------------------------------------------------------ memory
+    def weight_bytes(self, resident_only: bool = True,
+                     include_shared: bool = True) -> int:
+        tot = 0
+        for k, u in self.units.items():
+            if u.path in self.shared_paths:
+                continue
+            if not resident_only or k in self.resident:
+                tot += u.nbytes
+        if include_shared:
+            tot += self.shared_weight_bytes()
+        return tot
+
+    def shared_weight_bytes(self) -> int:
+        return sum(self.weights[p].nbytes for p in self.shared_paths
+                   if p in self.weights)
+
+    def kv_bytes(self) -> int:
+        n = self.pool.rss_bytes(self.instance_id) if self.pool else 0
+        if self.kv is not None:
+            n += self.kv.host_bytes()
+        return n
+
+    def metadata_bytes(self) -> int:
+        """The kept-alive 'host OS objects': page tables, compiled-fn
+        handles, state machine — small by design."""
+        return 1 << 16
+
+    def terminate(self) -> None:
+        self.swap_file.delete()
+        self.reap_file.delete()
+        if self.pool is not None:
+            self.pool.free_owner(self.instance_id)
+
+    @property
+    def state(self) -> ContainerState:
+        return self.sm.state

@@ -1,0 +1,156 @@
+"""Multi-tenant InstanceManager: the "Serverless Platform" control plane.
+
+Implements the platform-side behaviours of the paper:
+  * cold start (①): init/load weights + compile — the expensive path;
+  * keep-alive with *deflate-instead-of-evict* under memory pressure;
+  * predictive wake (⑤) and request-driven wake (⑦);
+  * shared base-weight registry (§3.5): refcounted "file-backed" leaves,
+    re-read from the checkpoint at refcount 0->1.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.hibernate import HibernationManager
+from repro.core.instance import ModelInstance
+from repro.core.pool import PagePool
+from repro.core.state import ContainerState, Event
+
+
+class SharedWeightsRegistry:
+    """Refcounted shared base weights (the runtime-binary mmap analogue).
+
+    ``loader(base_id) -> {path: np.ndarray}`` plays the role of the backing
+    file: dropping the weights at refcount zero costs nothing to write
+    (file-backed pages are clean) but re-acquiring re-reads the checkpoint.
+    """
+
+    def __init__(self, loader: Callable[[str], Dict[str, np.ndarray]]):
+        self.loader = loader
+        self._weights: Dict[str, Dict[str, np.ndarray]] = {}
+        self._refs: Dict[str, int] = {}
+        self.reload_count = 0
+
+    def acquire(self, base_id: str, inst: Optional[ModelInstance] = None
+                ) -> Dict[str, np.ndarray]:
+        if base_id not in self._weights:
+            self._weights[base_id] = self.loader(base_id)
+            self.reload_count += 1
+        self._refs[base_id] = self._refs.get(base_id, 0) + 1
+        w = self._weights[base_id]
+        if inst is not None:
+            for path, arr in w.items():
+                inst.weights[path] = arr        # share the same buffers
+        return w
+
+    def release(self, base_id: str) -> int:
+        """Decref; drop at zero.  Returns bytes released (0 if still shared)."""
+        self._refs[base_id] -= 1
+        if self._refs[base_id] > 0:
+            return 0
+        w = self._weights.pop(base_id, {})
+        return sum(a.nbytes for a in w.values())
+
+    def refcount(self, base_id: str) -> int:
+        return self._refs.get(base_id, 0)
+
+    def is_loaded(self, base_id: str) -> bool:
+        return base_id in self._weights
+
+
+@dataclass
+class ManagerConfig:
+    spool_dir: str = "/tmp/repro_spool"
+    pool_capacity_pages: int = 1 << 15
+    pool_page_elems: int = 16384
+    keep_alive_s: float = 600.0          # warm keep-alive window
+    memory_limit_bytes: Optional[int] = None
+    share_base_weights: bool = True      # §3.5 policy knob
+    wake_mode: str = "reap"              # "reap" | "pagefault"
+
+
+class InstanceManager:
+    def __init__(self, cfg: ManagerConfig,
+                 factory: Callable[[str], tuple],
+                 shared_loader: Optional[Callable] = None):
+        """``factory(arch_key) -> (model_cfg, params_pytree)`` builds a cold
+        instance (init or checkpoint load) — the expensive cold-start work."""
+        self.cfg = cfg
+        self.factory = factory
+        self.pool = PagePool(cfg.pool_page_elems, np.float32,
+                             cfg.pool_capacity_pages)
+        self.shared = (SharedWeightsRegistry(shared_loader)
+                       if (shared_loader and cfg.share_base_weights) else None)
+        self.hib = HibernationManager(self.shared)
+        self.instances: Dict[str, ModelInstance] = {}
+        self.events: List[tuple] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def cold_start(self, instance_id: str, arch_key: str,
+                   shared_paths=None) -> ModelInstance:
+        model_cfg, params = self.factory(arch_key)
+        inst = ModelInstance(
+            instance_id, model_cfg, params, pool=self.pool,
+            spool_dir=self.cfg.spool_dir,
+            shared_paths=shared_paths if self.shared else None,
+            base_id=arch_key if self.shared else None)
+        if self.shared and inst.base_id and inst.shared_paths:
+            self.shared.acquire(inst.base_id, inst)
+        inst.sm.fire(Event.COLD_START)
+        self.instances[instance_id] = inst
+        self.events.append((time.monotonic(), "cold_start", instance_id))
+        return inst
+
+    def deflate(self, instance_id: str):
+        return self.hib.deflate(self.instances[instance_id])
+
+    def predictive_wake(self, instance_id: str):
+        """⑤ control-plane wake in anticipation of a request."""
+        inst = self.instances[instance_id]
+        return self.hib.wake(inst, mode=self.cfg.wake_mode, trigger="sigcont")
+
+    def evict(self, instance_id: str) -> None:
+        inst = self.instances.pop(instance_id)
+        if self.shared and inst.base_id and inst.shared_paths and \
+                inst.state not in (ContainerState.HIBERNATE,):
+            self.shared.release(inst.base_id)
+        inst.sm.fire(Event.EVICT)
+        inst.terminate()                       # swap files deleted (§3.4)
+        self.events.append((time.monotonic(), "evict", instance_id))
+
+    # ------------------------------------------------------------- policy
+    def resident_bytes(self) -> int:
+        tot = 0
+        seen_shared = set()
+        for inst in self.instances.values():
+            tot += inst.weight_bytes(resident_only=True, include_shared=False)
+            tot += inst.pool.rss_bytes(inst.instance_id)
+            if self.shared and inst.base_id and \
+                    inst.base_id not in seen_shared and \
+                    self.shared.is_loaded(inst.base_id) and inst.shared_paths:
+                tot += inst.shared_weight_bytes()
+                seen_shared.add(inst.base_id)
+        return tot
+
+    def handle_memory_pressure(self, target_bytes: int) -> List[str]:
+        """Deflate idle warm/woken instances (LRU) instead of evicting —
+        the paper's density mechanism.  Returns the ids deflated."""
+        deflated = []
+        idle = sorted(
+            (i for i in self.instances.values()
+             if i.state in (ContainerState.WARM, ContainerState.WOKEN)),
+            key=lambda i: i.last_used)
+        for inst in idle:
+            if self.resident_bytes() <= target_bytes:
+                break
+            self.hib.deflate(inst)
+            deflated.append(inst.instance_id)
+        self.events.append((time.monotonic(), "pressure", tuple(deflated)))
+        return deflated
+
+    def states(self) -> Dict[str, str]:
+        return {k: v.state.value for k, v in self.instances.items()}

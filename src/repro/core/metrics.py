@@ -1,0 +1,74 @@
+"""Memory accounting (PSS analogue of the paper's `pmap` methodology) and
+latency tracing for the per-state benchmarks (Figs. 6/7)."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class MemoryReport:
+    instance_id: str
+    state: str
+    weight_private: int          # resident anonymous weight bytes
+    weight_shared_pss: float     # shared base weights / num sharers
+    kv_rss: int                  # pool pages held (RSS)
+    kv_pss: float                # pool pages / refcount (prefix sharing)
+    metadata: int                # kept-alive host objects
+
+    @property
+    def pss_total(self) -> float:
+        return (self.weight_private + self.weight_shared_pss
+                + self.kv_pss + self.metadata)
+
+    @property
+    def rss_total(self) -> float:
+        return (self.weight_private + self.weight_shared_pss
+                + self.kv_rss + self.metadata)
+
+
+def memory_report(inst, shared_registry=None) -> MemoryReport:
+    nshare = 1
+    shared_bytes = inst.shared_weight_bytes()
+    if shared_registry is not None and inst.base_id:
+        nshare = max(1, shared_registry.refcount(inst.base_id))
+        if not shared_registry.is_loaded(inst.base_id):
+            shared_bytes = 0
+    return MemoryReport(
+        instance_id=inst.instance_id,
+        state=inst.state.value,
+        weight_private=inst.weight_bytes(resident_only=True,
+                                         include_shared=False),
+        weight_shared_pss=shared_bytes / nshare,
+        kv_rss=inst.kv_bytes(),
+        kv_pss=(inst.pool.pss_bytes(inst.instance_id) if inst.pool else 0)
+        + (inst.kv.host_bytes() if inst.kv is not None else 0),
+        metadata=inst.metadata_bytes(),
+    )
+
+
+class LatencyTrace:
+    """Named wall-clock spans, e.g. cold_start / prefill / decode / wake."""
+
+    def __init__(self):
+        self.spans: Dict[str, List[float]] = {}
+
+    @contextmanager
+    def span(self, name: str):
+        t0 = time.monotonic()
+        try:
+            yield
+        finally:
+            self.spans.setdefault(name, []).append(time.monotonic() - t0)
+
+    def total(self, name: str) -> float:
+        return sum(self.spans.get(name, ()))
+
+    def mean(self, name: str) -> Optional[float]:
+        xs = self.spans.get(name)
+        return sum(xs) / len(xs) if xs else None
+
+    def summary(self) -> Dict[str, float]:
+        return {k: sum(v) / len(v) for k, v in self.spans.items()}

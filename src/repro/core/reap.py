@@ -1,0 +1,53 @@
+"""REAP: record-and-prefetch working sets (§3.4.2).
+
+The recorder captures which *resource units* a sample request actually
+touches.  For an LLM instance the unit keys are:
+
+  ``("w", path, sub)``   weight unit (whole leaf, or an expert / embed-block
+                         slice — DESIGN.md §2's MoE/embedding insight)
+  ``("kv", layer, page)`` a KV-cache pool page
+
+The recorded set becomes the REAP file's scatter io-vector: on wake-up it
+is prefetched with one batched sequential read; everything else stays
+swapped until page-faulted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import FrozenSet, Hashable, Set
+
+
+@dataclass
+class ReapRecorder:
+    recording: bool = False
+    seen: Set[Hashable] = field(default_factory=set)
+    #: survives across record sessions — the stable working set (REAP's
+    #: observation: the set is stable across invocations of one function)
+    stable: Set[Hashable] = field(default_factory=set)
+
+    def start(self) -> None:
+        self.recording = True
+        self.seen = set()
+
+    def record(self, key: Hashable) -> None:
+        if self.recording:
+            self.seen.add(key)
+
+    def record_many(self, keys) -> None:
+        if self.recording:
+            self.seen.update(keys)
+
+    def stop(self) -> FrozenSet[Hashable]:
+        self.recording = False
+        # union: pages touched by any recorded invocation are kept (stable
+        # working set across invocations per REAP)
+        self.stable |= self.seen
+        return frozenset(self.stable)
+
+    @property
+    def working_set(self) -> FrozenSet[Hashable]:
+        return frozenset(self.stable)
+
+    def forget(self) -> None:
+        self.stable = set()
+        self.seen = set()

@@ -1,0 +1,92 @@
+"""Container state machine — Figure 3 of the paper, exactly.
+
+States: the three conventional ones (COLD start pseudo-state, WARM, RUNNING)
+plus the paper's three new states (HIBERNATE, HIBERNATE_RUNNING, WOKEN).
+Transitions carry the paper's circled numbers.  Every transition is guarded;
+invalid events raise ``InvalidTransition`` so the property tests can assert
+the machine never leaves the paper's graph.
+"""
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class ContainerState(enum.Enum):
+    COLD = "cold"                        # not yet created / evicted
+    WARM = "warm"                        # fully initialized, idle, inflated
+    RUNNING = "running"                  # processing a request (inflated)
+    HIBERNATE = "hibernate"              # deflated, paused, zero CPU
+    HIBERNATE_RUNNING = "hib_running"    # woken by a request, processing
+    WOKEN = "woken"                      # request finished, partially inflated
+    DEAD = "dead"                        # evicted / terminated
+
+
+class Event(enum.Enum):
+    COLD_START = "cold_start"            # ① platform spawns a new container
+    REQUEST = "request"                  # ②⑥⑦ user request arrives
+    FINISH = "finish"                    # ③⑧ request processing done
+    SIGSTOP = "sigstop"                  # ④⑨ platform deflates
+    SIGCONT = "sigcont"                  # ⑤ predictive wake-up
+    EVICT = "evict"                      # terminate, delete swap files
+
+
+S, E = ContainerState, Event
+
+#: (state, event) -> (next_state, paper transition number)
+TRANSITIONS: Dict[Tuple[ContainerState, Event], Tuple[ContainerState, str]] = {
+    (S.COLD, E.COLD_START):            (S.WARM, "(1)"),
+    (S.WARM, E.REQUEST):               (S.RUNNING, "(2)"),
+    (S.RUNNING, E.FINISH):             (S.WARM, "(3)"),
+    (S.WARM, E.SIGSTOP):               (S.HIBERNATE, "(4)"),
+    (S.HIBERNATE, E.SIGCONT):          (S.WOKEN, "(5)"),
+    (S.WOKEN, E.REQUEST):              (S.HIBERNATE_RUNNING, "(6)"),
+    (S.HIBERNATE, E.REQUEST):          (S.HIBERNATE_RUNNING, "(7)"),
+    (S.HIBERNATE_RUNNING, E.FINISH):   (S.WOKEN, "(8)"),
+    (S.WOKEN, E.SIGSTOP):              (S.HIBERNATE, "(9)"),
+    # eviction is legal from any idle state
+    (S.WARM, E.EVICT):                 (S.DEAD, "evict"),
+    (S.HIBERNATE, E.EVICT):            (S.DEAD, "evict"),
+    (S.WOKEN, E.EVICT):                (S.DEAD, "evict"),
+}
+
+#: states in which the instance holds *no* device memory for app state
+DEFLATED_STATES = frozenset({S.HIBERNATE})
+#: states in which the instance consumes zero scheduler slots ("zero CPU")
+PAUSED_STATES = frozenset({S.HIBERNATE, S.DEAD})
+#: states from which a request can be served without a cold start
+SERVABLE_STATES = frozenset({S.WARM, S.HIBERNATE, S.WOKEN})
+
+
+class InvalidTransition(RuntimeError):
+    pass
+
+
+@dataclass
+class StateMachine:
+    state: ContainerState = ContainerState.COLD
+    history: List[Tuple[float, ContainerState, Event, ContainerState, str]] = \
+        field(default_factory=list)
+    hooks: Dict[Event, List[Callable]] = field(default_factory=dict)
+
+    def can(self, event: Event) -> bool:
+        return (self.state, event) in TRANSITIONS
+
+    def fire(self, event: Event, clock: Optional[Callable[[], float]] = None
+             ) -> ContainerState:
+        key = (self.state, event)
+        if key not in TRANSITIONS:
+            raise InvalidTransition(
+                f"event {event.value!r} invalid in state {self.state.value!r}")
+        new, tag = TRANSITIONS[key]
+        t = (clock or time.monotonic)()
+        self.history.append((t, self.state, event, new, tag))
+        self.state = new
+        for fn in self.hooks.get(event, ()):
+            fn(self)
+        return new
+
+    def on(self, event: Event, fn: Callable) -> None:
+        self.hooks.setdefault(event, []).append(fn)

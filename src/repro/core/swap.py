@@ -1,0 +1,132 @@
+"""Per-sandbox swap files (§3.4, Fig. 5).
+
+Each instance owns two files, never shared between sandboxes (security,
+§3.4) and deleted at termination:
+
+  * :class:`SwapFile` — the page-fault file.  Units are written individually
+    (hash-table of offsets, like the Swapping Mgr's de-dup table) and read
+    back **one ``pread`` at a time** — the random-read path.
+  * :class:`ReapFile` — the REAP file.  The recorded working set is written
+    with one contiguous ``pwritev``-style write and read back with a single
+    sequential ``preadv``-style read over the saved scatter io-vectors.
+
+Real file descriptors and real disk IO: the benchmarks measure the actual
+random-vs-sequential asymmetry of this host's storage.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class _Extent:
+    offset: int
+    nbytes: int
+    dtype: str
+    shape: Tuple[int, ...]
+
+
+class _FileBase:
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.fd = os.open(path, os.O_RDWR | os.O_CREAT | os.O_TRUNC, 0o600)
+        self.extents: Dict[Hashable, _Extent] = {}
+        self._append_at = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.reads = 0
+        self.writes = 0
+
+    def delete(self) -> None:
+        """Sandbox termination: close and unlink (§3.4)."""
+        if self.fd is not None:
+            os.close(self.fd)
+            self.fd = None
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+        self.extents.clear()
+
+    def __contains__(self, key) -> bool:
+        return key in self.extents
+
+    @property
+    def file_bytes(self) -> int:
+        return self._append_at
+
+
+class SwapFile(_FileBase):
+    """Page-fault swap file: per-unit writes, random per-unit reads."""
+
+    def write_unit(self, key: Hashable, arr: np.ndarray) -> None:
+        arr = np.ascontiguousarray(arr)
+        buf = arr.tobytes()
+        ext = self.extents.get(key)
+        if ext is None or ext.nbytes < len(buf):
+            ext = _Extent(self._append_at, len(buf), str(arr.dtype), arr.shape)
+            self._append_at += len(buf)
+        else:
+            ext = _Extent(ext.offset, len(buf), str(arr.dtype), arr.shape)
+        os.pwrite(self.fd, buf, ext.offset)
+        self.extents[key] = ext
+        self.bytes_written += len(buf)
+        self.writes += 1
+
+    def write_units(self, items: Sequence[Tuple[Hashable, np.ndarray]]) -> None:
+        for k, a in items:
+            self.write_unit(k, a)
+
+    def read_unit(self, key: Hashable) -> np.ndarray:
+        """One random read — the page-fault swap-in path."""
+        ext = self.extents[key]
+        buf = os.pread(self.fd, ext.nbytes, ext.offset)
+        self.bytes_read += ext.nbytes
+        self.reads += 1
+        return np.frombuffer(buf, ext.dtype).reshape(ext.shape).copy()
+
+
+class ReapFile(_FileBase):
+    """REAP file: one batch-sequential write, one batch-sequential read."""
+
+    def write_batch(self, items: Sequence[Tuple[Hashable, np.ndarray]]) -> None:
+        """pwritev analogue: the scatter io-vectors are concatenated and
+        written with a single contiguous write starting at offset 0."""
+        self.extents.clear()
+        bufs: List[bytes] = []
+        off = 0
+        for key, arr in items:
+            arr = np.ascontiguousarray(arr)
+            b = arr.tobytes()
+            self.extents[key] = _Extent(off, len(b), str(arr.dtype), arr.shape)
+            bufs.append(b)
+            off += len(b)
+        blob = b"".join(bufs)
+        os.pwrite(self.fd, blob, 0)
+        self._append_at = len(blob)
+        self.bytes_written += len(blob)
+        self.writes += 1
+
+    def read_unit(self, key: Hashable) -> np.ndarray:
+        """Random single-extent read (pagefault-mode access to a REAP file)."""
+        ext = self.extents[key]
+        buf = os.pread(self.fd, ext.nbytes, ext.offset)
+        self.bytes_read += ext.nbytes
+        self.reads += 1
+        return np.frombuffer(buf, ext.dtype).reshape(ext.shape).copy()
+
+    def read_batch(self) -> Dict[Hashable, np.ndarray]:
+        """preadv analogue: one sequential read of the whole extent."""
+        blob = os.pread(self.fd, self._append_at, 0)
+        self.bytes_read += len(blob)
+        self.reads += 1
+        mv = memoryview(blob)                 # zero-copy scatter
+        out = {}
+        for key, ext in self.extents.items():
+            out[key] = np.frombuffer(
+                mv[ext.offset:ext.offset + ext.nbytes],
+                ext.dtype).reshape(ext.shape)
+        return out

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for page gather/scatter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(pool, idx, axis=0)
+
+
+def scatter_pages(pool: jax.Array, idx: jax.Array,
+                  buf: jax.Array) -> jax.Array:
+    return pool.at[idx].set(buf)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for paged decode attention: gather pages to a dense
+cache, then run the framework's reference ``decode_attention``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           scale=None, window: int = 0):
+    B, H, D = q.shape
+    Hkv, P, T, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+    S = pages_per_seq * T
+    # dense (B, S, Hkv, D) via page gather
+    k_d = k_pages[:, page_table]        # (Hkv, B, pages, T, D)
+    v_d = v_pages[:, page_table]
+    k_d = k_d.transpose(1, 2, 3, 0, 4).reshape(B, S, Hkv, D)
+    v_d = v_d.transpose(1, 2, 3, 0, 4).reshape(B, S, Hkv, D)
+    kv_positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return decode_attention(q, k_d, v_d, kv_positions, lengths,
+                            window=window if window > 0 else None,
+                            scale=scale)

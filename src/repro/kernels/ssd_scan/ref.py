@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: the framework's reference SSD implementation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd(x, dt, A, Bm, Cm, D, *, chunk_size: int, h0=None):
+    """x: (B,S,H,P); dt: (B,S,H); A,D: (H,); Bm,Cm: (B,S,N).
+    Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    return ssd_chunked(x, dt, A, Bm, Cm, D, chunk_size=chunk_size, h0=h0)

@@ -1,0 +1,367 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, regardless of
+trip count — a jax ``lax.scan`` over 60 layers therefore under-reports
+FLOPs/bytes/collectives by ~60x (verified experimentally; see
+EXPERIMENTS.md §Roofline methodology).  This module re-derives the three
+roofline quantities from the *partitioned* HLO text, scaling every
+computation by the product of the known trip counts above it:
+
+  * flops            — from ``dot`` ops (2 * out_elems * contracted dim);
+                       matmuls are >99% of FLOPs in these models
+  * traffic bytes    — fusion-boundary operand/output bytes, with
+                       slice-semantics corrections (a dynamic-slice fusion
+                       reads its slice, not the whole operand; a
+                       dynamic-update-slice writes its update region, not
+                       the whole aliased buffer)
+  * collective bytes — output bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+Trip counts come from the ``backend_config={"known_trip_count":{"n":..}}``
+annotation XLA attaches to loops it has analysed (every jax scan).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*{\s*"n":\s*"?(\d+)"?')
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elems, bytes) over every array in a (possibly tuple) type."""
+    elems = tot = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        tot += n * _DTYPE_BYTES[dt]
+    return elems, tot
+
+
+def _first_shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                     # operand list + attributes (raw)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {
+        k: 0.0 for k in COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k in COLLECTIVES:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n,
+                    {k: v * n for k, v in self.coll.items()})
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        op = parsed
+        cur.ops.append(op)
+        cur.types[op.name] = op.type_str
+    return comps
+
+
+def _parse_op_line(line: str) -> Optional[Op]:
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # result type: balanced (...) tuple (may contain /*index=N*/ comments)
+    # or a single token like bf16[8,3072]{1,0}
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    m2 = _OPCODE_RE.match(rest)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    tail = rest[m2.end():]                  # inside the operand parens
+    depth, i, args = 1, 0, ""
+    while i < len(tail) and depth:
+        ch = tail[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if depth:
+            args += ch
+        i += 1
+    return Op(name, type_str.strip(), opcode, tail,
+              _OPERAND_RE.findall(args))
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "while", "conditional", "call",
+               "custom-call", "partition-id", "replica-id", "rng-state",
+               "opt-barrier", "add-dependency", "domain",
+               # TPU-native-dtype model: XLA:CPU legalises bf16 compute by
+               # materialising f32 converts; the MXU takes bf16 natively,
+               # so converts/copies are not HBM traffic on the target
+               "convert", "copy"}
+_SLICE_LIKE = {"dynamic-slice", "gather", "slice"}
+_DUS_LIKE = {"dynamic-update-slice", "scatter", "select-and-scatter"}
+_PURE_MOVE = {"convert", "bitcast", "copy", "parameter", "tuple",
+              "get-tuple-element", "constant", "broadcast", "reshape",
+              "transpose"}
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, out_dims = _first_shape_dims(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.rest)
+    if not m or not op.operands:
+        return 0.0
+    lhs_type = comp.types.get(op.operands[0], "")
+    _, lhs_dims = _first_shape_dims(lhs_type)
+    k = 1
+    for idx in (int(x) for x in m.group(1).split(",") if x):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _body_opcodes(comp: Computation, comps, seen=None) -> set:
+    seen = seen or set()
+    out = set()
+    for op in comp.ops:
+        out.add(op.opcode)
+        if op.opcode == "fusion":
+            for cal in _CALL_ATTR_RE.findall(op.rest):
+                if cal in comps and cal not in seen:
+                    seen.add(cal)
+                    out |= _body_opcodes(comps[cal], comps, seen)
+    return out
+
+
+def _min_elem_bytes(type_str: str) -> int:
+    """Bytes if every array used its narrowest-seen dtype (>= bf16=2)."""
+    e, _ = shape_elems_bytes(type_str)
+    return e * 2
+
+
+def _is_move_fusion(comp: Computation) -> bool:
+    return all(op.opcode in _PURE_MOVE for op in comp.ops)
+
+
+def _inner_update_bytes(comp: Computation, comps, seen=None) -> Optional[int]:
+    """Bytes of the update operand of a dynamic-update-slice/scatter inside
+    a fused computation (the true in-place write size)."""
+    seen = seen or set()
+    for op in comp.ops:
+        if op.opcode == "dynamic-update-slice" and len(op.operands) >= 2:
+            _, b = shape_elems_bytes(comp.types.get(op.operands[1], ""))
+            if b:
+                return b
+        if op.opcode == "scatter" and len(op.operands) >= 3:
+            _, b = shape_elems_bytes(comp.types.get(op.operands[2], ""))
+            if b:
+                return b
+        if op.opcode == "fusion":
+            for cal in _CALL_ATTR_RE.findall(op.rest):
+                if cal in comps and cal not in seen:
+                    seen.add(cal)
+                    r = _inner_update_bytes(comps[cal], comps, seen)
+                    if r is not None:
+                        return r
+    return None
+
+
+def _operand_bytes(name: str, comp: Computation, comps) -> int:
+    """Operand traffic with the TPU-native-dtype correction: values that
+    are (transitively) converts of narrower tensors count at the source
+    width — the MXU reads bf16 directly, the f32 copy is CPU legalisation."""
+    t = comp.types.get(name, "")
+    _, b = shape_elems_bytes(t)
+    if "f32" in t and b:
+        return min(b, _min_elem_bytes(t)) if _converts_from_narrow(
+            name, comp, comps) else b
+    return b
+
+
+def _converts_from_narrow(name: str, comp: Computation, comps) -> bool:
+    for op in comp.ops:
+        if op.name != name:
+            continue
+        if op.opcode == "convert":
+            return True
+        if op.opcode == "fusion":
+            for cal in _CALL_ATTR_RE.findall(op.rest):
+                c = comps.get(cal)
+                if c is not None and any(o.opcode == "convert"
+                                         for o in c.ops):
+                    return True
+        return False
+    return False
+
+
+def _op_bytes(op: Op, comp: Computation, comps) -> float:
+    _, out_b = shape_elems_bytes(op.type_str)
+    kinds = {op.opcode}
+    called = []
+    if op.opcode == "fusion":
+        for cal in _CALL_ATTR_RE.findall(op.rest):
+            if cal in comps:
+                called.append(comps[cal])
+                kinds |= _body_opcodes(comps[cal], comps)
+        if called and all(_is_move_fusion(c) for c in called):
+            return 0.0              # convert/copy-only fusion: CPU artifact
+    if kinds & _DUS_LIKE:
+        # in-place update: traffic = read + write of the update region
+        for c in called:
+            ub = _inner_update_bytes(c, comps)
+            if ub is not None:
+                return 2.0 * ub
+        if op.opcode in _DUS_LIKE and len(op.operands) >= 2:
+            _, b = shape_elems_bytes(comp.types.get(op.operands[1], ""))
+            if b:
+                return 2.0 * b
+        cand = [shape_elems_bytes(comp.types.get(o, ""))[1]
+                for o in op.operands]
+        cand = [b for b in cand if b > 4]
+        return 2.0 * (min(cand) if cand else out_b)
+    if kinds & _SLICE_LIKE:
+        # a slice fuses into its consumer on TPU: one read of the sliced
+        # region at its narrowest dtype (the f32 width is CPU legalisation)
+        return float(min(out_b, _min_elem_bytes(op.type_str)))
+    tot = out_b
+    for o in op.operands:
+        tot += _operand_bytes(o, comp, comps)
+    return tot
+
+
+def _trip_count(op: Op) -> int:
+    m = _TRIP_RE.search(op.rest)
+    return int(m.group(1)) if m else 1
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._find_entry(text)
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        return m.group(1) if m else next(iter(self.comps), "")
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()          # cycle guard
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return self._memo[comp_name]
+        total = Cost()
+        for op in comp.ops:
+            if op.opcode == "while":
+                trips = _trip_count(op)
+                for cal in _CALL_ATTR_RE.findall(op.rest):
+                    total += self.cost_of(cal).scaled(trips)
+                continue
+            if op.opcode in ("fusion", "call", "conditional", "async-start"):
+                for cal in _CALL_ATTR_RE.findall(op.rest):
+                    sub = self.cost_of(cal)
+                    total.flops += sub.flops        # dots inside fusions
+                    for k in COLLECTIVES:
+                        total.coll[k] += sub.coll[k]
+                total.bytes += _op_bytes(op, comp, self.comps)
+                continue
+            if op.opcode == "dot":
+                total.flops += _dot_flops(op, comp)
+                total.bytes += _op_bytes(op, comp, self.comps)
+                continue
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                _, b = shape_elems_bytes(op.type_str)
+                total.coll[base] += b
+                continue
+            if op.opcode in _SKIP_BYTES:
+                continue
+            total.bytes += _op_bytes(op, comp, self.comps)
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyse_text(text: str) -> Cost:
+    return Analyzer(text).entry_cost()

@@ -1,0 +1,45 @@
+"""Production meshes.
+
+``make_production_mesh`` is the brief's canonical mesh: (16, 16) =
+("data", "model") for one v5e pod of 256 chips, or (2, 16, 16) =
+("pod", "data", "model") for two pods.  Defined as a *function* so that
+importing this module never touches jax device state.
+
+``refine_mesh`` re-views the same devices with the model axis split into
+(tp, sp) — each architecture's head count dictates its tp (DESIGN.md §4),
+so the refined mesh is per-arch while the device set (and therefore the
+physical topology) is exactly the production mesh's.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+MODEL_AXIS = 16
+DATA_AXIS = 16
+PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (PODS, DATA_AXIS, MODEL_AXIS) if multi_pod \
+        else (DATA_AXIS, MODEL_AXIS)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def refine_mesh(mesh: Mesh, tp: int, sp: int) -> Mesh:
+    """Split the trailing "model" axis of a production mesh into
+    ("tp", "sp").  tp * sp must equal MODEL_AXIS."""
+    if tp * sp != MODEL_AXIS:
+        raise ValueError(f"tp*sp = {tp}*{sp} != {MODEL_AXIS}")
+    devs = mesh.devices
+    new_shape = devs.shape[:-1] + (tp, sp)
+    names = mesh.axis_names[:-1] + ("tp", "sp")
+    return Mesh(devs.reshape(new_shape), names)
+
+
+def make_refined_mesh(cfg, *, multi_pod: bool = False) -> Mesh:
+    return refine_mesh(make_production_mesh(multi_pod=multi_pod),
+                       cfg.tp, cfg.sp)

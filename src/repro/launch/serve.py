@@ -1,0 +1,100 @@
+"""Serving launcher: a hibernating multi-tenant node under a request trace.
+
+Two modes:
+  * ``--dry-run``: lower+compile serve_step (decode_32k) for the
+    production mesh via launch.dryrun.
+  * default: run a REAL trace on CPU (tiny configs): Poisson-ish arrivals
+    over N tenants, keep-alive deflation, REAP or pagefault wakes.
+    Reports per-state latency percentiles and final memory per tenant.
+
+  PYTHONPATH=src python -m repro.launch.serve --tenants 4 --requests 24
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import subprocess
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=18)
+    ap.add_argument("--wake-mode", choices=("reap", "pagefault"),
+                    default="reap")
+    ap.add_argument("--keep-warm-s", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spool", default="/tmp/repro_launch_serve")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        return subprocess.call(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             args.arch, "--shape", "decode_32k", "--mesh", args.mesh])
+
+    import numpy as np
+    import jax
+
+    from repro.configs import get_config, tiny_config
+    from repro.core.manager import InstanceManager, ManagerConfig
+    from repro.core.metrics import memory_report
+    from repro.models import model
+    from repro.serving import Platform, PlatformPolicy, Request, ServingEngine
+
+    shutil.rmtree(args.spool, ignore_errors=True)
+
+    def factory(arch):
+        cfg = tiny_config(get_config(arch))
+        return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
+
+    mgr = InstanceManager(
+        ManagerConfig(spool_dir=args.spool, wake_mode=args.wake_mode),
+        factory)
+    eng = ServingEngine(mgr)
+    tenants = {f"fn{i}": args.arch for i in range(args.tenants)}
+    plat = Platform(eng, PlatformPolicy(keep_warm_s=args.keep_warm_s),
+                    tenants)
+
+    rng = np.random.default_rng(args.seed)
+    lat_by_state: dict = {}
+    for r_i in range(args.requests):
+        tenant = f"fn{rng.integers(args.tenants)}"
+        plat.submit(Request(tenant, f"s{r_i}",
+                            rng.integers(0, 256, 6).astype(np.int32),
+                            max_new_tokens=4, close_session=True))
+        for resp in plat.step():
+            lat_by_state.setdefault(resp.state_before, []).append(
+                resp.spans["e2e"])
+            print(f"  req{r_i:03d} {tenant:5s} {resp.state_before:9s}->"
+                  f"{resp.state_after:6s} {resp.spans['e2e'] * 1e3:7.0f}ms "
+                  f"faults={resp.faults}", flush=True)
+        if r_i % 3 == 2:
+            for iid in plat.tick():
+                print(f"    [policy] deflated {iid}")
+        # REAP-record each tenant once it has served
+        inst = mgr.instances.get(tenant)
+        if inst is not None and not inst.recorder.working_set:
+            eng.record_sample(tenant, Request(
+                tenant, "probe", rng.integers(0, 256, 4).astype(np.int32),
+                max_new_tokens=2, close_session=True))
+
+    print("\nper-state latency (ms):")
+    for st, xs in sorted(lat_by_state.items()):
+        xs = sorted(xs)
+        print(f"  {st:9s} n={len(xs):3d} p50={xs[len(xs) // 2] * 1e3:7.0f} "
+              f"max={xs[-1] * 1e3:7.0f}")
+    print("tenant memory:")
+    for iid, inst in mgr.instances.items():
+        rep = memory_report(inst, mgr.shared)
+        print(f"  {iid:5s} state={rep.state:9s} "
+              f"pss={rep.pss_total / 2**20:7.2f} MB")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

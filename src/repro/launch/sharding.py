@@ -1,0 +1,210 @@
+"""Partition-spec factory: params, optimizer state, batches, caches,
+activation rules — per (architecture x mode x mesh).
+
+Axis vocabulary (after mesh refinement, launch/mesh.py):
+  pod   — pods (multi-pod only); extends data parallelism / FSDP
+  data  — within-pod data parallelism; also the **expert-parallel** axis
+          (MoE expert tensors shard E over "data" in *both* modes: a
+          236/480B expert bank cannot replicate across data groups)
+  tp    — tensor parallelism (attention heads, FFN hidden)
+  sp    — sequence parallelism (decode KV cache sequence dim); joins
+          batch-parallelism when the batch allows and joins tp on the FFN
+          hidden dim (every assigned arch has d_ff % 16 == 0)
+
+Modes: "train" (adds FSDP: non-expert weight matrices shard their
+d_model-ish dim over data; optimizer state mirrors params), "prefill",
+"decode".
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.instance import _path_str
+
+FFN = ("tp", "sp")                     # full model axis for FFN hidden
+
+
+def _leaf(path: str) -> str:
+    return path.rsplit("/", 1)[-1]
+
+
+def batch_axes(mesh: Mesh, global_batch: int, *, include_sp: bool = True):
+    """Largest prefix of (pod, data, sp) whose product divides the batch."""
+    order = [a for a in ("pod", "data") if a in mesh.shape]
+    if include_sp:
+        order.append("sp")
+    axes, prod = [], 1
+    for a in order:
+        n = mesh.shape.get(a, 1)
+        if global_batch % (prod * n) == 0 and n > 1:
+            axes.append(a)
+            prod *= n
+        elif a != "sp":
+            break                      # keep the prefix contiguous
+    return tuple(axes) if axes else None
+
+
+def fsdp_axes(mesh: Mesh, mode: str):
+    """Weight-matrix FSDP axes for training (ZeRO-3 style)."""
+    if mode != "train":
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes or None
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding axes that do not evenly divide their dimension."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            n = mesh.shape.get(a, 1)
+            if dim % (prod * n) == 0:
+                kept.append(a)
+                prod *= n
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return P(*out)
+
+
+def param_spec(path: str, ndim: int, cfg, mode: str, mesh: Mesh) -> P:
+    """Spec for one parameter leaf (path uses the instance catalog scheme;
+    stacked layer leaves carry a leading L dim)."""
+    leaf = _leaf(path)
+    fsdp = fsdp_axes(mesh, mode)
+    stacked = path.startswith("layers/") or "/layers/" in path
+    tp = "tp" if cfg.tp > 1 else None
+
+    def wrap(spec: Tuple) -> P:
+        if stacked:
+            spec = (None,) + spec            # leading num_layers axis
+        assert len(spec) == ndim, (path, spec, ndim)
+        return P(*spec)
+
+    if leaf in ("w_gate", "w_up", "w_down") and "/moe/" in path and \
+            "/shared/" not in path and "/dense/" not in path:
+        # (E, d, f) / (E, f, d) expert banks: E over data (expert parallel)
+        if leaf == "w_down":
+            return wrap(("data", FFN, "pod" if fsdp and "pod" in fsdp
+                         else None))
+        return wrap(("data", "pod" if fsdp and "pod" in fsdp else None, FFN))
+    if leaf == "router":
+        return wrap((None, None))
+    if path == "embed":
+        return P(FFN, fsdp)                  # (Vp, d): vocab over model axis
+    if path == "lm_head":
+        return P(fsdp, FFN)
+    if path == "pos_embed" or leaf == "pos_embed":
+        spec = (FFN, None)
+        return wrap(spec) if stacked else P(*spec)
+    if path == "frontend_proj":
+        return P(None, fsdp)
+    if leaf in ("wq", "wk", "wv"):
+        return wrap((fsdp, tp))
+    if leaf == "wo":
+        return wrap((tp, fsdp))
+    if leaf in ("wq_a", "wkv_a"):
+        return wrap((fsdp, None))
+    if leaf in ("wq_b", "wkv_b"):
+        return wrap((None, tp))
+    if leaf in ("w_gate", "w_up"):           # dense MLP / shared experts
+        return wrap((fsdp, FFN))
+    if leaf == "w_down":
+        return wrap((FFN, fsdp))
+    if leaf == "in_proj":
+        return wrap((fsdp, None))
+    if leaf == "out_proj":
+        return wrap((None, fsdp))
+    # norms, biases, conv, A_log, D, dt_bias, scales ...
+    return wrap((None,) * (ndim - (1 if stacked else 0)))
+
+
+def params_specs(params_tree, cfg, mode: str, mesh: Mesh):
+    """Pytree of PartitionSpec matching a params (shape-)pytree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = [sanitize_spec(
+        param_spec(_path_str(p), v.ndim, cfg, mode, mesh), v.shape, mesh)
+        for p, v in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg, mesh: Mesh, global_batch: int):
+    b = batch_axes(mesh, global_batch)
+    out = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.frontend.kind == "vision":
+        out["embeds"] = P(b, None, None)
+    if cfg.is_encoder_decoder:
+        out["frames"] = P(b, None, None)
+    return out
+
+
+def prefill_specs(cfg, mesh: Mesh, global_batch: int):
+    return train_batch_specs(cfg, mesh, global_batch)
+
+
+def cache_specs(cfg, mesh: Mesh, global_batch: int) -> Dict:
+    """Decode-cache specs: B over (pod, data), S over sp, kv-heads over tp."""
+    b = batch_axes(mesh, global_batch, include_sp=False)
+    tp = "tp" if cfg.tp > 1 else None
+    sp = "sp" if cfg.sp > 1 else None
+    layers = {}
+    if cfg.attention == "mla":
+        layers["ckv"] = P(None, b, sp, None)
+        layers["krope"] = P(None, b, sp, None)
+    elif cfg.attention == "gqa":
+        kv_tp = tp if tp and cfg.num_kv_heads % cfg.tp == 0 else None
+        layers["k"] = P(None, b, sp, kv_tp, None)
+        layers["v"] = P(None, b, sp, kv_tp, None)
+    if cfg.ssm is not None:
+        layers["state"] = P(None, b, None, None, None)
+        layers["conv"] = P(None, b, None, None)
+    if cfg.is_encoder_decoder:
+        kv_tp = tp if tp and cfg.num_kv_heads % cfg.tp == 0 else None
+        layers["cross_k"] = P(None, b, None, kv_tp, None)
+        layers["cross_v"] = P(None, b, None, kv_tp, None)
+    return {"layers": layers,
+            "lengths": P(b),
+            "kv_positions": P(b, sp)}
+
+
+# ---------------------------------------------------------------------------
+# activation rules (consumed by utils.dist.constrain)
+# ---------------------------------------------------------------------------
+
+def activation_rules(cfg, mode: str, mesh: Mesh, global_batch: int) -> Dict:
+    b = batch_axes(mesh, global_batch,
+                   include_sp=(mode != "decode"))
+    tp = "tp" if cfg.tp > 1 else None
+    kv_tp = tp if tp and cfg.num_kv_heads and \
+        cfg.num_kv_heads % max(cfg.tp, 1) == 0 else None
+    # when the batch consumed "sp", activations can't also shard on it
+    ffn_act = ("tp",) if (b and "sp" in b) else FFN
+    if cfg.tp == 1 and ffn_act == ("tp",):
+        ffn_act = None
+    return {
+        "act_btd": P(b, None, None),
+        "act_btf": P(b, None, ffn_act),
+        "act_bshd": P(b, None, tp, None),
+        "act_bskd": P(b, None, kv_tp, None),
+        "logits_btv": P(b, None, ffn_act),
+        "moe_ecd": P("data", None, None),
+        "moe_ecf": P("data", None, ffn_act),
+        "ssm_bshp": P(b, None, None, None),
+    }

@@ -1,0 +1,135 @@
+"""Abstract input builders: ShapeDtypeStruct stand-ins for every model
+input, weight-correct and sharding-attached — no device allocation.
+
+``build_case(cfg, shape, mesh)`` returns
+  (step_fn, in_args: tuple of SDS pytrees, donate: tuple[int, ...])
+for the shape's kind:
+  train   -> train_step(params, opt_state, batch)
+  prefill -> prefill_step(params, batch)            (logits + full KV cache)
+  decode  -> serve_step(params, tokens, cache)      (ONE token, cached seq)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.launch import sharding as shd
+from repro.models import model
+from repro.training import AdamWConfig, init_state, make_train_step
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _abstract_params(cfg, mesh, mode):
+    tree = jax.eval_shape(
+        lambda k: model.init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = shd.params_specs(tree, cfg, mode, mesh)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), tree, specs)
+
+
+def decode_window(cfg, shape: InputShape) -> Tuple[Optional[int], int]:
+    """(window, cache_len) for a decode shape.  long_500k on dense archs
+    runs the sliding-window variant (ring cache of window slots)."""
+    if shape.name == "long_500k" and cfg.attention != "none":
+        if cfg.long_context_mode == "skip":
+            raise ValueError(f"{cfg.arch_id}: long_500k skipped by design")
+        w = cfg.sliding_window
+        return w, min(shape.seq_len, w)
+    return None, shape.seq_len
+
+
+def applicable(cfg, shape: InputShape) -> bool:
+    if shape.name == "long_500k" and cfg.long_context_mode == "skip":
+        return False
+    return True
+
+
+def _batch_sds(cfg, shape: InputShape, mesh, specs, *, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32, mesh, specs["tokens"])}
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, specs["labels"])
+    fe = cfg.frontend
+    if fe.kind == "vision":
+        batch["embeds"] = _sds((B, fe.num_embeddings, fe.embed_dim),
+                               jnp.bfloat16, mesh, specs["embeds"])
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds((B, fe.num_embeddings, fe.embed_dim),
+                               jnp.bfloat16, mesh, specs["frames"])
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# per-kind builders
+# ---------------------------------------------------------------------------
+
+def build_train(cfg, shape: InputShape, mesh: Mesh):
+    params = _abstract_params(cfg, mesh, "train")
+    opt_cfg = AdamWConfig()
+    opt_tree = jax.eval_shape(init_state, params)
+    pspecs = shd.params_specs(params, cfg, "train", mesh)
+    opt = type(opt_tree)(
+        step=_sds((), jnp.int32, mesh, P()),
+        m=jax.tree.map(lambda s, sp: _sds(s.shape, jnp.float32, mesh, sp),
+                       opt_tree.m, pspecs),
+        v=jax.tree.map(lambda s, sp: _sds(s.shape, jnp.float32, mesh, sp),
+                       opt_tree.v, pspecs),
+    )
+    bspecs = shd.train_batch_specs(cfg, mesh, shape.global_batch)
+    batch = _batch_sds(cfg, shape, mesh, bspecs, with_labels=True)
+    fn = make_train_step(cfg, opt_cfg, remat=True)
+    return fn, (params, opt, batch), (0, 1)
+
+
+def build_prefill(cfg, shape: InputShape, mesh: Mesh):
+    params = _abstract_params(cfg, mesh, "prefill")
+    bspecs = shd.prefill_specs(cfg, mesh, shape.global_batch)
+    batch = _batch_sds(cfg, shape, mesh, bspecs, with_labels=False)
+
+    def prefill_step(params, batch):
+        x, caches, _ = model.forward_hidden(
+            params, cfg, batch["tokens"], embeds=batch.get("embeds"),
+            enc_frames=batch.get("frames"), collect_cache=True)
+        return model.unembed(params, cfg, x[:, -1]), caches
+
+    return prefill_step, (params, batch), ()
+
+
+def build_decode(cfg, shape: InputShape, mesh: Mesh):
+    params = _abstract_params(cfg, mesh, "decode")
+    window, cache_len = decode_window(cfg, shape)
+    B = shape.global_batch
+    cache_tree = jax.eval_shape(
+        functools.partial(model.init_cache, cfg, B, cache_len,
+                          enc_len=cfg.encoder_max_len or None))
+    cspecs = shd.cache_specs(cfg, mesh, B)
+    cache = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp),
+        {"layers": cache_tree["layers"]}, {"layers": cspecs["layers"]})
+    cache["lengths"] = _sds((B,), jnp.int32, mesh, cspecs["lengths"])
+    cache["kv_positions"] = _sds((B, cache_len), jnp.int32,
+                                 mesh, cspecs["kv_positions"])
+    b = shd.batch_axes(mesh, B, include_sp=False)
+    tokens = _sds((B,), jnp.int32, mesh, P(b))
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, cfg, tokens, cache, window=window)
+
+    return serve_step, (params, tokens, cache), (2,)
+
+
+def build_case(cfg, shape: InputShape, mesh: Mesh):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)

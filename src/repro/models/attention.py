@@ -1,0 +1,317 @@
+"""Attention: blocked-flash GQA (causal / sliding-window), MLA, decode paths.
+
+Prefill/train use a pure-jnp blocked flash attention (two-level ``lax.scan``
+with online softmax) so a 32 k-token prefill never materialises an S×S score
+matrix.  Decode uses a partial-softmax formulation that composes with
+sequence-parallel KV shards via an optional ``axis_name`` (flash-decode
+logsumexp combine — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rmsnorm
+from repro.utils.dist import constrain
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, cross: bool = False):
+    d, H, Hkv, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    return {"wq": dense_init(ks[0], (d, H * D), 0, dtype),
+            "wk": dense_init(ks[1], (d, Hkv * D), 0, dtype),
+            "wv": dense_init(ks[2], (d, Hkv * D), 0, dtype),
+            "wo": dense_init(ks[3], (H * D, d), 0, dtype)}
+
+
+def init_mla(key, cfg):
+    m, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), 0, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H * qk), 0, dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            0, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                    H * (m.qk_nope_head_dim + m.v_head_dim)),
+                            0, dtype),
+        "wo": dense_init(ks[4], (H * m.v_head_dim, d), 0, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocked flash attention (pure jnp oracle-grade, used for train/prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    q_block: int = 512, kv_block: int = 1024,
+                    scale: Optional[float] = None):
+    """q: (B,Sq,H,D); k,v: (B,Sk,Hkv,D) with H % Hkv == 0.  Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    nq = -(-Sq // qb)
+    nk = -(-Sk // kb)
+    qp, kp = nq * qb - Sq, nk * kb - Sk
+    if qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0), (0, 0)))
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0), (0, 0)))
+
+    # (n, B, blk, ...) so both levels scan over the leading axis
+    qs = q.reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    ks_ = k.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, xs):
+        qblk, qi = xs                                     # (B,qb,Hkv,G,D)
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, kxs):
+            m, l, acc = carry
+            kblk, vblk, ki = kxs
+            kpos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] < Sk
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qb), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks_, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,Hkv,G,qb,D)
+        return None, out.transpose(0, 3, 1, 2, 4)         # (B,qb,Hkv,G,D)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention with partial-softmax combine (flash-decode)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, kv_positions, lengths, *,
+                     window: Optional[int] = None,
+                     axis_name: Optional[str] = None,
+                     scale: Optional[float] = None):
+    """Single-token decode.
+
+    q: (B, H, D); k,v: (B, S_local, Hkv, D) — a (possibly sequence-sharded)
+    slice of the cache.  kv_positions: (B, S_local) global token positions of
+    each cache slot (-1 for empty).  lengths: (B,) current sequence lengths.
+    When ``axis_name`` is given the caches of all shards on that mesh axis
+    are combined exactly via logsumexp (psum of corrected partial sums).
+    """
+    B, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (kv_positions >= 0) & (kv_positions < lengths[:, None])
+    if window is not None:
+        valid = valid & (kv_positions > lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    m = s.max(-1)                                          # (B,Hkv,G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(-1)
+    # accumulate in f32 WITHOUT materialising an f32 copy of the V cache
+    # (§Perf P3: v.astype(f32) doubled decode HBM traffic)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    if axis_name is not None:
+        m_g = jax.lax.pmax(m, axis_name)
+        corr = jnp.exp(m - m_g)
+        l = jax.lax.psum(l * corr, axis_name)
+        o = jax.lax.psum(o * corr[..., None], axis_name)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, D)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_mode)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_mode)
+    q = constrain(q, "act_bshd")
+    k = constrain(k, "act_bskd")
+    v = constrain(v, "act_bskd")
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg, positions, *, causal=True, window=None,
+                kv=None):
+    """Full-sequence attention.  kv: optional external (k, v) for cross-attn."""
+    B, S, _ = x.shape
+    if kv is None:
+        q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    else:
+        H, D = cfg.num_heads, cfg.head_dim
+        q = (x @ p["wq"]).reshape(B, S, H, D)
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_mode)
+        k, v = kv
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, S, -1)
+    return out @ p["wo"], (k, v)
+
+
+def gqa_decode(p, x, cfg, cache_k, cache_v, kv_positions, lengths, *,
+               window=None, axis_name=None, cross=False):
+    """x: (B, d).  cache_k/v: (B, S_local, Hkv, D).  Returns (B, d)."""
+    B = x.shape[0]
+    H, D = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, H, D)
+    if not cross and cfg.rope_mode != "none":
+        pos = (lengths - 1)[:, None]
+        q = apply_rope(q[:, None], pos, cfg.rope_theta, cfg.rope_mode)[:, 0]
+    out = decode_attention(q, cache_k, cache_v, kv_positions, lengths,
+                           window=window, axis_name=axis_name)
+    return out.reshape(B, H * D) @ p["wo"]
+
+
+def gqa_new_kv(p, x, cfg, lengths):
+    """Project this step's token into (k, v) cache entries.  x: (B, d)."""
+    B = x.shape[0]
+    Hkv, D = cfg.num_kv_heads, cfg.head_dim
+    k = (x @ p["wk"]).reshape(B, Hkv, D)
+    v = (x @ p["wv"]).reshape(B, Hkv, D)
+    if cfg.rope_mode != "none":
+        pos = (lengths - 1)[:, None]
+        k = apply_rope(k[:, None], pos, cfg.rope_theta, cfg.rope_mode)[:, 0]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent cache + absorbed decode
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, x, cfg, positions):
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = rmsnorm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(B, S, H, qk)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent(p, x, cfg, positions):
+    """Compress x into the cached latent: (ckv (B,S,r), k_rope (B,S,rd))."""
+    m = cfg.mla
+    ckv_full = x @ p["wkv_a"]
+    ckv = rmsnorm(ckv_full[..., :m.kv_lora_rank], p["kv_norm"])
+    k_rope = ckv_full[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_forward(p, x, cfg, positions, *, causal=True, window=None):
+    """Prefill/train path: expand latent to per-head K/V, flash attention."""
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    nd, vd = m.qk_nope_head_dim, m.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, k_rope = mla_latent(p, x, cfg, positions)
+    kv = (ckv @ p["wkv_b"]).reshape(B, S, H, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None], (B, S, H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_b], -1)
+    scale = 1.0 / math.sqrt(nd + m.qk_rope_head_dim)
+    # pad v head_dim up to qk dim so flash can run one fused pass
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, k.shape[-1] - vd)))
+    out = flash_attention(q, k, v_pad, causal=causal, window=window,
+                          scale=scale)[..., :vd]
+    out = out.reshape(B, S, H * vd)
+    return out @ p["wo"], (ckv, k_rope)
+
+
+def mla_decode(p, x, cfg, cache_ckv, cache_krope, kv_positions, lengths, *,
+               window=None, axis_name=None):
+    """Absorbed decode: score and value in latent space (never expand cache).
+
+    cache_ckv: (B, S_local, r); cache_krope: (B, S_local, rd).
+    """
+    m, H = cfg.mla, cfg.num_heads
+    B = x.shape[0]
+    nd, vd, r = m.qk_nope_head_dim, m.v_head_dim, m.kv_lora_rank
+    pos = (lengths - 1)[:, None]
+    q_nope, q_rope = _mla_q(p, x[:, None], cfg, pos)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]           # (B,H,·)
+    wkv = p["wkv_b"].reshape(r, H, nd + vd)
+    w_k, w_v = wkv[..., :nd], wkv[..., nd:]               # (r,H,nd),(r,H,vd)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_k,
+                       preferred_element_type=jnp.float32)  # absorb W_UK
+    # latent-cache dots accumulate in f32 without f32 cache copies (P3)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(cache_ckv.dtype),
+                    cache_ckv, preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bsd->bhs", q_rope, cache_krope,
+                      preferred_element_type=jnp.float32))
+    s = s * (1.0 / math.sqrt(nd + m.qk_rope_head_dim))
+    valid = (kv_positions >= 0) & (kv_positions < lengths[:, None])
+    if window is not None:
+        valid = valid & (kv_positions > lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, :], s, _NEG)
+    mx = s.max(-1)
+    pw = jnp.where(valid[:, None, :], jnp.exp(s - mx[..., None]), 0.0)
+    l = pw.sum(-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pw.astype(cache_ckv.dtype),
+                       cache_ckv, preferred_element_type=jnp.float32)
+    if axis_name is not None:
+        m_g = jax.lax.pmax(mx, axis_name)
+        corr = jnp.exp(mx - m_g)
+        l = jax.lax.psum(l * corr, axis_name)
+        o_lat = jax.lax.psum(o_lat * corr[..., None], axis_name)
+    o_lat = o_lat / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
+    return out.reshape(B, H * vd).astype(x.dtype) @ p["wo"]
+
+
+def mla_new_latent(p, x, cfg, lengths):
+    pos = (lengths - 1)[:, None]
+    ckv, k_rope = mla_latent(p, x[:, None], cfg, pos)
+    return ckv[:, 0], k_rope[:, 0]

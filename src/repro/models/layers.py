@@ -1,0 +1,118 @@
+"""Shared layers: norms, rotary embeddings, MLPs, parameter init."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.dist import constrain
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(key, cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(p, x, cfg):
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rotary_dim=None):
+    rotary_dim = rotary_dim or head_dim
+    exponent = jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim
+    return 1.0 / (theta ** exponent)                      # (rotary_dim/2,)
+
+
+def apply_rope(x, positions, theta: float, mode: str = "full"):
+    """x: (B, S, H, D); positions: (B, S) int32.
+
+    mode "full": rotate all D dims.  mode "2d": ChatGLM-style partial rotary
+    — rotate only the first half of D, pass the rest through.
+    """
+    if mode == "none":
+        return x
+    D = x.shape[-1]
+    rot = D if mode == "full" else D // 2
+    inv = rope_freqs(D, theta, rot)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]                     # (B,S,1,rot/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    if rot < D:
+        out = jnp.concatenate([out, x[..., rot:].astype(jnp.float32)], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.activation == "swiglu":
+        return {"w_gate": dense_init(ks[0], (d, f), 0, dtype),
+                "w_up": dense_init(ks[1], (d, f), 0, dtype),
+                "w_down": dense_init(ks[2], (f, d), 0, dtype)}
+    return {"w_up": dense_init(ks[0], (d, f), 0, dtype),
+            "w_down": dense_init(ks[1], (f, d), 0, dtype)}
+
+
+def apply_mlp(p, x, cfg):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = constrain(h, "act_btf")
+    return h @ p["w_down"]

@@ -1,0 +1,250 @@
+"""Top-level model API: init / forward / loss / prefill / decode_step.
+
+Covers all assigned families behind one interface:
+  * dense / MoE / MLA decoders (tokens),
+  * VLM (tokens + stub patch embeddings, prepended llava-style),
+  * audio enc-dec (stub frame embeddings -> encoder -> cross-attn decoder),
+  * SSM / hybrid (state caches instead of / alongside KV).
+
+The decode cache is a pytree:
+  {"layers": {leaf: (L, B, ...)}, "lengths": (B,), "kv_positions": (B, Smax)}
+Slot writes use ``(pos % Smax)`` so a sliding-window cache is a ring buffer
+(long_500k dense variant), and ``kv_positions`` keeps the *global* position
+per slot for exact masking.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import apply_norm, embed_init, init_norm, dense_init
+from repro.utils.dist import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg):
+    ks = jax.random.split(rng, 8)
+    dtype = jnp.dtype(cfg.dtype)
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    p = {"embed": embed_init(ks[0], (Vp, d), dtype),
+         "layers": tfm.init_stack(ks[1], cfg, cfg.num_layers,
+                                  cross=cfg.is_encoder_decoder),
+         "final_norm": init_norm(ks[2], cfg)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[3], (d, Vp), 0, dtype)
+    fe = cfg.frontend
+    if fe.kind != "none" and fe.embed_dim and fe.embed_dim != d:
+        p["frontend_proj"] = dense_init(ks[4], (fe.embed_dim, d), 0, dtype)
+    if cfg.is_encoder_decoder:
+        p["pos_embed"] = embed_init(ks[5], (cfg.max_position, d), dtype)
+        p["enc"] = {
+            "pos_embed": embed_init(ks[6], (cfg.encoder_max_len, d), dtype),
+            "layers": tfm.init_stack(ks[7], cfg, cfg.encoder_layers,
+                                     is_encoder=True),
+            "final_norm": init_norm(ks[2], cfg),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# input embedding
+# ---------------------------------------------------------------------------
+
+def _tok_embed(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def embed_inputs(params, cfg, tokens, embeds: Optional[jax.Array] = None,
+                 position_offset: int = 0):
+    """tokens: (B, S_txt); embeds: optional (B, S_fe, fe_dim) stub frontend
+    output, prepended (llava-style).  Returns (x (B,S,d), positions (B,S))."""
+    x = _tok_embed(params, cfg, tokens)
+    if embeds is not None and not cfg.is_encoder_decoder:
+        e = embeds
+        if "frontend_proj" in params:
+            e = e @ params["frontend_proj"]
+        x = jnp.concatenate([e.astype(x.dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = position_offset + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.is_encoder_decoder:
+        x = x + jnp.take(params["pos_embed"],
+                         jnp.minimum(positions, cfg.max_position - 1), axis=0)
+    return x, positions
+
+
+def encode(params, cfg, frames):
+    """Whisper encoder on stub frame embeddings (B, S_enc, d)."""
+    enc = params["enc"]
+    if "frontend_proj" in params:
+        frames = frames @ params["frontend_proj"].astype(frames.dtype)
+    B, Se, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    x = frames.astype(jnp.dtype(cfg.dtype)) + jnp.take(enc["pos_embed"],
+                                                       pos, axis=0)
+    x, _, _ = tfm.stack_forward(enc["layers"], x, cfg, pos, causal=False)
+    return apply_norm(enc["final_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params, cfg, tokens, embeds=None, enc_frames=None,
+                   window: Optional[int] = None, collect_cache: bool = False,
+                   remat: bool = False):
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, enc_frames)
+    x, positions = embed_inputs(params, cfg, tokens, embeds)
+    x = constrain(x, "act_btd")
+    x, caches, aux = tfm.stack_forward(
+        params["layers"], x, cfg, positions, causal=True, window=window,
+        enc_out=enc_out, collect_cache=collect_cache, remat=remat)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, caches, aux
+
+
+def unembed(params, cfg, x):
+    """x: (..., d) -> logits (..., Vp) in f32."""
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return constrain(logits, "logits_btv")
+
+
+def logits_full(params, cfg, tokens, embeds=None, enc_frames=None):
+    """Small-scale convenience path (tests): full (B,S,Vp) logits."""
+    x, _, aux = forward_hidden(params, cfg, tokens, embeds, enc_frames)
+    return unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, tokens, labels, embeds=None, enc_frames=None,
+            loss_chunk: int = 1024, remat: bool = False):
+    """Chunked cross-entropy: never materialises (B,S,V) logits.
+
+    labels: (B, S_txt) with -1 = masked.  When embeds are prepended, hidden
+    states are sliced back to the text region before the LM head.
+    """
+    x, _, aux = forward_hidden(params, cfg, tokens, embeds, enc_frames,
+                               remat=remat)
+    if embeds is not None and not cfg.is_encoder_decoder:
+        x = x[:, -tokens.shape[1]:]
+    B, S, d = x.shape
+    C = min(loss_chunk, S)
+    if S % C:
+        C = S
+    nc = S // C
+    xs = (x.reshape(B, nc, C, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, nc, C).transpose(1, 0, 2))
+
+    def step(carry, xs_c):
+        tot, cnt = carry
+        xc, yc = xs_c
+        logits = unembed(params, cfg, xc)                  # (B,C,Vp) f32
+        mask = (yc >= 0) & (yc < cfg.vocab_size)
+        y = jnp.where(mask, yc, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], -1)[..., 0]
+        nll = (lse - gold) * mask
+        return (tot + nll.sum(), cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)), xs)
+    ce = tot / jnp.maximum(cnt, 1.0)
+    lb_w = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+    loss = ce + lb_w * aux["lb_loss"]
+    return loss, {"ce": ce, "lb_loss": aux["lb_loss"]}
+
+
+# ---------------------------------------------------------------------------
+# decode cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: Optional[int] = None):
+    """Allocate an empty decode cache (dense slot layout; ring-buffered)."""
+    L, B, Smax = cfg.num_layers, batch, max_len
+    dtype = jnp.dtype(cfg.dtype)
+    layers = {}
+    if cfg.attention == "mla":
+        m = cfg.mla
+        layers["ckv"] = jnp.zeros((L, B, Smax, m.kv_lora_rank), dtype)
+        layers["krope"] = jnp.zeros((L, B, Smax, m.qk_rope_head_dim), dtype)
+    elif cfg.attention == "gqa":
+        layers["k"] = jnp.zeros((L, B, Smax, cfg.num_kv_heads, cfg.head_dim),
+                                dtype)
+        layers["v"] = jnp.zeros_like(layers["k"])
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        layers["state"] = jnp.zeros(
+            (L, B, cfg.ssm_heads, s.state_dim, s.head_dim), jnp.float32)
+        layers["conv"] = jnp.zeros(
+            (L, B, s.conv_width - 1, cfg.d_inner + 2 * s.state_dim), dtype)
+    if cfg.is_encoder_decoder:
+        e = enc_len or cfg.encoder_max_len
+        layers["cross_k"] = jnp.zeros((L, B, e, cfg.num_kv_heads,
+                                       cfg.head_dim), dtype)
+        layers["cross_v"] = jnp.zeros_like(layers["cross_k"])
+    return {"layers": layers,
+            "lengths": jnp.zeros((B,), jnp.int32),
+            "kv_positions": jnp.full((B, Smax), -1, jnp.int32)}
+
+
+_SLOT_LEAVES = ("k", "v", "ckv", "krope")
+
+
+def prefill(params, cfg, tokens, max_len: int, embeds=None, enc_frames=None,
+            window: Optional[int] = None, with_aux: bool = False):
+    """Full-sequence prefill.  Returns (last-token logits (B,Vp), cache)."""
+    x, caches, aux = forward_hidden(params, cfg, tokens, embeds, enc_frames,
+                                  window=window, collect_cache=True)
+    B, S = x.shape[0], x.shape[1]
+    assert S <= max_len, "prefill longer than cache"
+    layers = {}
+    for k, vv in (caches or {}).items():
+        if k in _SLOT_LEAVES:
+            pad = [(0, 0)] * vv.ndim
+            pad[2] = (0, max_len - S)
+            layers[k] = jnp.pad(vv, pad)
+        else:
+            layers[k] = vv
+    kv_positions = jnp.where(jnp.arange(max_len)[None] < S,
+                             jnp.arange(max_len)[None], -1)
+    kv_positions = jnp.broadcast_to(kv_positions, (B, max_len)).astype(jnp.int32)
+    cache = {"layers": layers,
+             "lengths": jnp.full((B,), S, jnp.int32),
+             "kv_positions": kv_positions}
+    logits = unembed(params, cfg, x[:, -1])
+    if with_aux:
+        return logits, cache, aux
+    return logits, cache
+
+
+def decode_step(params, cfg, tokens, cache, *,
+                window: Optional[int] = None, axis_name=None,
+                with_aux: bool = False):
+    """One decode step.  tokens: (B,) int32.  Returns (logits (B,Vp), cache)."""
+    lengths = cache["lengths"] + 1
+    x = _tok_embed(params, cfg, tokens)                   # (B, d)
+    if cfg.is_encoder_decoder:
+        pos = jnp.minimum(lengths - 1, cfg.max_position - 1)
+        x = x + jnp.take(params["pos_embed"], pos, axis=0)
+    kv_positions = cache["kv_positions"]
+    if kv_positions.shape[1] > 0 and cfg.attention != "none":
+        Smax = kv_positions.shape[1]
+        slot = (lengths - 1) % Smax
+        kv_positions = kv_positions.at[jnp.arange(x.shape[0]), slot].set(
+            lengths - 1)
+    x, new_layers, aux = tfm.stack_decode(
+        params["layers"], x, cfg, cache["layers"], lengths, kv_positions,
+        window=window, axis_name=axis_name)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params, cfg, x)
+    new_cache = {"layers": new_layers, "lengths": lengths,
+                 "kv_positions": kv_positions}
+    if with_aux:
+        return logits, new_cache, aux
+    return logits, new_cache

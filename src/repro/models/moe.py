@@ -1,0 +1,273 @@
+"""Mixture-of-experts: scatter-based GShard-style dispatch, expert-parallel.
+
+Dispatch path (DESIGN.md §4): tokens are processed in fixed-size chunks
+(``lax.scan``) so the (E, C, d) capacity buffer stays small; positions within
+an expert are computed with a cumulative one-hot (no sort); over-capacity
+assignments fall into a sacrificial slot that is sliced off (token dropping,
+standard GShard semantics).  Under distribution the buffer's expert axis is
+sharding-constrained to the model axis, which lowers to an all-to-all.
+
+Supports DeepSeek-style shared experts (always-on) and Arctic's dense
+residual MLP in parallel with the routed experts.
+
+Router decisions are also *recorded* (``expert_counts`` aux) — this feeds
+the REAP working-set recorder: only experts that actually fired for a
+sample request are prefetched on wake-up (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp, apply_mlp
+from repro.utils.dist import constrain
+
+
+def init_moe(key, cfg):
+    mo, d = cfg.moe, cfg.d_model
+    f = mo.expert_d_ff
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    E = mo.num_experts
+
+    def ew(k, shape, in_axis):
+        keys = jax.random.split(k, E)
+        return jnp.stack([dense_init(kk, shape, in_axis, dtype)
+                          for kk in keys])
+
+    p = {"router": dense_init(ks[0], (d, E), 0, jnp.float32),
+         "w_gate": ew(ks[1], (d, f), 0),
+         "w_up": ew(ks[2], (d, f), 0),
+         "w_down": ew(ks[3], (f, d), 1)}
+    if mo.num_shared_experts:
+        import dataclasses
+        shared_cfg = dataclasses.replace(cfg, d_ff=f * mo.num_shared_experts)
+        p["shared"] = init_mlp(ks[4], shared_cfg)
+    if mo.dense_residual:
+        p["dense"] = init_mlp(ks[5], cfg)
+    return p
+
+
+def _route_chunk(p, xc, cfg):
+    """xc: (T, d) -> (out (T, d), aux dict)."""
+    mo = cfg.moe
+    T, d = xc.shape
+    E, K = mo.num_experts, mo.top_k
+    C = max(4, int(T * K / E * mo.capacity_factor + 0.999))
+    C = min(C, T)
+
+    logits = (xc.astype(jnp.float32) @ p["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                 # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # position of each assignment inside its expert: cumulative one-hot over
+    # the flattened (T*K) assignment stream (row-major: token-major order)
+    flat_e = top_e.reshape(-1)                             # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)    # (T*K, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1               # position per expert
+    flat_pos = jnp.take_along_axis(pos_all, flat_e[:, None], 1)[:, 0]
+
+    keep = flat_pos < C
+    slot = jnp.where(keep, flat_pos, C)                    # sacrificial slot C
+
+    # dispatch: scatter tokens into (E, C+1, d)
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    buf = jnp.zeros((E, C + 1, d), xc.dtype)
+    buf = buf.at[flat_e, slot].add(xc[tok_idx])
+    buf = buf[:, :C]
+    buf = constrain(buf, "moe_ecd")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = constrain(h, "moe_ecf")
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    eout = constrain(eout, "moe_ecd")
+
+    # combine: gather each kept assignment's expert output, weighted
+    safe_slot = jnp.minimum(slot, C - 1)
+    gathered = eout[flat_e, safe_slot]                     # (T*K, d)
+    w = (top_w.reshape(-1) * keep).astype(jnp.float32)
+    out = jnp.zeros((T, d), jnp.float32)
+    out = out.at[tok_idx].add(gathered.astype(jnp.float32) * w[:, None])
+
+    # aux: load-balance loss terms + per-expert counts (REAP recorder)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32),
+                           axis=(0, 1)) * K
+    mean_prob = probs.mean(0)
+    lb = E * jnp.sum(frac_tokens * mean_prob)
+    counts = onehot.sum(0)                                 # (E,) int32
+    dropped = jnp.sum(~keep)
+    return out.astype(xc.dtype), {"lb_loss": lb, "expert_counts": counts,
+                                  "dropped": dropped}
+
+
+def _route_and_ffn(p_moe, xf, cfg, *, chunk_tokens: int):
+    """Chunk-scanned routed-expert path on (T, d) tokens."""
+    T, d = xf.shape
+    TC = min(chunk_tokens, T)
+    if T % TC:
+        TC = T                        # fall back to one chunk (small inputs)
+    nchunk = T // TC
+    xs = xf.reshape(nchunk, TC, d)
+
+    def step(_, xc):
+        return None, _route_chunk(p_moe, xc, cfg)
+
+    _, (outs, auxs) = jax.lax.scan(step, None, xs)
+    aux = {"lb_loss": auxs["lb_loss"].mean(),
+           "expert_counts": auxs["expert_counts"].sum(0),
+           "dropped": auxs["dropped"].sum()}
+    return outs.reshape(T, d), aux
+
+
+# ---------------------------------------------------------------------------
+# expert parallelism: explicit all-to-all over the "data" mesh axis
+# ---------------------------------------------------------------------------
+
+def _ep_inner(p, xl, cfg, D: int, chunk_tokens: int, ep_axes=("data",)):
+    """Per-data-shard body (§Perf P1): local routing -> capacity buffer ->
+    all_to_all to the expert owners -> local expert FFN -> all_to_all back
+    -> local combine.  Collective cost: 2 x K x cf x d bytes per token,
+    vs the scatter path's GSPMD lowering which all-reduces the whole
+    (E, C, d) buffer per chunk per layer."""
+    mo = cfg.moe
+    E, K = mo.num_experts, mo.top_k
+    E_loc = E // D
+    Bl, S, d = xl.shape
+    T = Bl * S
+    xf = xl.reshape(T, d)
+    TC = min(chunk_tokens, T)
+    if T % TC:
+        TC = T
+    nchunk = T // TC
+
+    def chunk(xc):
+        Tc = xc.shape[0]
+        C = max(4, int(Tc * K / E * mo.capacity_factor + 0.999))
+        C = min(C, Tc)
+        logits = (xc.astype(jnp.float32) @ p["router"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, K)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_e.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos_all = jnp.cumsum(onehot, axis=0) - 1
+        flat_pos = jnp.take_along_axis(pos_all, flat_e[:, None], 1)[:, 0]
+        keep = flat_pos < C
+        slot = jnp.where(keep, flat_pos, C)
+        tok_idx = jnp.repeat(jnp.arange(Tc), K)
+        buf = jnp.zeros((E, C + 1, d), xc.dtype)
+        buf = buf.at[flat_e, slot].add(xc[tok_idx])      # local scatter
+        buf = buf[:, :C]
+
+        # (P1 iter 3 + P5, both refuted: constraining the capacity dim over
+        # sp, or the payload d over tp, adds resharding collectives around
+        # the manual all_to_all that exceed the redundancy they remove —
+        # see EXPERIMENTS.md §Perf.)
+        # ship each expert's rows to its owner: (E, C, d) -> (E_loc, D*C, d)
+        recv = jax.lax.all_to_all(buf, ep_axes, split_axis=0, concat_axis=1,
+                                  tiled=True)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, p["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", recv, p["w_up"])
+        eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        # results return to the token owners: (E_loc, D*C, d) -> (E, C, d)
+        back = jax.lax.all_to_all(eout, ep_axes, split_axis=1, concat_axis=0,
+                                  tiled=True)
+
+        safe_slot = jnp.minimum(slot, C - 1)
+        gathered = back[flat_e, safe_slot]
+        w = (top_w.reshape(-1) * keep).astype(jnp.float32)
+        out = jnp.zeros((Tc, d), jnp.float32)
+        out = out.at[tok_idx].add(gathered.astype(jnp.float32) * w[:, None])
+
+        frac = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32),
+                        axis=(0, 1)) * K
+        lb = E * jnp.sum(frac * probs.mean(0))
+        return out.astype(xc.dtype), lb, onehot.sum(0), jnp.sum(~keep)
+
+    def step(_, xc):
+        return None, chunk(xc)
+
+    _, (outs, lbs, counts, dropped) = jax.lax.scan(
+        step, None, xf.reshape(nchunk, TC, d))
+    out = outs.reshape(Bl, S, d)
+    # globalise the aux stats (REAP needs global router counts)
+    lb = jax.lax.pmean(lbs.mean(), ep_axes)
+    counts = jax.lax.psum(counts.sum(0), ep_axes)
+    dropped = jax.lax.psum(dropped.sum(), ep_axes)
+    return out, lb, counts, dropped
+
+
+def _ep_axes(mesh):
+    """Expert-parallel axes: pod + data (cross-pod EP on the multi-pod
+    mesh — leaving pod automatic re-creates the scatter pathology as
+    pod-axis all-reduces of the dispatch buffers)."""
+    return tuple(a for a in ("pod", "data")
+                 if mesh.shape.get(a, 1) > 1)
+
+
+def _apply_moe_ep(p, x, cfg, mesh, *, chunk_tokens: int):
+    from jax.sharding import PartitionSpec as P
+
+    axes = _ep_axes(mesh)
+    D = 1
+    for a in axes:
+        D *= mesh.shape[a]
+    # manual over the EP axes only; tp/sp stay automatic (GSPMD keeps
+    # sharding the expert FFN hidden dim and the batch residue)
+    fn = jax.shard_map(
+        functools.partial(_ep_inner, cfg=cfg, D=D, chunk_tokens=chunk_tokens,
+                          ep_axes=axes),
+        mesh=mesh,
+        in_specs=({"router": P(None, None), "w_gate": P(axes, None, None),
+                   "w_up": P(axes, None, None),
+                   "w_down": P(axes, None, None)},
+                  P(axes, None, None)),
+        out_specs=(P(axes, None, None), P(), P(), P()),
+        axis_names=set(axes), check_vma=False)
+    p_routed = {k: p[k] for k in ("router", "w_gate", "w_up", "w_down")}
+    out, lb, counts, dropped = fn(p_routed, x)
+    return out, {"lb_loss": lb, "expert_counts": counts, "dropped": dropped}
+
+
+def _ep_applicable(x, cfg, rules) -> bool:
+    if rules is None:
+        return False
+    axes = _ep_axes(rules.mesh)
+    D = 1
+    for a in axes:
+        D *= rules.mesh.shape[a]
+    return (D > 1 and x.shape[0] % D == 0
+            and cfg.moe.num_experts % D == 0
+            and x.shape[0] * x.shape[1] >= 4 * D)
+
+
+def apply_moe(p, x, cfg, *, chunk_tokens: int = 4096):
+    """x: (B, S, d) -> (out, aux).
+
+    Distributed (dry-run / production) path: explicit expert parallelism
+    over the "data" axis via shard_map + all_to_all when the batch shards
+    evenly (train/prefill); otherwise (single host, tiny batches, decode)
+    the GSPMD scatter path with the moe_ecd sharding constraint.
+    """
+    from repro.utils.dist import current_rules
+
+    mo = cfg.moe
+    B, S, d = x.shape
+    rules = current_rules()
+    if _ep_applicable(x, cfg, rules):
+        out, aux = _apply_moe_ep(p, x, cfg, rules.mesh,
+                                 chunk_tokens=chunk_tokens)
+    else:
+        outf, aux = _route_and_ffn(
+            {k: p[k] for k in ("router", "w_gate", "w_up", "w_down")},
+            x.reshape(B * S, d), cfg, chunk_tokens=chunk_tokens)
+        out = outf.reshape(B, S, d)
+    if mo.num_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg)
+    if mo.dense_residual:
+        out = out + apply_mlp(p["dense"], x, cfg)
+    return out, aux

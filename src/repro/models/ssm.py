@@ -1,0 +1,171 @@
+"""Mamba2 SSD (state-space duality) block — chunked dual-form scan.
+
+Follows arXiv:2405.21060: per-head scalar decay A, shared B/C projections
+(single group), depthwise causal conv on (x|B|C), gated RMSNorm output.
+The chunked algorithm computes intra-chunk outputs in the quadratic dual
+form (MXU-friendly matmuls) and carries inter-chunk states with a
+``lax.scan`` — O(S·N·P) instead of O(S²).
+
+``ssd_chunked`` here is the reference math; the Pallas kernel in
+``repro.kernels.ssd_scan`` implements the same contraction with explicit
+VMEM tiling and is validated against ``repro.kernels.ssd_scan.ref`` (which
+calls back into this module).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+from repro.utils.dist import constrain
+
+
+def init_ssm(key, cfg):
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.d_inner
+    H, N = cfg.ssm_heads, s.state_dim
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), 0, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d), 0, dtype),
+    }
+
+
+def _split_in_proj(p, u, cfg):
+    s, di, H, N = cfg.ssm, cfg.d_inner, cfg.ssm_heads, cfg.ssm.state_dim
+    proj = u @ p["in_proj"]
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk_size: int, h0=None):
+    """SSD forward.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) positive step sizes; A: (H,) negative;
+    B,C: (B,S,N) (shared across heads); D: (H,) skip.
+    Returns y: (B,S,H,P) and final state (B,H,N,P).
+    """
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk_size, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+
+    xc = x.reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, nc, Q, H).astype(jnp.float32)
+    Bc = B.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    logdec = dtc * A[None, None, None, :]                 # (B,nc,Q,H) ≤ 0
+    a_cum = jnp.cumsum(logdec, axis=2)                    # within-chunk cumsum
+    a_tot = a_cum[:, :, -1]                               # (B,nc,H)
+
+    # intra-chunk (dual quadratic form)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)            # (B,nc,Q,Q)
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    M = CB[..., None] * decay                             # (B,nc,Q,Q,H)
+    xdt = xc * dtc[..., None]                             # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xdt)
+
+    # chunk-final states
+    dec_to_end = jnp.exp(a_tot[:, :, None, :] - a_cum)    # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, dec_to_end, xdt)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+
+    def step(h, xs):
+        a_t, s_c = xs                                     # (B,H), (B,H,N,P)
+        h_new = h * jnp.exp(a_t)[:, :, None, None] + s_c
+        return h_new, h                                   # emit state *before* chunk
+
+    a_sw = a_tot.transpose(1, 0, 2)                       # (nc,B,H)
+    s_sw = S_chunk.transpose(1, 0, 2, 3, 4)
+    h_final, h_prev = jax.lax.scan(step, h0.astype(jnp.float32), (a_sw, s_sw))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)              # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", Cc, h_prev) \
+        * jnp.exp(a_cum)[..., None]
+    y = y_intra + y_inter + xc * D[None, None, None, :, None]
+    y = y.reshape(Bb, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv.  xBC: (B,S,C); conv_w: (W,C).
+
+    Returns (out (B,S,C), new_conv_state (B,W-1,C)).
+    """
+    W = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[-1]),
+                               xBC.dtype)
+    xp = jnp.concatenate([conv_state, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * conv_w[i][None, None]
+              for i in range(W))
+    out = jax.nn.silu(out + conv_b[None, None])
+    new_state = xp[:, -(W - 1):] if W > 1 else conv_state
+    return out, new_state
+
+
+def ssm_forward(p, u, cfg, *, conv_state=None, h0=None):
+    """Full-sequence SSD block.  u: (B,S,d) -> (B,S,d), cache."""
+    s = cfg.ssm
+    di, H, N, P = cfg.d_inner, cfg.ssm_heads, s.state_dim, s.head_dim
+    Bb, S, _ = u.shape
+    z, xBC, dt = _split_in_proj(p, u, cfg)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    x = xBC[..., :di].reshape(Bb, S, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    x = constrain(x, "ssm_bshp")
+    dt_a = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_chunked(x, dt_a, A, Bm, Cm, p["D"],
+                       chunk_size=s.chunk_size, h0=h0)
+    y = y.reshape(Bb, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], {"state": h, "conv": new_conv}
+
+
+def ssm_decode(p, u, cfg, cache):
+    """Single-token SSD step.  u: (B,d); cache: {"state","conv"}."""
+    s = cfg.ssm
+    di, H, N, P = cfg.d_inner, cfg.ssm_heads, s.state_dim, s.head_dim
+    Bb = u.shape[0]
+    z, xBC, dt = _split_in_proj(p, u[:, None], cfg)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                 cache["conv"])
+    xBC, z, dt = xBC[:, 0], z[:, 0], dt[:, 0]
+    x = xBC[..., :di].reshape(Bb, H, P).astype(jnp.float32)
+    Bm = xBC[..., di:di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N:].astype(jnp.float32)
+    dt_a = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    h = cache["state"]
+    dA = jnp.exp(dt_a * A[None])                          # (B,H)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", Bm, dt_a, x)
+    h = h * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h) + x * p["D"][None, :, None]
+    y = y.reshape(Bb, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return (y @ p["out_proj"]).astype(u.dtype), {"state": h, "conv": new_conv}

@@ -1,0 +1,261 @@
+"""Unified transformer block + layer-scanned stack for every assigned family.
+
+Blocks are pure functions over explicit parameter pytrees.  The stack scans
+over layers with stacked parameters (leading ``num_layers`` axis) so a
+60-layer model lowers to a compact HLO.  Decode carries per-layer caches as
+scan xs/ys.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, init_norm, init_mlp, apply_mlp, rmsnorm
+from repro.utils.dist import constrain
+
+
+def _has_attn(cfg) -> bool:
+    return cfg.attention != "none"
+
+
+def _has_ssm(cfg) -> bool:
+    return cfg.ssm is not None
+
+
+def _has_mlp(cfg) -> bool:
+    return cfg.d_ff > 0 and cfg.moe is None
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, *, cross: bool = False, is_encoder: bool = False):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": init_norm(ks[0], cfg)}
+    if _has_attn(cfg):
+        p["attn"] = (attn.init_mla(ks[1], cfg) if cfg.attention == "mla"
+                     else attn.init_gqa(ks[1], cfg))
+    if _has_ssm(cfg) and not is_encoder:
+        p["ssm"] = ssm_mod.init_ssm(ks[2], cfg)
+        if cfg.hybrid_parallel_ssm:
+            p["attn_out_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["ssm_out_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cross:
+        p["ln_x"] = init_norm(ks[3], cfg)
+        p["xattn"] = attn.init_gqa(ks[4], cfg, cross=True)
+    if cfg.moe is not None and not is_encoder:
+        p["ln2"] = init_norm(ks[5], cfg)
+        p["moe"] = moe_mod.init_moe(ks[6], cfg)
+    elif _has_mlp(cfg):
+        p["ln2"] = init_norm(ks[5], cfg)
+        p["mlp"] = init_mlp(ks[6], cfg)
+    return p
+
+
+def _mix_full(p, h, cfg, positions, *, causal, window):
+    """Sequence-mixing sublayer on normed input h (full-sequence path)."""
+    cache = {}
+    outs = []
+    if _has_attn(cfg):
+        if cfg.attention == "mla":
+            a_out, (ckv, krope) = attn.mla_forward(
+                p["attn"], h, cfg, positions, causal=causal, window=window)
+            cache["ckv"], cache["krope"] = ckv, krope
+        else:
+            a_out, (k, v) = attn.gqa_forward(
+                p["attn"], h, cfg, positions, causal=causal, window=window)
+            cache["k"], cache["v"] = k, v
+        outs.append(("attn", a_out))
+    if _has_ssm(cfg):
+        s_out, s_cache = ssm_mod.ssm_forward(p["ssm"], h, cfg)
+        cache["state"], cache["conv"] = s_cache["state"], s_cache["conv"]
+        outs.append(("ssm", s_out))
+    if len(outs) == 2:    # hymba: mean of per-branch-normalised outputs
+        a = rmsnorm(outs[0][1], p["attn_out_norm"])
+        s = rmsnorm(outs[1][1], p["ssm_out_norm"])
+        return 0.5 * (a + s), cache
+    return outs[0][1], cache
+
+
+def block_forward(p, x, cfg, positions, *, causal: bool = True,
+                  window: Optional[int] = None, enc_out=None):
+    """x: (B,S,d).  Returns (x', cache, aux)."""
+    h = apply_norm(p["ln1"], x, cfg)
+    mix, cache = _mix_full(p, h, cfg, positions, causal=causal, window=window)
+    x = x + mix
+    if "xattn" in p:
+        B, Se, _ = enc_out.shape
+        Hkv, D = cfg.num_kv_heads, cfg.head_dim
+        ck = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, Hkv, D)
+        cv = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, Hkv, D)
+        cache["cross_k"], cache["cross_v"] = ck, cv
+        h = apply_norm(p["ln_x"], x, cfg)
+        xa, _ = attn.gqa_forward(p["xattn"], h, cfg, positions,
+                                 causal=False, kv=(ck, cv))
+        x = x + xa
+    aux = {"lb_loss": jnp.float32(0.0)}
+    if "moe" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        m_out, m_aux = moe_mod.apply_moe(p["moe"], h, cfg)
+        x = x + m_out
+        aux["lb_loss"] = m_aux["lb_loss"]
+        aux["expert_counts"] = m_aux["expert_counts"]
+    elif "mlp" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    x = constrain(x, "act_btd")
+    return x, cache, aux
+
+
+def block_decode(p, x, cfg, cache, lengths, kv_positions, *,
+                 window: Optional[int] = None, axis_name=None):
+    """Single-token step.  x: (B,d).  cache: the FULL stacked cache dict
+    (leaves (L, B, ...)); ``layer_idx`` selects this block's slice.
+
+    In-place cache discipline (§Perf P3): the new token's K/V (or SSD
+    state) is scattered into the *carried* stacked cache — a few KB of
+    writes — and attention reads the layer slice.  The earlier design
+    emitted whole per-layer caches as scan ys, rewriting the entire KV
+    cache every decode step (~2x cache bytes/token of pure overhead).
+    """
+    cache, layer_idx = cache
+    B = x.shape[0]
+    h = apply_norm(p["ln1"], x, cfg)
+    outs = []
+    li = layer_idx
+
+    def _layer(leaf):
+        return jax.lax.dynamic_index_in_dim(leaf, li, 0, keepdims=False)
+
+    if _has_attn(cfg):
+        Smax = (cache["ckv"] if cfg.attention == "mla"
+                else cache["k"]).shape[2]
+        slot = (lengths - 1) % Smax
+        bidx = jnp.arange(B)
+        if cfg.attention == "mla":
+            ckv_new, krope_new = attn.mla_new_latent(p["attn"], h, cfg,
+                                                     lengths)
+            cache["ckv"] = cache["ckv"].at[li, bidx, slot].set(
+                ckv_new.astype(cache["ckv"].dtype))
+            cache["krope"] = cache["krope"].at[li, bidx, slot].set(
+                krope_new.astype(cache["krope"].dtype))
+            a_out = attn.mla_decode(
+                p["attn"], h, cfg, _layer(cache["ckv"]),
+                _layer(cache["krope"]),
+                kv_positions, lengths, window=window, axis_name=axis_name)
+        else:
+            k_new, v_new = attn.gqa_new_kv(p["attn"], h, cfg, lengths)
+            cache["k"] = cache["k"].at[li, bidx, slot].set(
+                k_new.astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[li, bidx, slot].set(
+                v_new.astype(cache["v"].dtype))
+            a_out = attn.gqa_decode(
+                p["attn"], h, cfg, _layer(cache["k"]), _layer(cache["v"]),
+                kv_positions, lengths, window=window, axis_name=axis_name)
+        outs.append(("attn", a_out))
+    if _has_ssm(cfg):
+        s_out, s_cache = ssm_mod.ssm_decode(
+            p["ssm"], h, cfg, {"state": _layer(cache["state"]),
+                               "conv": _layer(cache["conv"])})
+        cache["state"] = cache["state"].at[li].set(s_cache["state"])
+        cache["conv"] = cache["conv"].at[li].set(
+            s_cache["conv"].astype(cache["conv"].dtype))
+        outs.append(("ssm", s_out))
+    if len(outs) == 2:
+        a = rmsnorm(outs[0][1], p["attn_out_norm"])
+        s = rmsnorm(outs[1][1], p["ssm_out_norm"])
+        mix = 0.5 * (a + s)
+    else:
+        mix = outs[0][1]
+    x = x + mix
+    if "xattn" in p:
+        h = apply_norm(p["ln_x"], x, cfg)
+        cross_k, cross_v = _layer(cache["cross_k"]), _layer(cache["cross_v"])
+        enc_len = cross_k.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_len)[None], (B, enc_len))
+        xa = attn.gqa_decode(
+            p["xattn"], h, cfg, cross_k, cross_v,
+            enc_pos, jnp.full((B,), enc_len, lengths.dtype), cross=True)
+        x = x + xa
+    aux = {}
+    if "moe" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        m_out, m_aux = moe_mod.apply_moe(p["moe"], h[:, None], cfg)
+        x = x + m_out[:, 0]
+        aux["expert_counts"] = m_aux["expert_counts"]
+    elif "mlp" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# layer-scanned stack
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg, num_layers: int, *, cross: bool = False,
+               is_encoder: bool = False):
+    keys = jax.random.split(key, num_layers)
+    blocks = [init_block(k, cfg, cross=cross, is_encoder=is_encoder)
+              for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def stack_forward(stacked, x, cfg, positions, *, causal=True, window=None,
+                  enc_out=None, collect_cache: bool = False,
+                  remat: bool = False):
+    """Scan the block over stacked layer params.  Returns (x, caches, aux).
+
+    ``aux["expert_counts"]``: (L, E) per-layer router usage for MoE archs —
+    consumed by the REAP working-set recorder.
+    """
+    has_moe = cfg.moe is not None
+    E = cfg.moe.num_experts if has_moe else 0
+
+    def body(carry, layer_p):
+        x, lb = carry
+        x, cache, aux = block_forward(layer_p, x, cfg, positions,
+                                      causal=causal, window=window,
+                                      enc_out=enc_out)
+        lb = lb + aux["lb_loss"]
+        counts = aux.get("expert_counts",
+                         jnp.zeros((E,), jnp.int32)) if has_moe else None
+        out = (cache if collect_cache else None, counts)
+        return (x, lb), out
+
+    step = jax.checkpoint(body) if remat else body
+    (x, lb), (caches, counts) = jax.lax.scan(
+        step, (x, jnp.float32(0.0)), stacked)
+    aux = {"lb_loss": lb / max(cfg.num_layers, 1)}
+    if has_moe:
+        aux["expert_counts"] = counts
+    return x, caches, aux
+
+
+def stack_decode(stacked, x, cfg, caches, lengths, kv_positions, *,
+                 window=None, axis_name=None):
+    has_moe = cfg.moe is not None
+    E = cfg.moe.num_experts if has_moe else 0
+
+    L = cfg.num_layers
+
+    def step(carry, xs):
+        x, caches = carry
+        layer_p, li = xs
+        x, caches, aux = block_decode(layer_p, x, cfg, (caches, li),
+                                      lengths, kv_positions, window=window,
+                                      axis_name=axis_name)
+        counts = aux.get("expert_counts",
+                         jnp.zeros((E,), jnp.int32)) if has_moe else None
+        return (x, caches), counts
+
+    (x, new_caches), counts = jax.lax.scan(
+        step, (x, caches), (stacked, jnp.arange(L)))
+    aux = {"expert_counts": counts} if has_moe else {}
+    return x, new_caches, aux

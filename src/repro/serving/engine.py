@@ -1,0 +1,439 @@
+"""Serving engine: request execution over hibernatable model instances.
+
+The engine is the "container runtime" side of the paper: it executes user
+requests (prefill + decode) against :class:`ModelInstance`s, drives the
+container state machine, performs *residency faulting* (the page-fault
+swap-in analogue: before compute touches a weight unit or KV page, any
+non-resident unit is loaded from the swap files), and feeds the REAP
+recorder with the exact unit set a request touches.
+
+Weight residency uses a fixpoint loop: units known statically (non-expert
+leaves, embedding blocks of the request's tokens) are faulted up-front;
+MoE expert units are faulted as the router reveals them (experts are only
+knowable by running the model — the same reason the paper needs a *sample
+request* to record the working set).
+
+Compiled functions are cached per ``(kind, batch, seq-bucket)`` in
+``inst.compiled`` — they survive hibernation (the paper's kept-alive
+"blocked runtime threads"), which is exactly why a woken container skips
+the cold-start cost.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.instance import ModelInstance
+from repro.core.manager import InstanceManager
+from repro.core.metrics import LatencyTrace
+from repro.core.state import ContainerState, Event
+from repro.models import model
+from repro.serving.paged_kv import PagedKVCache
+
+S = ContainerState
+
+
+# ---------------------------------------------------------------------------
+# requests / responses
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    instance_id: str
+    session_id: str
+    prompt: np.ndarray                       # (S,) int32 token ids
+    max_new_tokens: int = 8
+    embeds: Optional[np.ndarray] = None      # VLM stub patch embeddings
+    frames: Optional[np.ndarray] = None      # audio stub encoder frames
+    close_session: bool = False
+
+
+@dataclass
+class Response:
+    request: Request
+    tokens: List[int] = field(default_factory=list)
+    state_before: str = ""
+    state_after: str = ""
+    spans: Dict[str, float] = field(default_factory=dict)
+    faulted_bytes: int = 0
+    faults: int = 0
+    prefetched_bytes: int = 0
+
+
+# ---------------------------------------------------------------------------
+# jitted compute (cached per instance)
+# ---------------------------------------------------------------------------
+
+def _make_prefill(cfg, window):
+    def f(params, tokens, embeds, frames):
+        x, caches, aux = model.forward_hidden(
+            params, cfg, tokens, embeds=embeds, enc_frames=frames,
+            window=window, collect_cache=True)
+        logits = model.unembed(params, cfg, x[:, -1])
+        return logits, caches, aux
+    return jax.jit(f)
+
+
+def _make_decode(cfg, window):
+    def f(params, tokens, cache):
+        return model.decode_step(params, cfg, tokens, cache,
+                                 window=window, with_aux=True)
+    return jax.jit(f)
+
+
+def _bucket(n: int) -> int:
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServingEngine:
+    def __init__(self, manager: InstanceManager, *, max_new_default: int = 8,
+                 window: Optional[int] = None):
+        self.manager = manager
+        self.window = window
+        self.max_new_default = max_new_default
+        self.trace = LatencyTrace()
+
+    # ------------------------------------------------------------ lifecycle
+    def start_instance(self, instance_id: str, arch_key: str,
+                       shared_paths=None) -> ModelInstance:
+        """Cold start (①): init/load + attach the paged cache."""
+        with self.trace.span("cold_start"):
+            inst = self.manager.cold_start(instance_id, arch_key,
+                                           shared_paths=shared_paths)
+            inst.kv = PagedKVCache(instance_id, inst.cfg, self.manager.pool)
+        return inst
+
+    def _compiled(self, inst: ModelInstance, kind: str, B: int, Sb: int,
+                  has_embeds: bool, has_frames: bool):
+        key = (kind, B, Sb, has_embeds, has_frames)
+        fn = inst.compiled.get(key)
+        if fn is None:
+            maker = _make_prefill if kind == "prefill" else _make_decode
+            fn = maker(inst.cfg, self.window)
+            inst.compiled[key] = fn
+        return fn
+
+    # ------------------------------------------------------------ weights
+    def _static_weight_keys(self, inst: ModelInstance,
+                            tokens: np.ndarray) -> List[Tuple]:
+        """Units knowable before execution: non-expert leaves + embedding
+        blocks of the tokens in this request."""
+        keys = []
+        eb = inst.embed_block
+        blocks = {int(t) // eb for t in np.asarray(tokens).ravel()}
+        # tied embeddings: the LM head reads the WHOLE table every step,
+        # so all embed blocks belong to the static access set
+        all_embed = inst.cfg.tie_embeddings
+        for u in inst.units.values():
+            if u.path in inst.shared_paths:
+                continue
+            if u.path == "embed" and u.sub >= 0:
+                if all_embed or u.sub in blocks:
+                    keys.append(u.key)
+            elif u.sub < 0 or "/moe/" not in u.path:
+                keys.append(u.key)
+        return keys
+
+    def _embed_keys(self, inst: ModelInstance, tokens) -> List[Tuple]:
+        """Embedding blocks for a set of token ids (decode feeds generated
+        tokens whose rows may still be swapped out)."""
+        eb = inst.embed_block
+        blocks = {int(t) // eb for t in np.asarray(tokens).ravel()}
+        return [u.key for u in inst.units.values()
+                if u.path == "embed" and u.sub in blocks
+                and u.path not in inst.shared_paths]
+
+    def _expert_keys(self, inst: ModelInstance,
+                     counts: np.ndarray) -> List[Tuple]:
+        """Expert units fired by the router.  counts: (..., E) summed."""
+        if counts is None:
+            return []
+        used = np.asarray(counts).reshape(-1, counts.shape[-1]).sum(0)
+        keys = []
+        for u in inst.units.values():
+            if u.sub >= 0 and "/moe/" in u.path and used[u.sub] > 0:
+                keys.append(u.key)
+        return keys
+
+    def _fault(self, inst: ModelInstance, keys: Sequence[Tuple],
+               resp: Response) -> None:
+        missing = [k for k in keys
+                   if (k[0] == "w" and k not in inst.resident)]
+        kv_missing = (inst.kv.nonresident_keys(
+            [k for k in keys if k[0] in ("kv", "kvh")])
+            if inst.kv is not None else [])
+        if not missing and not kv_missing:
+            return
+        st = self.manager.hib.fault(inst, missing + kv_missing)
+        resp.faulted_bytes += st.faulted_bytes
+        resp.faults += st.faults
+        inst.recorder.record_many(missing + kv_missing)
+
+    # ------------------------------------------------------------ cache io
+    def _dense_cache(self, inst: ModelInstance, sids: List[str],
+                     max_len: int):
+        """Gather sessions' pages into a dense decode cache pytree."""
+        cfg, kv = inst.cfg, inst.kv
+        L, B = cfg.num_layers, len(sids)
+        layers: Dict[str, np.ndarray] = {}
+        lengths = np.zeros((B,), np.int32)
+        kv_positions = np.full((B, max_len), -1, np.int32)
+        te = kv.token_elems
+        if cfg.attention == "mla":
+            r, rd = cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim
+            layers["ckv"] = np.zeros((L, B, max_len, r), np.float32)
+            layers["krope"] = np.zeros((L, B, max_len, rd), np.float32)
+        elif cfg.attention == "gqa":
+            Hkv, D = cfg.num_kv_heads, cfg.head_dim
+            layers["k"] = np.zeros((L, B, max_len, Hkv, D), np.float32)
+            layers["v"] = np.zeros((L, B, max_len, Hkv, D), np.float32)
+        host: Dict[str, List[np.ndarray]] = {}
+        for b, sid in enumerate(sids):
+            sess = kv.sessions[sid]
+            n = sess.num_tokens
+            lengths[b] = n
+            kv_positions[b, :n] = np.arange(n)
+            if te:
+                for l in range(L):
+                    data = kv.read_tokens(sid, l, n)       # (n, te)
+                    if cfg.attention == "mla":
+                        layers["ckv"][l, b, :n] = data[:, :r]
+                        layers["krope"][l, b, :n] = data[:, r:]
+                    else:
+                        Hkv, D = cfg.num_kv_heads, cfg.head_dim
+                        kd = data.reshape(n, 2, Hkv, D)
+                        layers["k"][l, b, :n] = kd[:, 0]
+                        layers["v"][l, b, :n] = kd[:, 1]
+            for key, arr in sess.host_units.items():
+                kind = key[3]
+                if arr is None:
+                    raise KeyError(key)
+                host.setdefault(kind, [None] * B)[b] = arr
+        for kind, rows in host.items():
+            layers[kind] = np.stack(rows, axis=1)          # (L, B, ...)
+        dtype = jnp.dtype(cfg.dtype)
+        jl = {}
+        for k, v in layers.items():
+            jl[k] = jnp.asarray(v, jnp.float32 if k == "state" else dtype)
+        return {"layers": jl,
+                "lengths": jnp.asarray(lengths),
+                "kv_positions": jnp.asarray(kv_positions)}
+
+    def _writeback(self, inst: ModelInstance, sids: List[str], cache,
+                   start_lens: np.ndarray, resp: Optional[Response]) -> None:
+        """Write new tokens' KV + final host units back into pages."""
+        cfg, kv = inst.cfg, inst.kv
+        L = cfg.num_layers
+        layers = {k: np.asarray(v) for k, v in cache["layers"].items()}
+        lengths = np.asarray(cache["lengths"])
+        touched: List[Tuple] = []
+        for b, sid in enumerate(sids):
+            sess = kv.sessions[sid]
+            n0, n1 = int(start_lens[b]), int(lengths[b])
+            sess.num_tokens = n1
+            if kv.token_elems and n1 > n0:
+                for l in range(L):
+                    if cfg.attention == "mla":
+                        new = np.concatenate(
+                            [layers["ckv"][l, b, n0:n1],
+                             layers["krope"][l, b, n0:n1]], -1)
+                    else:
+                        new = np.stack([layers["k"][l, b, n0:n1],
+                                        layers["v"][l, b, n0:n1]], 1)
+                    touched += kv.write_tokens(
+                        sid, l, new.reshape(n1 - n0, kv.token_elems), n0)
+            for kind in ("state", "conv", "cross_k", "cross_v"):
+                if kind in layers:
+                    touched.append(kv.set_host_unit(
+                        sid, "all", kind, layers[kind][:, b]))
+        inst.recorder.record_many(touched)
+
+    # ------------------------------------------------------------ serving
+    def handle(self, req: Request) -> Response:
+        """End-to-end single request (the Fig. 6 measurement path)."""
+        return self.serve_batch(req.instance_id, [req])[0]
+
+    def serve_batch(self, instance_id: str,
+                    reqs: List[Request]) -> List[Response]:
+        """Continuous-batched execution of requests on one instance:
+        per-request prefill, then a joint decode loop that sessions leave
+        as they finish."""
+        inst = self.manager.instances[instance_id]
+        resps = [Response(r, state_before=inst.state.value) for r in reqs]
+        t0 = time.monotonic()
+
+        # ---- state machine: the request trigger (②⑥⑦)
+        wake_stats = None
+        if inst.state in (S.HIBERNATE, S.WOKEN):
+            if inst.state == S.HIBERNATE and \
+                    self.manager.cfg.wake_mode == "reap":
+                wake_stats = self.manager.hib.wake(inst, mode="reap",
+                                                   trigger="request")
+            inst.sm.fire(Event.REQUEST)       # -> HIBERNATE_RUNNING
+            finish_to = S.WOKEN
+        elif inst.state == S.WARM:
+            inst.sm.fire(Event.REQUEST)       # -> RUNNING
+            finish_to = S.WARM
+        else:
+            raise RuntimeError(f"instance busy/unservable: {inst.state}")
+        if wake_stats is not None:
+            for r in resps:
+                r.prefetched_bytes = wake_stats.prefetched_bytes
+
+        # ---- per-request prefill
+        cfg = inst.cfg
+        sids = []
+        for req, resp in zip(reqs, resps):
+            with self.trace.span("prefill"):
+                self._prefill_one(inst, req, resp)
+            sids.append(req.session_id)
+
+        # ---- joint decode
+        active = [i for i, r in enumerate(reqs) if r.max_new_tokens > 0]
+        if active:
+            with self.trace.span("decode"):
+                self._decode_joint(inst, reqs, resps, sids)
+
+        # ---- finish (③⑧)
+        inst.sm.fire(Event.FINISH)
+        assert inst.state == finish_to
+        inst.last_used = time.monotonic()
+        for req in reqs:
+            if req.close_session:
+                inst.kv.close_session(req.session_id)
+        for r in resps:
+            r.state_after = inst.state.value
+            r.spans["e2e"] = time.monotonic() - t0
+        return resps
+
+    # ------------------------------------------------------------ internals
+    def _prefill_one(self, inst: ModelInstance, req: Request,
+                     resp: Response) -> None:
+        cfg = inst.cfg
+        kv = inst.kv
+        if req.session_id not in kv.sessions:
+            kv.new_session(req.session_id)
+        sess = kv.sessions[req.session_id]
+
+        # fault statically-known weights + this session's existing cache
+        static_keys = self._static_weight_keys(inst, req.prompt)
+        self._fault(inst, static_keys, resp)
+        inst.recorder.record_many(
+            k for k in static_keys if k[0] == "w")
+        if sess.num_tokens:
+            prior = kv.keys_for(req.session_id, window_tokens=None)
+            self._fault(inst, prior, resp)
+            inst.recorder.record_many(prior)
+
+        tokens = np.asarray(req.prompt, np.int32)[None]    # (1, S)
+        Sb = tokens.shape[1]
+        fn = self._compiled(inst, "prefill", 1, Sb,
+                            req.embeds is not None, req.frames is not None)
+        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
+        frames = None if req.frames is None else jnp.asarray(req.frames)[None]
+
+        # fixpoint on MoE expert residency
+        for _ in range(4):
+            params = inst.params_pytree()
+            logits, caches, aux = fn(params, jnp.asarray(tokens),
+                                     embeds, frames)
+            ek = self._expert_keys(inst, aux.get("expert_counts"))
+            missing = [k for k in ek if k not in inst.resident]
+            inst.recorder.record_many(ek)
+            if not missing:
+                break
+            self._fault(inst, missing, resp)
+        resp.tokens.append(int(jnp.argmax(logits[0, :cfg.vocab_size])))
+
+        # write prefill KV into pages
+        n0 = sess.num_tokens
+        S_tot = Sb + (0 if req.embeds is None or cfg.is_encoder_decoder
+                      else req.embeds.shape[0])
+        layers = {} if caches is None else \
+            {k: np.asarray(v) for k, v in caches.items()}
+        touched: List[Tuple] = []
+        if kv.token_elems:
+            for l in range(cfg.num_layers):
+                if cfg.attention == "mla":
+                    new = np.concatenate([layers["ckv"][l, 0],
+                                          layers["krope"][l, 0]], -1)
+                else:
+                    new = np.stack([layers["k"][l, 0], layers["v"][l, 0]], 1)
+                touched += kv.write_tokens(
+                    req.session_id, l,
+                    new.reshape(S_tot, kv.token_elems), n0)
+        for kind in ("state", "conv", "cross_k", "cross_v"):
+            if kind in layers:
+                touched.append(kv.set_host_unit(
+                    req.session_id, "all", kind, layers[kind][:, 0]))
+        sess.num_tokens = n0 + S_tot
+        sess.token_ids += [int(t) for t in req.prompt]
+        inst.recorder.record_many(touched)
+
+    def _decode_joint(self, inst: ModelInstance, reqs: List[Request],
+                      resps: List[Response], sids: List[str]) -> None:
+        cfg = inst.cfg
+        kv = inst.kv
+        max_new = max(r.max_new_tokens for r in reqs)
+        max_len = _bucket(max(kv.sessions[s].num_tokens for s in sids)
+                          + max_new)
+        # fault every page the decode window will read
+        for sid in sids:
+            self._fault(inst, kv.keys_for(sid), resps[0])
+            inst.recorder.record_many(kv.keys_for(sid))
+        cache = self._dense_cache(inst, sids, max_len)
+        start_lens = np.asarray(cache["lengths"]).copy()
+        B = len(sids)
+        fn = self._compiled(inst, "decode", B, max_len, False, False)
+        cur = jnp.asarray([r.tokens[-1] if r.tokens else 0 for r in resps],
+                          jnp.int32)
+        done = np.zeros((B,), bool)
+        for step in range(max_new - 1 + 1):
+            # the fed-back tokens' embedding rows page-fault on access
+            ek = self._embed_keys(inst, np.asarray(cur))
+            inst.recorder.record_many(ek)
+            self._fault(inst, ek, resps[0])
+            params = inst.params_pytree()
+            logits, new_cache, aux = fn(params, cur, cache)
+            counts = aux.get("expert_counts")
+            if counts is not None:
+                ek = self._expert_keys(inst, np.asarray(counts))
+                missing = [k for k in ek if k not in inst.resident]
+                inst.recorder.record_many(ek)
+                if missing:
+                    # re-run the SAME step from the pre-step cache with the
+                    # faulted experts resident (page-fault-and-retry)
+                    self._fault(inst, missing, resps[0])
+                    logits, new_cache, aux = fn(params, cur, cache)
+            cache = new_cache
+            nxt = np.asarray(jnp.argmax(
+                logits[:, :cfg.vocab_size], axis=-1), np.int32)
+            for b, r in enumerate(resps):
+                want = r.request.max_new_tokens
+                if not done[b] and len(r.tokens) < want:
+                    r.tokens.append(int(nxt[b]))
+                    if len(r.tokens) >= want:
+                        done[b] = True
+                else:
+                    done[b] = True
+            cur = jnp.asarray(nxt)
+            if done.all():
+                break
+        self._writeback(inst, sids, cache, start_lens, resps[0])
+
+    # ------------------------------------------------------------ REAP ops
+    def record_sample(self, instance_id: str, req: Request) -> frozenset:
+        """§3.4.2 Record process: run a sample request with the recorder on;
+        the union of touched units becomes the REAP working set."""
+        inst = self.manager.instances[instance_id]
+        inst.recorder.start()
+        self.handle(req)
+        return inst.recorder.stop()

@@ -1,0 +1,277 @@
+"""Paged KV/SSM cache over the shared page pool (the paper's guest memory).
+
+The cache is the *anonymous application memory* of a model instance: KV
+entries live in fixed-size pool pages managed by the Bitmap Page Allocator;
+SSM/conv/cross-attention states are host-cache units riding the same swap
+machinery.  Logical *keys* are stable across hibernation cycles (physical
+page ids are not — pages are freed on deflate and re-allocated on inflate,
+exactly like madvise'd memory being recommitted by the host on fault):
+
+  ``("kv",  session_id, layer, page_idx)``  one pool page of KV tokens
+  ``("kvh", session_id, layer, kind)``      a host unit (ssm state, conv,
+                                            cross_k/v, MLA latent uses "kv")
+
+Sessions model multi-turn serverless invocations: a *closed* session's pages
+are "freed by the guest application but not yet returned to the host" — the
+``trim()`` pass (deflation step 2) returns them to the shared pool.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+
+@dataclass
+class KVSession:
+    session_id: str
+    num_tokens: int = 0
+    token_ids: List[int] = field(default_factory=list)
+    #: pages[layer][i] = physical page id, or None while swapped out
+    pages: List[List[Optional[int]]] = field(default_factory=list)
+    #: host units: key -> array (None while swapped out)
+    host_units: Dict[Tuple, Optional[np.ndarray]] = field(default_factory=dict)
+    host_shapes: Dict[Tuple, Tuple] = field(default_factory=dict)
+    closed: bool = False
+    #: page idx -> tokens used in that page (last page may be partial)
+    last_page_fill: int = 0
+
+
+class PagedKVCache:
+    """Per-instance paged cache.  ``token_elems`` is the per-layer flattened
+    KV element count per token (2*Hkv*D for GQA, r+rd for MLA)."""
+
+    def __init__(self, instance_id: str, cfg, pool):
+        self.instance_id = instance_id
+        self.cfg = cfg
+        self.pool = pool
+        if cfg.attention == "mla":
+            self.token_elems = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        elif cfg.attention == "none":
+            self.token_elems = 0
+        else:
+            self.token_elems = 2 * cfg.num_kv_heads * cfg.head_dim
+        # tokens per pool page (pool page size is global, shared by tenants)
+        self.page_tokens = max(1, pool.page_elems // max(self.token_elems, 1)) \
+            if self.token_elems else 0
+        self.sessions: Dict[str, KVSession] = {}
+        self.dropped = False                 # True while deflated
+
+    # ------------------------------------------------------------- sessions
+    def new_session(self, session_id: str) -> KVSession:
+        if session_id in self.sessions:
+            raise KeyError(f"session {session_id} exists")
+        s = KVSession(session_id,
+                      pages=[[] for _ in range(self.cfg.num_layers)])
+        self.sessions[session_id] = s
+        return s
+
+    def close_session(self, session_id: str) -> None:
+        """Guest 'free': pages stay committed until trim() reclaims them."""
+        self.sessions[session_id].closed = True
+
+    def fork_session(self, src_id: str, dst_id: str) -> KVSession:
+        """COW prefix sharing: the new session references the same physical
+        pages; the allocator refcounts them (paper's clone/COW analogue)."""
+        src = self.sessions[src_id]
+        dst = self.new_session(dst_id)
+        dst.num_tokens = src.num_tokens
+        dst.token_ids = list(src.token_ids)
+        dst.last_page_fill = src.last_page_fill
+        dst.pages = [list(layer) for layer in src.pages]
+        shared = [p for layer in src.pages for p in layer if p is not None]
+        self.pool.share(shared, self.instance_id)
+        for k, v in src.host_units.items():
+            nk = (k[0], dst_id) + k[2:]
+            dst.host_units[nk] = None if v is None else v.copy()
+            dst.host_shapes[nk] = src.host_shapes[k]
+        return dst
+
+    # ------------------------------------------------------------- writes
+    def _n_pages(self, tokens: int) -> int:
+        return -(-tokens // self.page_tokens) if self.token_elems else 0
+
+    def write_tokens(self, session_id: str, layer: int,
+                     data: np.ndarray, start_tok: int) -> List[Tuple]:
+        """Write ``data`` ((T, token_elems)) at token offset ``start_tok``
+        for one layer.  Allocates pages as needed.  Returns touched keys."""
+        s = self.sessions[session_id]
+        T = data.shape[0]
+        data = np.asarray(data, self.pool.dtype).reshape(T, self.token_elems)
+        touched = []
+        t = 0
+        while t < T:
+            tok = start_tok + t
+            pidx, off = divmod(tok, self.page_tokens)
+            while len(s.pages[layer]) <= pidx:
+                s.pages[layer].append(self.pool.alloc(1, self.instance_id)[0])
+            pid = s.pages[layer][pidx]
+            if pid is None:                      # swapped-out page: fault first
+                raise KeyError(("kv", session_id, layer, pidx))
+            n = min(self.page_tokens - off, T - t)
+            phys = self.pool._phys([pid])[0]
+            usable = self.page_tokens * self.token_elems
+            page_view = self.pool.data[phys][:usable].reshape(
+                self.page_tokens, self.token_elems)
+            page_view[off:off + n] = data[t:t + n]
+            touched.append(("kv", session_id, layer, pidx))
+            t += n
+        return touched
+
+    def read_tokens(self, session_id: str, layer: int, n_tokens: int
+                    ) -> np.ndarray:
+        """Gather the first ``n_tokens`` of a layer into a dense array."""
+        s = self.sessions[session_id]
+        out = np.zeros((n_tokens, self.token_elems), self.pool.dtype)
+        t = 0
+        while t < n_tokens:
+            pidx, off = divmod(t, self.page_tokens)
+            pid = s.pages[layer][pidx]
+            if pid is None:
+                raise KeyError(("kv", session_id, layer, pidx))
+            n = min(self.page_tokens - off, n_tokens - t)
+            phys = self.pool._phys([pid])[0]
+            usable = self.page_tokens * self.token_elems
+            page = self.pool.data[phys][:usable].reshape(
+                self.page_tokens, self.token_elems)
+            out[t:t + n] = page[off:off + n]
+            t += n
+        return out
+
+    def set_host_unit(self, session_id: str, layer, kind: str,
+                      arr: np.ndarray) -> Tuple:
+        s = self.sessions[session_id]
+        key = ("kvh", session_id, layer, kind)
+        s.host_units[key] = np.asarray(arr)
+        s.host_shapes[key] = arr.shape
+        return key
+
+    def get_host_unit(self, session_id: str, layer, kind: str) -> np.ndarray:
+        s = self.sessions[session_id]
+        key = ("kvh", session_id, layer, kind)
+        arr = s.host_units[key]
+        if arr is None:
+            raise KeyError(key)
+        return arr
+
+    def keys_for(self, session_id: str, window_tokens: Optional[int] = None
+                 ) -> List[Tuple]:
+        """All logical keys a request on this session will touch (pages in
+        the attention window + every host unit) — the fault/record set."""
+        s = self.sessions[session_id]
+        keys: List[Tuple] = list(s.host_units)
+        if self.token_elems:
+            first_tok = 0
+            if window_tokens is not None:
+                first_tok = max(0, s.num_tokens - window_tokens)
+            p0 = first_tok // self.page_tokens
+            for layer in range(self.cfg.num_layers):
+                for pidx in range(p0, len(s.pages[layer])):
+                    keys.append(("kv", session_id, layer, pidx))
+        return keys
+
+    def nonresident_keys(self, keys: Sequence[Tuple]) -> List[Tuple]:
+        out = []
+        for k in keys:
+            s = self.sessions.get(k[1])
+            if s is None:
+                continue
+            if k[0] == "kv":
+                if s.pages[k[2]][k[3]] is None:
+                    out.append(k)
+            elif s.host_units.get(k) is None:
+                out.append(k)
+        return out
+
+    # ------------------------------------------------------------- hibernate
+    def trim(self) -> int:
+        """Deflation step 2: return closed sessions' pages to the pool."""
+        n = 0
+        for sid in [s for s, v in self.sessions.items() if v.closed]:
+            s = self.sessions.pop(sid)
+            pages = [p for layer in s.pages for p in layer if p is not None]
+            n += len(pages)
+            self.pool.free(pages, self.instance_id)
+        return n
+
+    def export_items(self, working_set: frozenset
+                     ) -> Tuple[List[Tuple[Tuple, np.ndarray]],
+                                List[Tuple[Tuple, np.ndarray]]]:
+        """Partition resident cache units into (reap, swap) item lists."""
+        reap, swap = [], []
+        for sid, s in self.sessions.items():
+            for layer in range(len(s.pages)):
+                for pidx, pid in enumerate(s.pages[layer]):
+                    if pid is None:
+                        continue
+                    key = ("kv", sid, layer, pidx)
+                    phys = self.pool._phys([pid])[0]
+                    data = self.pool.data[phys].copy()
+                    (reap if key in working_set else swap).append((key, data))
+            for key, arr in s.host_units.items():
+                if arr is None:
+                    continue
+                (reap if key in working_set else swap).append((key, arr))
+        return reap, swap
+
+    def drop_pages(self) -> int:
+        """Deflation step 3 tail: free every physical page (madvise) but keep
+        the logical page tables — the 'Not-Present' page-table entries."""
+        n = 0
+        for s in self.sessions.values():
+            for layer in range(len(s.pages)):
+                for pidx, pid in enumerate(s.pages[layer]):
+                    if pid is not None:
+                        self.pool.free([pid], self.instance_id)
+                        s.pages[layer][pidx] = None
+                        n += 1
+            for key in s.host_units:
+                s.host_units[key] = None
+        self.dropped = True
+        return n
+
+    def apply_prefetch(self, data: Dict[Hashable, np.ndarray]) -> int:
+        """Install a batch of swapped-in units (REAP batch read)."""
+        n = 0
+        for key, arr in data.items():
+            if key[0] in ("kv", "kvh") and key[1] in self.sessions:
+                self._install(key, arr)
+                n += arr.nbytes
+        self.dropped = False
+        return n
+
+    def _install(self, key: Tuple, arr: np.ndarray) -> None:
+        s = self.sessions[key[1]]
+        if key[0] == "kv":
+            _, sid, layer, pidx = key
+            if s.pages[layer][pidx] is None:
+                s.pages[layer][pidx] = self.pool.alloc(1, self.instance_id)[0]
+            pid = s.pages[layer][pidx]
+            phys = self.pool._phys([pid])[0]
+            self.pool.data[phys] = arr.reshape(self.pool.data[phys].shape)
+        else:
+            s.host_units[key] = arr.reshape(s.host_shapes[key])
+
+    def fault_in(self, keys: Sequence[Tuple], swap_file, reap_file) -> int:
+        """Page-fault path: one random read per key."""
+        n = 0
+        for key in keys:
+            if key in swap_file:
+                arr = swap_file.read_unit(key)
+            elif key in reap_file.extents:
+                arr = reap_file.read_unit(key)
+            else:
+                raise KeyError(f"kv unit {key} not in any swap file")
+            self._install(key, arr)
+            n += arr.nbytes
+        return n
+
+    # ------------------------------------------------------------- accounting
+    def resident_page_count(self) -> int:
+        return sum(1 for s in self.sessions.values()
+                   for layer in s.pages for p in layer if p is not None)
+
+    def host_bytes(self) -> int:
+        return sum(a.nbytes for s in self.sessions.values()
+                   for a in s.host_units.values() if a is not None)

@@ -1,0 +1,117 @@
+"""Serverless platform scheduler: routing, keep-alive and deflation policy.
+
+This is the control plane of Fig. 3: it decides when a Warm Container is
+deflated (④ SIGSTOP under memory pressure or keep-alive expiry), when a
+Hibernate Container is predictively woken (⑤ SIGCONT), and routes incoming
+requests to instances (cold-starting when none exists).
+
+The policy is intentionally simple (LRU deflate / TTL), matching the
+paper's platform assumptions; FaasCache-style smarter keep-alive is noted
+as related work, not reproduced.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.core.state import ContainerState
+from repro.serving.engine import Request, Response, ServingEngine
+
+S = ContainerState
+
+
+@dataclass
+class PlatformPolicy:
+    keep_warm_s: float = 5.0            # idle time before deflation (④)
+    memory_target_bytes: Optional[int] = None
+    deflate_instead_of_evict: bool = True   # the paper's knob: off = classic
+    predictive_wake: bool = False           # ⑤ wake on queue arrival
+    #: anticipatory wake (⑤, "platform predicts a request"): wake a
+    #: hibernated tenant when the EWMA of its inter-arrival gap says the
+    #: next request is due within this margin (seconds); None disables
+    anticipate_margin_s: Optional[float] = None
+    ewma_alpha: float = 0.3
+
+
+class Platform:
+    """Single-node serverless platform over a :class:`ServingEngine`."""
+
+    def __init__(self, engine: ServingEngine, policy: PlatformPolicy,
+                 arch_of: Dict[str, str]):
+        """``arch_of``: function name -> arch key for the engine factory."""
+        self.engine = engine
+        self.policy = policy
+        self.arch_of = arch_of
+        self.queue: Deque[Request] = deque()
+        self._ids = 0
+        self.log: List[tuple] = []
+        #: per-tenant arrival model: (last_arrival_ts, ewma_gap_s)
+        self.arrivals: Dict[str, tuple] = {}
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        self.queue.append(req)
+        now = now if now is not None else time.monotonic()
+        last, gap = self.arrivals.get(req.instance_id, (None, None))
+        if last is not None:
+            a = self.policy.ewma_alpha
+            gap = (now - last) if gap is None else \
+                a * (now - last) + (1 - a) * gap
+        self.arrivals[req.instance_id] = (now, gap)
+        if self.policy.predictive_wake:
+            inst = self.engine.manager.instances.get(req.instance_id)
+            if inst is not None and inst.state == S.HIBERNATE:
+                self.engine.manager.predictive_wake(req.instance_id)
+                self.log.append((now, "predictive_wake", req.instance_id))
+
+    def step(self) -> List[Response]:
+        """Drain the queue once (grouped per instance for batching)."""
+        by_inst: Dict[str, List[Request]] = {}
+        while self.queue:
+            r = self.queue.popleft()
+            by_inst.setdefault(r.instance_id, []).append(r)
+        out: List[Response] = []
+        for iid, reqs in by_inst.items():
+            if iid not in self.engine.manager.instances:
+                self.engine.start_instance(iid, self.arch_of[iid])
+                self.log.append((time.monotonic(), "cold_start", iid))
+            out.extend(self.engine.serve_batch(iid, reqs))
+        return out
+
+    # ------------------------------------------------------------- policy
+    def tick(self, now: Optional[float] = None) -> List[str]:
+        """Apply keep-alive policy: deflate (or evict) idle instances."""
+        now = now if now is not None else time.monotonic()
+        mgr = self.engine.manager
+        acted = []
+        for iid, inst in list(mgr.instances.items()):
+            idle = now - inst.last_used
+            if inst.state in (S.WARM, S.WOKEN) and \
+                    idle > self.policy.keep_warm_s:
+                if self.policy.deflate_instead_of_evict:
+                    mgr.deflate(iid)
+                    self.log.append((now, "deflate", iid))
+                else:
+                    mgr.evict(iid)
+                    self.log.append((now, "evict", iid))
+                acted.append(iid)
+        if self.policy.memory_target_bytes is not None:
+            acted += mgr.handle_memory_pressure(
+                self.policy.memory_target_bytes)
+        # ⑤ anticipatory SIGCONT: wake tenants whose EWMA inter-arrival
+        # model predicts a request within the margin
+        if self.policy.anticipate_margin_s is not None:
+            for iid, inst in mgr.instances.items():
+                if inst.state != S.HIBERNATE:
+                    continue
+                last, gap = self.arrivals.get(iid, (None, None))
+                if last is None or gap is None:
+                    continue
+                due_in = (last + gap) - now
+                if due_in <= self.policy.anticipate_margin_s:
+                    mgr.predictive_wake(iid)
+                    self.log.append((now, "anticipated_wake", iid))
+                    acted.append(iid)
+        return acted

@@ -1,0 +1,6 @@
+from repro.training import checkpoint, optim
+from repro.training.optim import AdamWConfig, AdamWState, init_state
+from repro.training.train import make_eval_step, make_loss_fn, make_train_step
+
+__all__ = ["checkpoint", "optim", "AdamWConfig", "AdamWState", "init_state",
+           "make_eval_step", "make_loss_fn", "make_train_step"]

@@ -1,0 +1,59 @@
+"""Checkpointing: flat path-keyed npz save/restore.
+
+The same path scheme (``layers/attn/wq`` …) is used by the instance's
+weight-unit catalog and the shared-weights registry loader, so a saved
+checkpoint doubles as the "backing file" for file-backed (shared) weights
+(§3.5 of the paper: clean pages are re-read from their file, never swapped).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.instance import _path_str
+
+
+def flatten_params(params) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return {_path_str(p): np.asarray(v) for p, v in flat}
+
+
+def save(path: str, params, step: int = 0, extra: Optional[dict] = None
+         ) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = flatten_params(params)
+    np.savez(path, **{k: v for k, v in flat.items()})
+    meta = {"step": step, "paths": sorted(flat),
+            "extra": extra or {}}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def restore(path: str, like_params) -> Tuple[Any, int]:
+    """Restore into the structure of ``like_params`` (paths must match)."""
+    flat = load_flat(path)
+    leaves_like = jax.tree_util.tree_flatten_with_path(like_params)
+    paths = [_path_str(p) for p, _ in leaves_like[0]]
+    missing = [p for p in paths if p not in flat]
+    if missing:
+        raise KeyError(f"checkpoint missing paths: {missing[:5]}...")
+    leaves = [flat[p] for p in paths]
+    params = jax.tree_util.tree_unflatten(leaves_like[1], leaves)
+    base = path[:-4] if path.endswith(".npz") else path
+    meta_path = base + ".meta.json"
+    step = 0
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            step = json.load(f).get("step", 0)
+    return params, step

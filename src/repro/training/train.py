@@ -1,0 +1,50 @@
+"""Training step: loss -> grads -> AdamW update, remat-aware, pjit-ready.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with explicit in/out shardings (launch/dryrun.py) or for plain
+CPU execution in the smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.training import optim
+
+
+def make_loss_fn(cfg, *, remat: bool = True):
+    def loss(params, batch):
+        return model.loss_fn(
+            params, cfg, batch["tokens"], batch["labels"],
+            embeds=batch.get("embeds"), enc_frames=batch.get("frames"),
+            remat=remat)
+    return loss
+
+
+def make_train_step(cfg, opt_cfg: optim.AdamWConfig, *, remat: bool = True):
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = optim.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, "ce": aux["ce"], "lb_loss": aux["lb_loss"],
+                   **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    loss_fn = make_loss_fn(cfg, remat=False)
+
+    def eval_step(params, batch):
+        loss, aux = loss_fn(params, batch)
+        return {"loss": loss, **aux}
+
+    return eval_step

@@ -1,0 +1,69 @@
+"""Sharding context: model code stays pure; distribution is injected.
+
+``ShardingRules`` maps *logical* activation names to ``PartitionSpec``s over
+the (possibly arch-refined) mesh.  Model code calls ``constrain(x, name)`` at
+a handful of cut points; outside a rules context this is the identity, so
+unit tests and the CPU serving engine never touch jax device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, specs: dict):
+        self.mesh = mesh
+        self.specs = dict(specs)
+
+    def spec(self, name: str) -> Optional[P]:
+        return self.specs.get(name)
+
+    def sharding(self, name: str) -> Optional[NamedSharding]:
+        s = self.spec(name)
+        return NamedSharding(self.mesh, s) if s is not None else None
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, name: str):
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(name)
+    if spec is None:
+        return x
+    if len(spec) == x.ndim + 1:
+        # decode-path activations drop the sequence axis (axis 1):
+        # (B, S, ...) names apply to (B, ...) values with S removed
+        spec = P(*((spec[0],) + tuple(spec[2:])))
+    if len(spec) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis under the current rules (1 when absent)."""
+    rules = current_rules()
+    if rules is None or name not in rules.mesh.shape:
+        return 1
+    return rules.mesh.shape[name]

@@ -1,0 +1,37 @@
+import os
+import shutil
+
+import pytest
+
+# Tests must see ONE device (the dry-run alone uses 512 placeholders).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run XLA_FLAGS globally"
+
+
+@pytest.fixture()
+def spool_dir(tmp_path):
+    d = tmp_path / "spool"
+    d.mkdir()
+    yield str(d)
+    shutil.rmtree(d, ignore_errors=True)
+
+
+@pytest.fixture(scope="session")
+def tiny_factory():
+    """factory(arch) -> (cfg, params) with per-arch caching."""
+    import jax
+    from repro.configs import get_config, tiny_config
+    from repro.models import model
+
+    cache = {}
+
+    def factory(arch_key: str):
+        if arch_key not in cache:
+            cfg = tiny_config(get_config(arch_key))
+            params = model.init_params(jax.random.PRNGKey(0), cfg)
+            cache[arch_key] = (cfg, params)
+        cfg, params = cache[arch_key]
+        return cfg, jax.tree.map(lambda x: x.copy(), params)
+
+    return factory

@@ -1,0 +1,113 @@
+"""Bitmap Page Allocator (§3.3, Fig. 4): unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitmap_alloc import (PAGES_PER_BLOCK, USABLE_PER_BLOCK,
+                                     BitmapPageAllocator)
+
+
+def test_control_page_reserved():
+    a = BitmapPageAllocator()
+    pages = a.alloc_many(USABLE_PER_BLOCK)
+    # page 0 of block 0 (the control page) must never be handed out
+    assert 0 not in pages
+    assert len(set(pages)) == USABLE_PER_BLOCK
+    a.check_invariants()
+
+
+def test_o2_lookup_order():
+    """Allocation fills the lowest free offset first (ffs on L1 then L2)."""
+    a = BitmapPageAllocator()
+    assert a.alloc() == 1
+    assert a.alloc() == 2
+    a.free(1)
+    assert a.alloc() == 1          # lowest free bit again
+
+
+def test_block_growth_and_reclaim():
+    a = BitmapPageAllocator()
+    pages = a.alloc_many(USABLE_PER_BLOCK + 1)   # spills into a 2nd block
+    assert a.committed_blocks == 2
+    for p in pages:
+        a.free(p)
+    # both fully-free blocks returned to the global heap ("madvise")
+    assert a.committed_blocks == 0
+    assert a.stats["blocks_released"] == 2
+    a.check_invariants()
+
+
+def test_refcount_cow():
+    a = BitmapPageAllocator()
+    p = a.alloc()
+    assert a.refcount(p) == 1
+    a.incref(p)
+    assert a.refcount(p) == 2
+    assert a.decref(p) is False      # still shared
+    assert a.decref(p) is True       # now freed
+    with pytest.raises(ValueError):
+        a.refcount(p)
+
+
+def test_memory_limit():
+    a = BitmapPageAllocator(max_blocks=1)
+    a.alloc_many(USABLE_PER_BLOCK)
+    with pytest.raises(MemoryError):
+        a.alloc()
+
+
+def test_free_list_no_metadata_in_pages():
+    """The reclamation insight: freeing any subset leaves a valid structure
+    (no free-list pointers live inside data pages)."""
+    a = BitmapPageAllocator()
+    pages = a.alloc_many(2000)
+    for p in pages[::2]:
+        a.free(p)
+    a.check_invariants()
+    # reallocation reuses freed pages before growing
+    grown = a.stats["blocks_grown"]
+    a.alloc_many(500)
+    assert a.stats["blocks_grown"] == grown
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "incref",
+                                           "decref"]),
+                          st.integers(0, 50)), max_size=200))
+def test_property_invariants(ops):
+    """Random op sequences never break the L1/L2/refcount invariants."""
+    a = BitmapPageAllocator(max_blocks=4)
+    live = []
+    for kind, i in ops:
+        if kind == "alloc":
+            try:
+                live.append(a.alloc())
+            except MemoryError:
+                pass
+        elif live:
+            p = live[i % len(live)]
+            if kind == "free":
+                a.free(p)
+                live.remove(p)
+            elif kind == "incref":
+                a.incref(p)
+                live.append(p)
+            elif kind == "decref":
+                if a.decref(p):
+                    # freed entirely: drop every alias
+                    live = [q for q in live if q != p]
+                else:
+                    live.remove(p)
+    a.check_invariants()
+    assert a.allocated_pages == len(set(live))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 3 * USABLE_PER_BLOCK))
+def test_property_alloc_n_unique(n):
+    a = BitmapPageAllocator()
+    pages = a.alloc_many(n)
+    assert len(set(pages)) == n
+    assert a.allocated_pages == n
+    assert a.committed_blocks == -(-n // USABLE_PER_BLOCK)
+    a.check_invariants()

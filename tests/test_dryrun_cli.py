@@ -1,0 +1,44 @@
+"""End-to-end launch-layer guard: the dry-run CLI must lower+compile a
+real case in its own process (where it owns XLA_FLAGS and 512 placeholder
+devices) and emit a well-formed roofline record."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_cli_single_case(tmp_path):
+    out = tmp_path / "case.jsonl"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "mamba2-130m", "--shape", "decode_32k", "--mesh", "single",
+         "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(),
+        timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["bytes_per_device"] > 0
+    assert rec["memory_s"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_render_roofline_compare(tmp_path, capsys):
+    from benchmarks import render_roofline
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    row = {"arch": "x", "shape": "s", "status": "ok", "compute_s": 1.0,
+           "memory_s": 4.0, "collective_s": 2.0, "bottleneck": "memory",
+           "useful_flops_frac": 0.5, "bytes_per_device": 2**30}
+    a.write_text(json.dumps(row) + "\n")
+    row2 = dict(row, memory_s=1.0, collective_s=0.5, bottleneck="memory")
+    b.write_text(json.dumps(row2) + "\n")
+    render_roofline.main([str(a), str(b), "--compare"])
+    out = capsys.readouterr().out
+    assert "4.00x" in out          # dominant 4.0 -> 1.0

@@ -1,0 +1,77 @@
+"""launch/specs unit behaviour that needs no devices: shape applicability,
+decode windows, REAP recorder semantics, roofline model flops."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.core.reap import ReapRecorder
+from repro.launch import analysis
+from repro.launch.specs import applicable, decode_window
+
+
+def test_whisper_skips_long_only():
+    cfg = get_config("whisper-large-v3")
+    assert not applicable(cfg, get_shape("long_500k"))
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        assert applicable(cfg, get_shape(s))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_context_policy(arch):
+    """long_500k: SSM/hybrid run native; dense archs run the
+    sliding-window variant (ring cache = window); whisper skips."""
+    cfg = get_config(arch)
+    shape = get_shape("long_500k")
+    if cfg.long_context_mode == "skip":
+        assert arch == "whisper-large-v3"
+        return
+    window, cache_len = decode_window(cfg, shape)
+    if cfg.attention == "none":
+        assert window is None and cache_len == shape.seq_len
+    else:
+        assert window == cfg.sliding_window
+        assert cache_len == min(cfg.sliding_window, shape.seq_len)
+
+
+def test_decode_32k_is_full_attention():
+    cfg = get_config("yi-6b")
+    window, cache_len = decode_window(cfg, get_shape("decode_32k"))
+    assert window is None and cache_len == 32_768
+
+
+def test_reap_recorder_union_semantics():
+    r = ReapRecorder()
+    r.start()
+    r.record(("w", "a", -1))
+    assert r.stop() == frozenset({("w", "a", -1)})
+    r.start()
+    r.record(("kv", "s", 0, 1))
+    # union across invocations (REAP's stable-working-set observation)
+    assert r.stop() == frozenset({("w", "a", -1), ("kv", "s", 0, 1)})
+    r.record(("x",))                       # not recording -> ignored
+    assert ("x",) not in r.working_set
+    r.forget()
+    assert not r.working_set
+
+
+@pytest.mark.parametrize("arch,shape,expect_active", [
+    ("deepseek-v2-236b", "train_4k", True),     # MoE: active << total
+    ("llama3.2-3b", "train_4k", False),
+])
+def test_model_flops_moe_uses_active(arch, shape, expect_active):
+    cfg = get_config(arch)
+    f = analysis.model_flops(cfg, get_shape(shape))
+    tokens = get_shape(shape).global_batch * get_shape(shape).seq_len
+    assert f == 6.0 * cfg.active_param_count() * tokens
+    if expect_active:
+        assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+def test_roofline_bottleneck_classification():
+    r = analysis.Roofline("a", "s", "single", 256,
+                          device_flops=197e12,          # 1 s compute
+                          device_bytes=819e9 * 2,       # 2 s memory
+                          coll_bytes={"all-reduce": int(50e9 * 3)})  # 3 s
+    assert r.bottleneck == "collective"
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(3.0)

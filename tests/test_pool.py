@@ -1,0 +1,71 @@
+"""Shared page pool: ownership, COW sharing, PSS accounting, madvise."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitmap_alloc import PAGES_PER_BLOCK
+from repro.core.pool import PagePool
+
+
+def test_write_read_roundtrip():
+    pool = PagePool(page_elems=64, capacity_pages=4 * PAGES_PER_BLOCK)
+    pages = pool.alloc(3, "t0")
+    data = np.arange(3 * 64, dtype=np.float32).reshape(3, 64)
+    pool.write(pages, data)
+    np.testing.assert_array_equal(pool.read(pages), data)
+
+
+def test_cow_share_and_pss():
+    pool = PagePool(page_elems=64)
+    pages = pool.alloc(4, "a")
+    pool.share(pages[:2], "b")               # b COW-shares 2 pages
+    pb = pool.page_bytes
+    assert pool.rss_bytes("a") == 4 * pb
+    assert pool.rss_bytes("b") == 2 * pb
+    assert pool.pss_bytes("a") == pytest.approx(2 * pb + 2 * pb / 2)
+    assert pool.pss_bytes("b") == pytest.approx(2 * pb / 2)
+    # freeing a's handle keeps shared pages alive for b
+    assert pool.free(pages[:2], "a") == 0
+    np.testing.assert_array_equal(pool.read(pages[:2]),
+                                  np.zeros((2, 64), np.float32))
+    assert pool.free(pages[:2], "b") == 2
+
+
+def test_block_release_returns_memory():
+    pool = PagePool(page_elems=8, capacity_pages=8 * PAGES_PER_BLOCK)
+    pages = pool.alloc(PAGES_PER_BLOCK + 5, "t")
+    committed = pool.committed_bytes
+    pool.free_owner("t")
+    assert pool.committed_bytes == 0          # blocks madvise'd back
+    assert pool.committed_bytes < committed
+
+
+def test_capacity_enforced():
+    pool = PagePool(page_elems=8, capacity_pages=PAGES_PER_BLOCK)
+    pool.alloc(PAGES_PER_BLOCK - 1, "t")      # minus control page
+    with pytest.raises(MemoryError):
+        pool.alloc(2, "t")
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["alloc", "free", "share"]), max_size=60))
+def test_property_used_never_exceeds_committed(ops):
+    pool = PagePool(page_elems=8, capacity_pages=4 * PAGES_PER_BLOCK)
+    owners = {"a": [], "b": []}
+    rng = np.random.default_rng(0)
+    for op in ops:
+        o = "a" if rng.random() < 0.5 else "b"
+        if op == "alloc":
+            try:
+                owners[o] += pool.alloc(int(rng.integers(1, 9)), o)
+            except MemoryError:
+                pass
+        elif op == "free" and owners[o]:
+            n = int(rng.integers(1, len(owners[o]) + 1))
+            pool.free(owners[o][:n], o)
+            owners[o] = owners[o][n:]
+        elif op == "share" and owners["a"]:
+            pool.share(owners["a"][:1], "b")
+            owners["b"] += owners["a"][:1]
+    assert pool.used_bytes <= pool.committed_bytes
+    pool.allocator.check_invariants()

@@ -1,0 +1,117 @@
+"""Sharding-spec validity without 512 devices: every spec must evenly
+divide its leaf on the refined production-mesh *shape* (pure math — the
+dry-run proves end-to-end lowering, this catches regressions fast)."""
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch import sharding as shd
+from repro.models import model
+
+
+class FakeMesh:
+    """Shape-only stand-in for the refined production mesh."""
+
+    def __init__(self, cfg, multi_pod=False):
+        self.shape = {"data": 16, "tp": cfg.tp, "sp": cfg.sp}
+        if multi_pod:
+            self.shape = {"pod": 2, **self.shape}
+        self.axis_names = tuple(self.shape)
+
+    @property
+    def devices(self):
+        raise AssertionError("spec test must not touch devices")
+
+
+def _check_specs(tree, specs, mesh):
+    flat_v = jax.tree.leaves(tree)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: x is None or
+                             hasattr(x, "index"))
+    assert len(flat_v) == len(flat_s)
+    for v, spec in zip(flat_v, flat_s):
+        if spec is None:
+            continue
+        for dim, entry in zip(v.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape.get(a, 1)
+            assert dim % n == 0, (spec, v.shape, dim, n)
+
+
+@pytest.mark.parametrize("multi_pod", [False, True])
+@pytest.mark.parametrize("mode", ["train", "prefill", "decode"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divide(arch, mode, multi_pod):
+    cfg = get_config(arch)
+    assert cfg.tp * cfg.sp == 16, f"{arch}: tp*sp must equal model axis"
+    mesh = FakeMesh(cfg, multi_pod)
+    tree = jax.eval_shape(lambda k: model.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+    specs = shd.params_specs(tree, cfg, mode, mesh)
+    _check_specs(tree, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_expert_banks_are_expert_parallel(arch):
+    """MoE expert banks must shard E over data — they cannot replicate."""
+    cfg = get_config(arch)
+    if cfg.moe is None:
+        pytest.skip("dense")
+    mesh = FakeMesh(cfg)
+    tree = jax.eval_shape(lambda k: model.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+    import jax.tree_util as jtu
+    from repro.core.instance import _path_str
+    flat = jtu.tree_flatten_with_path(tree)[0]
+    found = 0
+    for p, v in flat:
+        path = _path_str(p)
+        if "/moe/w_" in path and "/shared/" not in path \
+                and "/dense/" not in path:
+            spec = shd.sanitize_spec(
+                shd.param_spec(path, v.ndim, cfg, "decode", mesh),
+                v.shape, mesh)
+            assert spec[1] == "data", (path, spec)
+            found += 1
+    assert found == 3
+
+
+@pytest.mark.parametrize("batch,expected", [
+    (256, ("data", "sp")), (32, ("data", "sp")), (128, ("data", "sp")),
+    (1, None), (8, ("data",)),
+])
+def test_batch_axes_prefix(batch, expected):
+    cfg = get_config("llama3.2-3b")          # tp=8, sp=2
+    mesh = FakeMesh(cfg)
+    got = shd.batch_axes(mesh, batch)
+    if batch == 8:
+        assert got is None or got == ("data",)
+    else:
+        assert got == expected, (batch, got)
+
+
+def test_batch_axes_never_overdivide():
+    cfg = get_config("hymba-1.5b")           # sp=16
+    mesh = FakeMesh(cfg, multi_pod=True)     # pod2 x data16 x sp16
+    assert shd.batch_axes(mesh, 256) == ("pod", "data")   # 512 ∤ 256
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_activation_rules_no_duplicate_axes(arch):
+    cfg = get_config(arch)
+    mesh = FakeMesh(cfg)
+    for shape in SHAPES.values():
+        mode = {"train": "train", "prefill": "prefill",
+                "decode": "decode"}[shape.kind]
+        rules = shd.activation_rules(cfg, mode, mesh, shape.global_batch)
+        for name, spec in rules.items():
+            seen = []
+            for entry in tuple(spec):
+                if entry is None:
+                    continue
+                for a in (entry if isinstance(entry, tuple) else (entry,)):
+                    assert a not in seen, (arch, shape.name, name, spec)
+                    seen.append(a)

@@ -1,0 +1,70 @@
+"""Container state machine (Fig. 3): exact transition graph."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.state import (SERVABLE_STATES, TRANSITIONS, ContainerState,
+                              Event, InvalidTransition, StateMachine)
+
+S, E = ContainerState, Event
+
+
+def test_paper_lifecycle():
+    """The full numbered path of Fig. 3: ①②③④⑦⑧⑥⑧⑨⑤."""
+    sm = StateMachine()
+    assert sm.fire(E.COLD_START) == S.WARM          # ①
+    assert sm.fire(E.REQUEST) == S.RUNNING          # ②
+    assert sm.fire(E.FINISH) == S.WARM              # ③
+    assert sm.fire(E.SIGSTOP) == S.HIBERNATE        # ④
+    assert sm.fire(E.REQUEST) == S.HIBERNATE_RUNNING  # ⑦
+    assert sm.fire(E.FINISH) == S.WOKEN             # ⑧
+    assert sm.fire(E.REQUEST) == S.HIBERNATE_RUNNING  # ⑥
+    assert sm.fire(E.FINISH) == S.WOKEN             # ⑧
+    assert sm.fire(E.SIGSTOP) == S.HIBERNATE        # ⑨
+    assert sm.fire(E.SIGCONT) == S.WOKEN            # ⑤
+    tags = [h[4] for h in sm.history]
+    assert tags == ["(1)", "(2)", "(3)", "(4)", "(7)", "(8)", "(6)",
+                    "(8)", "(9)", "(5)"]
+
+
+def test_invalid_transitions_raise():
+    sm = StateMachine()
+    with pytest.raises(InvalidTransition):
+        sm.fire(E.REQUEST)                # no request before cold start
+    sm.fire(E.COLD_START)
+    with pytest.raises(InvalidTransition):
+        sm.fire(E.SIGCONT)                # SIGCONT only from hibernate
+    sm.fire(E.REQUEST)
+    with pytest.raises(InvalidTransition):
+        sm.fire(E.SIGSTOP)                # cannot deflate mid-request
+
+
+def test_running_states_not_servable():
+    assert S.RUNNING not in SERVABLE_STATES
+    assert S.HIBERNATE_RUNNING not in SERVABLE_STATES
+    assert {S.WARM, S.HIBERNATE, S.WOKEN} <= SERVABLE_STATES
+
+
+def test_hooks_fire():
+    sm = StateMachine()
+    seen = []
+    sm.on(E.SIGSTOP, lambda m: seen.append(m.state))
+    sm.fire(E.COLD_START)
+    sm.fire(E.SIGSTOP)
+    assert seen == [S.HIBERNATE]
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.lists(st.sampled_from(list(Event)), max_size=40))
+def test_property_never_leaves_graph(events):
+    """Arbitrary event streams: every accepted transition is in the paper's
+    graph; every rejected one raises and leaves state unchanged."""
+    sm = StateMachine()
+    for ev in events:
+        before = sm.state
+        if (before, ev) in TRANSITIONS:
+            after = sm.fire(ev)
+            assert after == TRANSITIONS[(before, ev)][0]
+        else:
+            with pytest.raises(InvalidTransition):
+                sm.fire(ev)
+            assert sm.state == before

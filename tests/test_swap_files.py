@@ -1,0 +1,77 @@
+"""Per-sandbox swap files (§3.4): roundtrips, io accounting, deletion."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.swap import ReapFile, SwapFile
+
+
+def test_swapfile_roundtrip(spool_dir):
+    f = SwapFile(f"{spool_dir}/a.swap")
+    arrs = {("w", "x", -1): np.arange(12, dtype=np.float32).reshape(3, 4),
+            ("kv", "s", 0, 1): np.ones((7,), np.int64)}
+    for k, a in arrs.items():
+        f.write_unit(k, a)
+    for k, a in arrs.items():
+        np.testing.assert_array_equal(f.read_unit(k), a)
+    assert f.reads == 2          # one random read per unit
+    f.delete()
+    assert not os.path.exists(f"{spool_dir}/a.swap")
+
+
+def test_swapfile_overwrite_reuses_extent(spool_dir):
+    f = SwapFile(f"{spool_dir}/b.swap")
+    f.write_unit("k", np.zeros(64, np.float32))
+    size = f.file_bytes
+    f.write_unit("k", np.ones(32, np.float32))   # smaller: reuse extent
+    assert f.file_bytes == size
+    np.testing.assert_array_equal(f.read_unit("k"), np.ones(32, np.float32))
+    f.delete()
+
+
+def test_reapfile_batch_is_one_read(spool_dir):
+    f = ReapFile(f"{spool_dir}/c.reap")
+    items = [((i,), np.full((16,), i, np.float32)) for i in range(10)]
+    f.write_batch(items)
+    assert f.writes == 1                       # pwritev: one batch write
+    out = f.read_batch()
+    assert f.reads == 1                        # preadv: one batch read
+    for k, a in items:
+        np.testing.assert_array_equal(out[k], a)
+    # a REAP file still serves random reads (pagefault-mode wake)
+    np.testing.assert_array_equal(f.read_unit((3,)), items[3][1])
+    f.delete()
+
+
+def test_reap_rewrite_replaces_working_set(spool_dir):
+    f = ReapFile(f"{spool_dir}/d.reap")
+    f.write_batch([("a", np.zeros(8, np.float32))])
+    f.write_batch([("b", np.ones(8, np.float32))])
+    assert "a" not in f.extents
+    assert set(f.read_batch()) == {"b"}
+    f.delete()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 30),
+                          st.integers(1, 64)), min_size=1, max_size=20,
+                unique_by=lambda t: t[0]))
+def test_property_reap_offsets_sequential(tmp_path_factory, items):
+    """REAP extents are contiguous ascending — the batched sequential
+    layout that makes the swap-in one disk pass."""
+    d = tmp_path_factory.mktemp("reap")
+    f = ReapFile(str(d / "x.reap"))
+    arrs = [((k,), np.random.default_rng(k).standard_normal(n)
+             .astype(np.float32)) for k, n in items]
+    f.write_batch(arrs)
+    offs = [f.extents[k].offset for k, _ in arrs]
+    sizes = [f.extents[k].nbytes for k, _ in arrs]
+    assert offs[0] == 0
+    for i in range(1, len(offs)):
+        assert offs[i] == offs[i - 1] + sizes[i - 1]
+    out = f.read_batch()
+    for k, a in arrs:
+        np.testing.assert_array_equal(out[k], a)
+    f.delete()

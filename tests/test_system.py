@@ -1,0 +1,122 @@
+"""Whole-system scenario: the paper's deployment story on one node.
+
+Multiple tenants, a platform with keep-alive policy, memory pressure that
+deflates instead of evicting, predictive wake, density accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.core.metrics import memory_report
+from repro.core.state import ContainerState
+from repro.serving import Platform, PlatformPolicy, Request, ServingEngine
+
+S = ContainerState
+
+
+@pytest.fixture()
+def platform(tiny_factory, spool_dir):
+    mgr = InstanceManager(
+        ManagerConfig(spool_dir=spool_dir, wake_mode="reap"), tiny_factory)
+    eng = ServingEngine(mgr)
+    pol = PlatformPolicy(keep_warm_s=0.0)     # tick() deflates immediately
+    arch_of = {"fn-a": "llama3.2-3b", "fn-b": "mamba2-130m",
+               "fn-c": "phi4-mini-3.8b"}
+    return Platform(eng, pol, arch_of), mgr
+
+
+def test_platform_cold_then_hibernate_then_wake(platform):
+    plat, mgr = platform
+    plat.submit(Request("fn-a", "s0", np.asarray([1, 2, 3]),
+                        max_new_tokens=2))
+    [r1] = plat.step()
+    assert r1.state_before == "warm"          # fresh cold start
+    assert mgr.instances["fn-a"].state == S.WARM
+    plat.tick()                               # keep-alive expired -> deflate
+    assert mgr.instances["fn-a"].state == S.HIBERNATE
+    plat.submit(Request("fn-a", "s1", np.asarray([4]), max_new_tokens=2))
+    [r2] = plat.step()
+    assert r2.state_before == "hibernate" and r2.state_after == "woken"
+
+
+def test_density_hibernate_packs_more_tenants(platform):
+    """The paper's headline: deflated tenants co-reside where warm ones
+    would not fit."""
+    plat, mgr = platform
+    for fn in ("fn-a", "fn-b", "fn-c"):
+        plat.submit(Request(fn, "s0", np.asarray([1, 2]), max_new_tokens=2))
+    plat.step()
+    warm_total = mgr.resident_bytes()
+    budget = int(warm_total * 0.4)            # < the 3 warm tenants
+    deflated = mgr.handle_memory_pressure(budget)
+    assert deflated                           # some tenants deflated...
+    assert len(mgr.instances) == 3            # ...but NONE evicted
+    assert mgr.resident_bytes() <= budget
+    # all three still servable without a cold start
+    for fn in ("fn-a", "fn-b", "fn-c"):
+        assert mgr.instances[fn].state in (S.WARM, S.HIBERNATE, S.WOKEN)
+
+
+def test_predictive_wake(platform):
+    plat, mgr = platform
+    plat.policy.predictive_wake = True
+    plat.submit(Request("fn-b", "s0", np.asarray([5]), max_new_tokens=1))
+    plat.step()
+    plat.tick()
+    assert mgr.instances["fn-b"].state == S.HIBERNATE
+    # ⑤: queueing a request wakes the instance before processing
+    plat.submit(Request("fn-b", "s1", np.asarray([6]), max_new_tokens=1))
+    assert mgr.instances["fn-b"].state == S.WOKEN
+    [r] = plat.step()
+    assert r.state_before == "woken"
+
+
+def test_classic_mode_evicts(tiny_factory, spool_dir):
+    """deflate_instead_of_evict=False reproduces the baseline platform the
+    paper compares against (eviction -> cold start)."""
+    mgr = InstanceManager(ManagerConfig(spool_dir=spool_dir), tiny_factory)
+    eng = ServingEngine(mgr)
+    plat = Platform(eng, PlatformPolicy(keep_warm_s=0.0,
+                                        deflate_instead_of_evict=False),
+                    {"fn-a": "llama3.2-3b"})
+    plat.submit(Request("fn-a", "s0", np.asarray([1]), max_new_tokens=1))
+    plat.step()
+    plat.tick()
+    assert "fn-a" not in mgr.instances        # evicted
+    plat.submit(Request("fn-a", "s1", np.asarray([2]), max_new_tokens=1))
+    [r] = plat.step()
+    assert ("cold_start", ) in {(e[1],) for e in plat.log}
+
+
+def test_pss_accounting_states(platform):
+    plat, mgr = platform
+    plat.submit(Request("fn-a", "s0", np.asarray([1, 2]), max_new_tokens=2))
+    plat.step()
+    inst = mgr.instances["fn-a"]
+    warm = memory_report(inst, mgr.shared)
+    mgr.deflate("fn-a")
+    hib = memory_report(inst, mgr.shared)
+    assert hib.pss_total < warm.pss_total
+    assert hib.state == "hibernate"
+    assert hib.weight_private == 0
+    assert hib.metadata > 0                   # kept-alive host objects
+
+
+def test_anticipatory_wake(platform):
+    """⑤ control-plane prediction: a periodic tenant is woken before its
+    next request arrives (EWMA inter-arrival model)."""
+    plat, mgr = platform
+    plat.policy.anticipate_margin_s = 0.5
+    # establish a ~1s cadence with virtual clocks
+    for i, t in enumerate((100.0, 101.0, 102.0)):
+        plat.submit(Request("fn-b", f"s{i}", np.asarray([1 + i]),
+                            max_new_tokens=1, close_session=True), now=t)
+        plat.step()
+    mgr.instances["fn-b"].last_used = 102.0     # align to the virtual clock
+    plat.tick(now=102.1)                 # keep-alive 0 -> deflate
+    assert mgr.instances["fn-b"].state == S.HIBERNATE
+    plat.tick(now=102.2)                 # next due ~103.0: not yet
+    assert mgr.instances["fn-b"].state == S.HIBERNATE
+    plat.tick(now=102.6)                 # within 0.5s margin -> wake
+    assert mgr.instances["fn-b"].state == S.WOKEN
+    assert any(e[1] == "anticipated_wake" for e in plat.log)
