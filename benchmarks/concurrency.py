@@ -1,0 +1,176 @@
+"""Concurrent multi-tenant serving: the paper's Fig. 3 scenario under load.
+
+Three measurements:
+
+  * tenants x workers — p50/p99 end-to-end latency of a mixed trace
+    (every tenant hibernated between bursts) as the AsyncPlatform's
+    worker pool grows.  Different tenants inflate and serve in parallel.
+  * wake storm — N threads submit to ONE hibernating tenant at once; the
+    wake-storm guard must perform exactly one batched inflate (REAP read)
+    no matter how many requests race.
+  * vectored fault IO — the same working set restored unit-by-unit
+    (one `pread` per unit) vs through the coalesced `preadv` path; the
+    vectored path must issue >= 4x fewer syscalls.
+
+`python -m benchmarks.concurrency [--quick]`
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Table, fmt_ms, make_engine, request_for
+from repro.core.metrics import percentile
+from repro.core.swap import SwapFile
+from repro.serving import AsyncPlatform, PlatformPolicy, Request
+
+TENANTS = ["chat", "search", "stream", "batch"]
+ARCH = "llama3.2-3b"
+
+
+def _prepare(spool: str):
+    """Cold-start every tenant, record its working set, deflate it."""
+    eng, mgr = make_engine(spool)
+    for i, t in enumerate(TENANTS):
+        eng.start_instance(t, ARCH)
+        cfg = mgr.instances[t].cfg
+        eng.record_sample(t, request_for(cfg, t, "probe", 6, 2, seed=i,
+                                         close_session=True))
+        mgr.deflate(t)
+    return eng, mgr
+
+
+def bench_workers(spool: str, n_requests: int):
+    """Same trace served with 1 worker vs len(TENANTS) workers."""
+    rows = []
+    for workers in (1, len(TENANTS)):
+        eng, mgr = _prepare(f"{spool}/w{workers}")
+        arch_of = {t: ARCH for t in TENANTS}
+        plat = AsyncPlatform(eng, PlatformPolicy(keep_warm_s=1e9),
+                             arch_of, workers=workers)
+        cfgs = {t: mgr.instances[t].cfg for t in TENANTS}
+        lats = []
+        t0 = time.monotonic()
+        with plat:
+            futs = []
+            for i in range(n_requests):
+                t = TENANTS[i % len(TENANTS)]
+                futs.append(plat.submit(request_for(
+                    cfgs[t], t, f"s{i}", 6, 2, seed=i)))
+            for f in futs:
+                r = f.result(timeout=300)
+                lats.append(r.spans["e2e"])
+        wall = time.monotonic() - t0
+        rows.append((workers, percentile(lats, 50), percentile(lats, 99),
+                     wall))
+        for t in TENANTS:
+            mgr.evict(t)
+    return rows
+
+
+def bench_wake_storm(spool: str, n_threads: int = 8):
+    """N threads hit one HIBERNATE tenant concurrently."""
+    eng, mgr = _prepare(f"{spool}/storm")
+    tenant = TENANTS[0]
+    inst = mgr.instances[tenant]
+    reads_before = inst.reap_file.reads
+    wakes_before = mgr.wakes_performed
+    cfg = inst.cfg
+    arch_of = {t: ARCH for t in TENANTS}
+    plat = AsyncPlatform(eng, PlatformPolicy(keep_warm_s=1e9), arch_of,
+                         workers=n_threads)
+    barrier = threading.Barrier(n_threads)
+    futs = [None] * n_threads
+
+    def submitter(i):
+        barrier.wait()
+        futs[i] = plat.submit(request_for(cfg, tenant, f"storm{i}", 4, 1,
+                                          seed=i))
+
+    with plat:
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for f in futs:
+            f.result(timeout=300)
+    return {"threads": n_threads,
+            "inflates": mgr.wakes_performed - wakes_before,
+            "reap_reads": inst.reap_file.reads - reads_before,
+            "deduped": mgr.wakes_deduped}
+
+
+def bench_vectored_io(spool: str, n_units: int = 512):
+    """Per-unit random faulting vs the coalesced preadv path."""
+    rng = np.random.default_rng(0)
+    items = [((i,), rng.standard_normal(1024).astype(np.float32))
+             for i in range(n_units)]
+    f = SwapFile(f"{spool}/vec.swap")
+    f.write_units(items)
+    keys = [k for k, _ in items]
+
+    r0 = f.reads
+    t0 = time.monotonic()
+    for k in keys:
+        f.read_unit(k)
+    t_unit = time.monotonic() - t0
+    unit_syscalls = f.reads - r0
+
+    r0 = f.reads
+    t0 = time.monotonic()
+    out = f.read_units(keys)
+    t_vec = time.monotonic() - t0
+    vec_syscalls = f.reads - r0
+    for k, a in items:
+        np.testing.assert_array_equal(out[k], a)
+    f.delete()
+    return {"units": n_units, "unit_syscalls": unit_syscalls,
+            "vec_syscalls": vec_syscalls, "t_unit": t_unit, "t_vec": t_vec}
+
+
+def main(quick: bool = False):
+    spool = "/tmp/bench_concurrency"
+    n_requests = 8 if quick else 16
+
+    rows = bench_workers(spool, n_requests)
+    storm = bench_wake_storm(spool)
+    vec = bench_vectored_io(spool)
+
+    tab = Table("concurrent serving (tenants x workers, wake storm, "
+                "vectored IO)",
+                ["metric", "value"])
+    for workers, p50, p99, wall in rows:
+        tab.add(f"{len(TENANTS)} tenants / {workers} worker(s) p50 (ms)",
+                fmt_ms(p50))
+        tab.add(f"{len(TENANTS)} tenants / {workers} worker(s) p99 (ms)",
+                fmt_ms(p99))
+        tab.add(f"{len(TENANTS)} tenants / {workers} worker(s) wall (ms)",
+                fmt_ms(wall))
+    tab.add(f"wake storm ({storm['threads']} threads) inflates",
+            storm["inflates"])
+    tab.add("wake storm REAP reads", storm["reap_reads"])
+    tab.add("wake storm deduped wakes", storm["deduped"])
+    tab.add(f"fault {vec['units']} units per-unit syscalls",
+            vec["unit_syscalls"])
+    tab.add("fault vectored (preadv) syscalls", vec["vec_syscalls"])
+    ratio = vec["unit_syscalls"] / max(1, vec["vec_syscalls"])
+    tab.add("syscall reduction", f"{ratio:.0f}x")
+    print(tab.render())
+
+    checks = [
+        ("wake storm performs exactly 1 batched inflate",
+         storm["inflates"] == 1),
+        ("storm REAP file read once", storm["reap_reads"] <= 1),
+        ("vectored fault >=4x fewer syscalls", ratio >= 4.0),
+    ]
+    return tab, checks
+
+
+if __name__ == "__main__":
+    import sys
+    checks = main(quick="--quick" in sys.argv)[1]
+    sys.exit(0 if all(all(c[1:]) for c in checks) else 1)

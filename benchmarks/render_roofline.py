@@ -16,9 +16,10 @@ import sys
 
 def load(fn):
     out = {}
-    for line in open(fn):
-        r = json.loads(line)
-        out[(r["arch"], r["shape"])] = r
+    with open(fn) as f:
+        for line in f:
+            r = json.loads(line)
+            out[(r["arch"], r["shape"])] = r
     return out
 
 

@@ -6,6 +6,8 @@
   swap_throughput  — §3.4 random-vs-sequential storage asymmetry
   sharing          — §3.5 runtime-binary (base-weight) sharing
   allocator        — §3.3 bitmap allocator vs free-list baseline
+  concurrency      — AsyncPlatform: tenants x workers, wake storms,
+                     vectored fault IO
   roofline         — brief: per-(arch x shape x mesh) roofline table
 
 `python -m benchmarks.run [--quick] [--only NAME]`
@@ -25,7 +27,7 @@ def main(argv=None):
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import (allocator, density, latency_states,
+    from benchmarks import (allocator, concurrency, density, latency_states,
                             memory_states, reap_ablation, roofline,
                             sharing, swap_throughput)
     suites = [
@@ -36,6 +38,7 @@ def main(argv=None):
         ("density", density),
         ("sharing", sharing),
         ("reap_ablation", reap_ablation),
+        ("concurrency", concurrency),
         ("roofline", roofline),
     ]
     results = {}

@@ -1,0 +1,100 @@
+"""Event-driven serverless platform: concurrent tenants, background policy.
+
+Demonstrates the AsyncPlatform API:
+
+  * ``submit`` returns a future; a worker pool serves different tenants
+    in parallel (per-instance locks keep each state machine race-free);
+  * the background daemon deflates idle tenants (keep-alive ④) without
+    any manual ``tick()`` calls;
+  * a wake storm — 8 threads hitting one hibernating tenant — shares a
+    single batched (vectored preadv) inflate.
+
+Run:  PYTHONPATH=src python examples/async_platform.py
+"""
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, tiny_config
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.models import model
+from repro.serving import (AsyncPlatform, PlatformPolicy, Request,
+                           ServingEngine)
+
+SPOOL = "/tmp/repro_async_platform"
+TENANTS = {"chat-app": "llama3.2-3b", "search-app": "phi4-mini-3.8b",
+           "stream-app": "mamba2-130m"}
+
+
+def main():
+    shutil.rmtree(SPOOL, ignore_errors=True)
+
+    def factory(arch):
+        cfg = tiny_config(get_config(arch))
+        return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
+
+    mgr = InstanceManager(ManagerConfig(spool_dir=SPOOL, wake_mode="reap"),
+                          factory)
+    eng = ServingEngine(mgr)
+    policy = PlatformPolicy(keep_warm_s=0.3, tick_interval_s=0.05,
+                            max_queue_depth=32)
+    rng = np.random.default_rng(0)
+
+    with AsyncPlatform(eng, policy, TENANTS, workers=3) as plat:
+        # ---- phase 1: a burst hits every tenant concurrently (cold starts)
+        print("== phase 1: concurrent cold-start burst ==")
+        futs = [plat.submit(Request(t, f"s{j}",
+                                    rng.integers(0, 256, 6).astype(np.int32),
+                                    max_new_tokens=4))
+                for t in TENANTS for j in range(2)]
+        for f in futs:
+            r = f.result()
+            print(f"  {r.request.instance_id:11s} {r.state_before:9s} -> "
+                  f"{r.state_after:6s} ({r.spans['e2e'] * 1e3:.0f} ms)")
+
+        # record working sets so wakes prefetch via REAP
+        for t in TENANTS:
+            eng.record_sample(t, Request(
+                t, "probe", rng.integers(0, 256, 4).astype(np.int32),
+                max_new_tokens=2, close_session=True))
+
+        # ---- phase 2: the DAEMON deflates idle tenants (no manual tick)
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline and \
+                any(s != "hibernate" for s in mgr.states().values()):
+            time.sleep(0.05)
+        print(f"== phase 2: daemon deflated idle tenants: {mgr.states()} ==")
+
+        # ---- phase 3: wake storm on one tenant
+        print("== phase 3: 8-thread wake storm on chat-app ==")
+        wakes_before = mgr.wakes_performed
+        barrier = threading.Barrier(8)
+        storm = [None] * 8
+
+        def hit(i):
+            barrier.wait()
+            storm[i] = plat.submit(Request(
+                "chat-app", f"storm{i}",
+                rng.integers(0, 256, 3).astype(np.int32), max_new_tokens=2))
+
+        threads = [threading.Thread(target=hit, args=(i,)) for i in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        lats = sorted(f.result().spans["e2e"] for f in storm)
+        print(f"  inflates performed: {mgr.wakes_performed - wakes_before} "
+              f"(deduped: {mgr.wakes_deduped})")
+        print(f"  storm e2e p50={lats[len(lats) // 2] * 1e3:.0f} ms "
+              f"max={lats[-1] * 1e3:.0f} ms")
+
+    print("== summary ==")
+    print(f"  states: {mgr.states()}")
+    print(f"  log events: {sorted({e[1] for e in plat.log})}")
+
+
+if __name__ == "__main__":
+    main()

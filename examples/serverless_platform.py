@@ -3,7 +3,10 @@ bursty request trace, with keep-alive deflation and memory pressure.
 
 Three tenants (dense / MoE / SSM families), batched requests, and a
 policy loop that hibernates idle tenants instead of evicting them.
-Prints a per-request trace and the final density/latency summary.
+Uses the AsyncPlatform API: ``submit`` returns futures and a worker
+pool serves tenants concurrently; the policy pass is driven explicitly
+here (``tick_interval_s`` daemon cadence exists too — see
+examples/async_platform.py for the fully event-driven variant).
 
 Run:  PYTHONPATH=src python examples/serverless_platform.py
 """
@@ -17,7 +20,8 @@ from repro.configs import get_config, tiny_config
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.metrics import memory_report
 from repro.models import model
-from repro.serving import Platform, PlatformPolicy, Request, ServingEngine
+from repro.serving import (AsyncPlatform, PlatformPolicy, Request,
+                           ServingEngine)
 
 SPOOL = "/tmp/repro_platform"
 TENANTS = {"chat-app": "llama3.2-3b", "search-app": "arctic-480b",
@@ -34,52 +38,55 @@ def main():
     mgr = InstanceManager(ManagerConfig(spool_dir=SPOOL, wake_mode="reap"),
                           factory)
     eng = ServingEngine(mgr)
-    plat = Platform(eng, PlatformPolicy(keep_warm_s=0.0), TENANTS)
+    # long daemon cadence: this driver runs the policy pass explicitly
+    policy = PlatformPolicy(keep_warm_s=0.0, tick_interval_s=3600.0)
+    plat = AsyncPlatform(eng, policy, TENANTS, workers=len(TENANTS))
 
     rng = np.random.default_rng(0)
     lat = {t: [] for t in TENANTS}
 
-    # ---- phase 1: a burst hits every tenant (cold starts)
-    print("== phase 1: cold-start burst ==")
-    for tenant in TENANTS:
-        for j in range(2):
-            plat.submit(Request(tenant, f"s{j}",
-                                rng.integers(0, 256, 6).astype(np.int32),
-                                max_new_tokens=4))
-    for r in plat.step():
-        lat[r.request.instance_id].append(r.spans["e2e"])
-        print(f"  {r.request.instance_id:11s} {r.state_before:9s} -> "
-              f"{r.state_after:6s} tokens={r.tokens}")
+    with plat:
+        # ---- phase 1: a burst hits every tenant (concurrent cold starts)
+        print("== phase 1: cold-start burst ==")
+        futs = [plat.submit(Request(t, f"s{j}",
+                                    rng.integers(0, 256, 6).astype(np.int32),
+                                    max_new_tokens=4))
+                for t in TENANTS for j in range(2)]
+        for f in futs:
+            r = f.result()
+            lat[r.request.instance_id].append(r.spans["e2e"])
+            print(f"  {r.request.instance_id:11s} {r.state_before:9s} -> "
+                  f"{r.state_after:6s} tokens={r.tokens}")
 
-    # record working sets, then the platform deflates idle tenants
-    for tenant in TENANTS:
-        eng.record_sample(tenant, Request(
-            tenant, "probe", rng.integers(0, 256, 4).astype(np.int32),
-            max_new_tokens=2, close_session=True))
-    acted = plat.tick()
-    print(f"== keep-alive expired: deflated {acted} ==")
-    print("  states:", mgr.states())
+        # record working sets, then the platform deflates idle tenants
+        for tenant in TENANTS:
+            eng.record_sample(tenant, Request(
+                tenant, "probe", rng.integers(0, 256, 4).astype(np.int32),
+                max_new_tokens=2, close_session=True))
+        acted = plat.policy_pass()
+        print(f"== keep-alive expired: deflated {acted} ==")
+        print("  states:", mgr.states())
 
-    # ---- phase 2: sparse traffic wakes tenants on demand
-    print("== phase 2: request-driven wakes ==")
-    for tenant in TENANTS:
-        plat.submit(Request(tenant, "s0",
-                            rng.integers(0, 256, 3).astype(np.int32),
-                            max_new_tokens=4))
-        for r in plat.step():
+        # ---- phase 2: sparse traffic wakes tenants on demand
+        print("== phase 2: request-driven wakes ==")
+        for tenant in TENANTS:
+            r = plat.submit(Request(
+                tenant, "s0", rng.integers(0, 256, 3).astype(np.int32),
+                max_new_tokens=4)).result()
             lat[r.request.instance_id].append(r.spans["e2e"])
             print(f"  {r.request.instance_id:11s} {r.state_before:9s} -> "
                   f"{r.state_after:6s} faults={r.faults} "
                   f"prefetch={r.prefetched_bytes >> 10}KB "
                   f"({r.spans['e2e'] * 1e3:.0f} ms)")
 
-    # ---- phase 3: memory pressure packs everyone down
-    total = mgr.resident_bytes()
-    deflated = mgr.handle_memory_pressure(total // 3)
-    print(f"== phase 3: memory pressure -> deflated {deflated} ==")
-    print("  states:", mgr.states())
-    print(f"  resident: {mgr.resident_bytes() >> 20} MB "
-          f"(was {total >> 20} MB); tenants kept: {len(mgr.instances)}/3")
+        # ---- phase 3: memory pressure packs everyone down
+        total = mgr.resident_bytes()
+        deflated = mgr.handle_memory_pressure(total // 3,
+                                              try_lock=eng.instance_lock)
+        print(f"== phase 3: memory pressure -> deflated {deflated} ==")
+        print("  states:", mgr.states())
+        print(f"  resident: {mgr.resident_bytes() >> 20} MB "
+              f"(was {total >> 20} MB); tenants kept: {len(mgr.instances)}/3")
 
     print("== summary ==")
     for t in TENANTS:

@@ -86,6 +86,7 @@ class HibernationManager:
             st.shared_bytes_released = self.shared_registry.release(
                 inst.base_id)
 
+        inst.inflated = False
         st.seconds = time.monotonic() - t0
         self.log.append(("deflate", inst.instance_id, st))
         return st
@@ -111,6 +112,7 @@ class HibernationManager:
                 st.prefetched_bytes += inst.kv.apply_prefetch(data)
         # pagefault mode restores nothing here; units fault in on access
 
+        inst.inflated = True
         if trigger == "sigcont":
             inst.sm.fire(Event.SIGCONT)
         st.seconds = time.monotonic() - t0
@@ -119,7 +121,10 @@ class HibernationManager:
 
     # ------------------------------------------------------------- faults
     def fault(self, inst: ModelInstance, keys) -> WakeStats:
-        """Page-fault path: random reads for weight and KV unit keys."""
+        """Fault path for weight and KV unit keys.  The key set is batched
+        through the vectored swap-file read (`read_units`): extent-sorted,
+        adjacent extents merged, one `preadv` per run — not one random
+        `pread` per unit."""
         t0 = time.monotonic()
         st = WakeStats(mode="pagefault")
         wkeys = [k for k in keys if k and k[0] == "w"]

@@ -87,6 +87,9 @@ class ModelInstance:
         self.fault_log: List[Tuple[float, Tuple]] = []
         self.created_at = time.monotonic()
         self.last_used = self.created_at
+        #: True once the current hibernation cycle's upfront inflate ran
+        #: (cleared by deflate; the manager's wake-storm guard keys off it)
+        self.inflated = True
 
     # ------------------------------------------------------------------ catalog
     def _is_expert_leaf(self, path: str, arr: np.ndarray) -> bool:
@@ -207,24 +210,33 @@ class ModelInstance:
         return n
 
     def fault_in(self, keys: Sequence[Tuple]) -> int:
-        """Page-fault swap-in: one random read per unit."""
-        n = 0
+        """Fault swap-in: the key set is coalesced into vectored batch
+        reads (one per file, adjacent extents merged) instead of one random
+        read per unit."""
+        swap_keys, reap_keys = [], []
         for key in keys:
             if key in self.resident:
                 continue
-            u = self.units[key]
             if key in self.swap_file:
-                arr = self.swap_file.read_unit(key)
+                swap_keys.append(key)
             elif key in self.reap_file.extents:
-                # unit was in the REAP file but prefetch didn't run (pagefault
-                # mode wake) — still a random read
-                arr = self.reap_file.read_unit(key)
+                # unit was in the REAP file but prefetch didn't run
+                # (pagefault-mode wake) — read it from there
+                reap_keys.append(key)
             else:
                 raise KeyError(f"unit {key} neither resident nor swapped")
-            self._set_unit(u, arr)
-            self.resident.add(key)
-            self.fault_log.append((time.monotonic(), key))
-            n += u.nbytes
+        n = 0
+        for f, ks in ((self.swap_file, swap_keys),
+                      (self.reap_file, reap_keys)):
+            if not ks:
+                continue
+            now = time.monotonic()
+            for key, arr in f.read_units(ks).items():
+                u = self.units[key]
+                self._set_unit(u, arr)
+                self.resident.add(key)
+                self.fault_log.append((now, key))
+                n += u.nbytes
         return n
 
     def ensure_all_resident(self) -> int:

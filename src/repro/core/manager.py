@@ -3,12 +3,18 @@
 Implements the platform-side behaviours of the paper:
   * cold start (①): init/load weights + compile — the expensive path;
   * keep-alive with *deflate-instead-of-evict* under memory pressure;
-  * predictive wake (⑤) and request-driven wake (⑦);
+  * predictive wake (⑤) and request-driven wake (⑦), with a wake-storm
+    guard: concurrent requests racing to inflate the same hibernating
+    tenant share a single batched inflate (`ensure_awake`);
   * shared base-weight registry (§3.5): refcounted "file-backed" leaves,
     re-read from the checkpoint at refcount 0->1.
+
+The manager is thread-safe for the AsyncPlatform's worker pool: the
+instance table is lock-guarded and each instance has a wake lock.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -88,6 +94,19 @@ class InstanceManager:
         self.hib = HibernationManager(self.shared)
         self.instances: Dict[str, ModelInstance] = {}
         self.events: List[tuple] = []
+        self._lock = threading.RLock()                 # instance table
+        self._wake_locks: Dict[str, threading.Lock] = {}
+        #: wake-storm accounting: inflates actually performed vs callers
+        #: that arrived wanting one and found it already done/in flight
+        self.wakes_performed = 0
+        self.wakes_deduped = 0
+
+    def _wake_lock(self, instance_id: str) -> threading.Lock:
+        with self._lock:
+            lock = self._wake_locks.get(instance_id)
+            if lock is None:
+                lock = self._wake_locks[instance_id] = threading.Lock()
+            return lock
 
     # ------------------------------------------------------------- lifecycle
     def cold_start(self, instance_id: str, arch_key: str,
@@ -101,20 +120,49 @@ class InstanceManager:
         if self.shared and inst.base_id and inst.shared_paths:
             self.shared.acquire(inst.base_id, inst)
         inst.sm.fire(Event.COLD_START)
-        self.instances[instance_id] = inst
+        with self._lock:
+            self.instances[instance_id] = inst
         self.events.append((time.monotonic(), "cold_start", instance_id))
         return inst
 
     def deflate(self, instance_id: str):
         return self.hib.deflate(self.instances[instance_id])
 
+    def ensure_awake(self, instance_id: str, trigger: str = "request"):
+        """Inflate a hibernating instance exactly once per storm.
+
+        Any number of threads may call this concurrently for the same
+        instance (request-driven ⑦ and predictive ⑤ wakes both route
+        here); the per-instance wake lock guarantees a single batched
+        inflate, and late arrivals are counted in ``wakes_deduped``.
+        Returns the :class:`WakeStats` for the thread that performed the
+        inflate, ``None`` for everyone else.
+        """
+        inst = self.instances.get(instance_id)
+        if inst is None or inst.state != ContainerState.HIBERNATE:
+            return None
+        with self._wake_lock(instance_id):
+            if inst.state != ContainerState.HIBERNATE or inst.inflated:
+                self.wakes_deduped += 1        # someone else inflated first
+                return None
+            if trigger == "request" and self.cfg.wake_mode != "reap":
+                # pagefault mode: units fault in lazily.  Still mark the
+                # cycle as woken under the wake lock, or a racing sigcont
+                # wake could fire after the engine's REQUEST transition.
+                inst.inflated = True
+                return None
+            self.wakes_performed += 1
+            return self.hib.wake(inst, mode=self.cfg.wake_mode,
+                                 trigger=trigger)
+
     def predictive_wake(self, instance_id: str):
         """⑤ control-plane wake in anticipation of a request."""
-        inst = self.instances[instance_id]
-        return self.hib.wake(inst, mode=self.cfg.wake_mode, trigger="sigcont")
+        return self.ensure_awake(instance_id, trigger="sigcont")
 
     def evict(self, instance_id: str) -> None:
-        inst = self.instances.pop(instance_id)
+        with self._lock:
+            inst = self.instances.pop(instance_id)
+            self._wake_locks.pop(instance_id, None)
         if self.shared and inst.base_id and inst.shared_paths and \
                 inst.state not in (ContainerState.HIBERNATE,):
             self.shared.release(inst.base_id)
@@ -126,7 +174,9 @@ class InstanceManager:
     def resident_bytes(self) -> int:
         tot = 0
         seen_shared = set()
-        for inst in self.instances.values():
+        with self._lock:
+            insts = list(self.instances.values())
+        for inst in insts:
             tot += inst.weight_bytes(resident_only=True, include_shared=False)
             tot += inst.pool.rss_bytes(inst.instance_id)
             if self.shared and inst.base_id and \
@@ -136,21 +186,38 @@ class InstanceManager:
                 seen_shared.add(inst.base_id)
         return tot
 
-    def handle_memory_pressure(self, target_bytes: int) -> List[str]:
+    def handle_memory_pressure(self, target_bytes: int,
+                               try_lock: Optional[Callable] = None
+                               ) -> List[str]:
         """Deflate idle warm/woken instances (LRU) instead of evicting —
-        the paper's density mechanism.  Returns the ids deflated."""
+        the paper's density mechanism.  Returns the ids deflated.
+
+        ``try_lock(instance_id)`` (optional) must return a lock to acquire
+        non-blocking around each deflate; instances currently being served
+        are skipped instead of racing the engine's state machine.
+        """
         deflated = []
-        idle = sorted(
-            (i for i in self.instances.values()
-             if i.state in (ContainerState.WARM, ContainerState.WOKEN)),
-            key=lambda i: i.last_used)
+        with self._lock:
+            idle = sorted(
+                (i for i in self.instances.values()
+                 if i.state in (ContainerState.WARM, ContainerState.WOKEN)),
+                key=lambda i: i.last_used)
         for inst in idle:
             if self.resident_bytes() <= target_bytes:
                 break
-            self.hib.deflate(inst)
-            deflated.append(inst.instance_id)
+            lock = try_lock(inst.instance_id) if try_lock else None
+            if lock is not None and not lock.acquire(blocking=False):
+                continue                   # busy serving: not idle after all
+            try:
+                if inst.state in (ContainerState.WARM, ContainerState.WOKEN):
+                    self.hib.deflate(inst)
+                    deflated.append(inst.instance_id)
+            finally:
+                if lock is not None:
+                    lock.release()
         self.events.append((time.monotonic(), "pressure", tuple(deflated)))
         return deflated
 
     def states(self) -> Dict[str, str]:
-        return {k: v.state.value for k, v in self.instances.items()}
+        with self._lock:
+            return {k: v.state.value for k, v in self.instances.items()}

@@ -1,11 +1,25 @@
 """Memory accounting (PSS analogue of the paper's `pmap` methodology) and
-latency tracing for the per-state benchmarks (Figs. 6/7)."""
+latency tracing for the per-state benchmarks (Figs. 6/7).
+
+:class:`LatencyTrace` is thread-safe: the AsyncPlatform's worker pool
+records spans concurrently from many serving threads.
+"""
 from __future__ import annotations
 
+import threading
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) — no numpy needed."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[idx]
 
 
 @dataclass
@@ -54,6 +68,7 @@ class LatencyTrace:
 
     def __init__(self):
         self.spans: Dict[str, List[float]] = {}
+        self._lock = threading.Lock()
 
     @contextmanager
     def span(self, name: str):
@@ -61,7 +76,9 @@ class LatencyTrace:
         try:
             yield
         finally:
-            self.spans.setdefault(name, []).append(time.monotonic() - t0)
+            dt = time.monotonic() - t0
+            with self._lock:
+                self.spans.setdefault(name, []).append(dt)
 
     def total(self, name: str) -> float:
         return sum(self.spans.get(name, ()))
@@ -70,5 +87,12 @@ class LatencyTrace:
         xs = self.spans.get(name)
         return sum(xs) / len(xs) if xs else None
 
+    def p(self, name: str, q: float) -> float:
+        """Percentile over a span's samples (e.g. ``p("e2e", 99)``)."""
+        with self._lock:
+            xs = list(self.spans.get(name, ()))
+        return percentile(xs, q)
+
     def summary(self) -> Dict[str, float]:
-        return {k: sum(v) / len(v) for k, v in self.spans.items()}
+        with self._lock:
+            return {k: sum(v) / len(v) for k, v in self.spans.items()}

@@ -12,6 +12,7 @@ deployment it is a single preallocated HBM buffer per device and the
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Set
 
 import numpy as np
@@ -34,6 +35,9 @@ class PagePool:
             max_blocks=self.capacity_blocks,
             grow=self._on_grow, release=self._on_release)
         self._owner_pages: Dict[str, Set[int]] = {}
+        # one pool serves every tenant; concurrent serves allocate/free
+        # from worker threads, so allocator mutations are lock-guarded
+        self._lock = threading.RLock()
 
     # -- block <-> physical slot mapping ------------------------------------
     def _on_grow(self, block_id: int) -> None:
@@ -52,32 +56,36 @@ class PagePool:
 
     # -- allocation -----------------------------------------------------------
     def alloc(self, n: int, owner: str) -> List[int]:
-        ids = self.allocator.alloc_many(n)
-        self._owner_pages.setdefault(owner, set()).update(ids)
-        return ids
+        with self._lock:
+            ids = self.allocator.alloc_many(n)
+            self._owner_pages.setdefault(owner, set()).update(ids)
+            return ids
 
     def share(self, pages: Iterable[int], new_owner: str) -> None:
         """COW-share existing pages with another owner (prefix sharing)."""
         pages = list(pages)
-        for p in pages:
-            self.allocator.incref(p)
-        self._owner_pages.setdefault(new_owner, set()).update(pages)
+        with self._lock:
+            for p in pages:
+                self.allocator.incref(p)
+            self._owner_pages.setdefault(new_owner, set()).update(pages)
 
     def free(self, pages: Iterable[int], owner: str) -> int:
         """Decref pages for this owner; returns how many were truly freed."""
         freed = 0
-        own = self._owner_pages.get(owner, set())
-        for p in list(pages):
-            own.discard(p)
-            if self.allocator.decref(p):
-                freed += 1
+        with self._lock:
+            own = self._owner_pages.get(owner, set())
+            for p in list(pages):
+                own.discard(p)
+                if self.allocator.decref(p):
+                    freed += 1
         return freed
 
     def free_owner(self, owner: str) -> int:
-        pages = list(self._owner_pages.get(owner, ()))
-        n = self.free(pages, owner)
-        self._owner_pages.pop(owner, None)
-        return n
+        with self._lock:
+            pages = list(self._owner_pages.get(owner, ()))
+            n = self.free(pages, owner)
+            self._owner_pages.pop(owner, None)
+            return n
 
     # -- data movement ----------------------------------------------------------
     def write(self, pages: Sequence[int], data: np.ndarray) -> None:

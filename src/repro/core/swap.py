@@ -7,8 +7,13 @@ Each instance owns two files, never shared between sandboxes (security,
     (hash-table of offsets, like the Swapping Mgr's de-dup table) and read
     back **one ``pread`` at a time** — the random-read path.
   * :class:`ReapFile` — the REAP file.  The recorded working set is written
-    with one contiguous ``pwritev``-style write and read back with a single
-    sequential ``preadv``-style read over the saved scatter io-vectors.
+    with one contiguous ``pwritev`` and read back with a single sequential
+    ``preadv`` over the saved scatter io-vectors.
+
+Both classes also serve *vectored* batch reads (:meth:`_FileBase.read_units`):
+the fault set is extent-sorted, adjacent extents are merged into runs, and
+each run is one ``preadv`` syscall — this is what turns a wake storm's
+hundreds of random faults into a handful of sequential disk passes.
 
 Real file descriptors and real disk IO: the benchmarks measure the actual
 random-vs-sequential asymmetry of this host's storage.
@@ -20,6 +25,35 @@ from dataclasses import dataclass
 from typing import Dict, Hashable, List, Sequence, Tuple
 
 import numpy as np
+
+#: max io-vectors per preadv/pwritev call (POSIX guarantees >= 16; Linux 1024)
+IOV_MAX = 1024
+
+_HAVE_PREADV = hasattr(os, "preadv")
+_HAVE_PWRITEV = hasattr(os, "pwritev")
+
+
+def _preadv_full(fd, bufs, offset: int) -> int:
+    """``preadv`` that retries short reads (Linux caps one read at ~2 GiB;
+    signals can also truncate) until every buffer is filled.  Returns the
+    number of syscalls issued; raises ``EOFError`` on a true EOF."""
+    views = [memoryview(b) for b in bufs]
+    want = sum(len(v) for v in views)
+    done, calls = 0, 0
+    while done < want:
+        pending, skip = [], done
+        for v in views:
+            if skip >= len(v):
+                skip -= len(v)
+                continue
+            pending.append(v[skip:] if skip else v)
+            skip = 0
+        n = os.preadv(fd, pending, offset + done)
+        calls += 1
+        if n <= 0:                         # pragma: no cover - EOF/IO error
+            raise EOFError(f"preadv: short read at offset {offset + done}")
+        done += n
+    return calls
 
 
 @dataclass
@@ -58,6 +92,52 @@ class _FileBase:
     def file_bytes(self) -> int:
         return self._append_at
 
+    # ------------------------------------------------------------- vectored
+    def read_units(self, keys: Sequence[Hashable]
+                   ) -> Dict[Hashable, np.ndarray]:
+        """Vectored batch read of a fault set.
+
+        Extents are sorted by file offset and adjacent extents are merged
+        into runs; each run is served by one ``preadv`` (chunked at
+        ``IOV_MAX`` io-vectors).  ``self.reads`` counts *syscalls*, so the
+        per-unit vs vectored asymmetry is directly observable.
+        """
+        exts = sorted(((k, self.extents[k]) for k in keys),
+                      key=lambda kv: kv[1].offset)
+        out: Dict[Hashable, np.ndarray] = {}
+        run: List[Tuple[Hashable, _Extent, bytearray]] = []
+        run_end = None
+
+        def flush():
+            if not run:
+                return
+            bufs = [b for _, _, b in run]
+            start = run[0][1].offset
+            if _HAVE_PREADV:
+                pos, i = start, 0
+                while i < len(bufs):
+                    chunk = bufs[i:i + IOV_MAX]
+                    self.reads += _preadv_full(self.fd, chunk, pos)
+                    pos += sum(len(b) for b in chunk)
+                    i += IOV_MAX
+            else:                          # pragma: no cover - non-POSIX
+                for _, ext, buf in run:
+                    buf[:] = os.pread(self.fd, ext.nbytes, ext.offset)
+                    self.reads += 1
+            for key, ext, buf in run:
+                self.bytes_read += ext.nbytes
+                out[key] = np.frombuffer(
+                    buf, ext.dtype).reshape(ext.shape).copy()
+            run.clear()
+
+        for key, ext in exts:
+            if run_end is not None and ext.offset != run_end:
+                flush()
+            run.append((key, ext, bytearray(ext.nbytes)))
+            run_end = ext.offset + ext.nbytes
+        flush()
+        return out
+
 
 class SwapFile(_FileBase):
     """Page-fault swap file: per-unit writes, random per-unit reads."""
@@ -93,8 +173,10 @@ class ReapFile(_FileBase):
     """REAP file: one batch-sequential write, one batch-sequential read."""
 
     def write_batch(self, items: Sequence[Tuple[Hashable, np.ndarray]]) -> None:
-        """pwritev analogue: the scatter io-vectors are concatenated and
-        written with a single contiguous write starting at offset 0."""
+        """One vectored sequential write (``pwritev``) of the scatter
+        io-vectors, starting at offset 0.  The file is truncated to the new
+        blob length so ``file_bytes`` always reflects the real on-disk
+        footprint (a smaller rewrite must not leave stale trailing bytes)."""
         self.extents.clear()
         bufs: List[bytes] = []
         off = 0
@@ -104,11 +186,23 @@ class ReapFile(_FileBase):
             self.extents[key] = _Extent(off, len(b), str(arr.dtype), arr.shape)
             bufs.append(b)
             off += len(b)
-        blob = b"".join(bufs)
-        os.pwrite(self.fd, blob, 0)
-        self._append_at = len(blob)
-        self.bytes_written += len(blob)
-        self.writes += 1
+        if bufs:
+            if _HAVE_PWRITEV:
+                pos, i = 0, 0
+                while i < len(bufs):
+                    chunk = bufs[i:i + IOV_MAX]
+                    want = sum(len(b) for b in chunk)
+                    n = os.pwritev(self.fd, chunk, pos)
+                    if n != want:          # pragma: no cover - short write
+                        os.pwrite(self.fd, b"".join(chunk)[n:], pos + n)
+                    pos += want
+                    i += IOV_MAX
+            else:                          # pragma: no cover - non-POSIX
+                os.pwrite(self.fd, b"".join(bufs), 0)
+            self.writes += 1
+        os.ftruncate(self.fd, off)
+        self._append_at = off
+        self.bytes_written += off
 
     def read_unit(self, key: Hashable) -> np.ndarray:
         """Random single-extent read (pagefault-mode access to a REAP file)."""

@@ -4,8 +4,10 @@ Two modes:
   * ``--dry-run``: lower+compile serve_step (decode_32k) for the
     production mesh via launch.dryrun.
   * default: run a REAL trace on CPU (tiny configs): Poisson-ish arrivals
-    over N tenants, keep-alive deflation, REAP or pagefault wakes.
-    Reports per-state latency percentiles and final memory per tenant.
+    over N tenants served by the AsyncPlatform worker pool (bursts of
+    ``--burst`` requests run concurrently), keep-alive deflation, REAP or
+    pagefault wakes.  Reports per-state latency percentiles and final
+    memory per tenant.
 
   PYTHONPATH=src python -m repro.launch.serve --tenants 4 --requests 24
 """
@@ -25,6 +27,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=18)
     ap.add_argument("--wake-mode", choices=("reap", "pagefault"),
                     default="reap")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--burst", type=int, default=3,
+                    help="requests submitted concurrently between policy "
+                         "passes")
     ap.add_argument("--keep-warm-s", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--spool", default="/tmp/repro_launch_serve")
@@ -44,7 +50,8 @@ def main(argv=None):
     from repro.core.manager import InstanceManager, ManagerConfig
     from repro.core.metrics import memory_report
     from repro.models import model
-    from repro.serving import Platform, PlatformPolicy, Request, ServingEngine
+    from repro.serving import (AsyncPlatform, PlatformPolicy, Request,
+                               ServingEngine)
 
     shutil.rmtree(args.spool, ignore_errors=True)
 
@@ -57,31 +64,41 @@ def main(argv=None):
         factory)
     eng = ServingEngine(mgr)
     tenants = {f"fn{i}": args.arch for i in range(args.tenants)}
-    plat = Platform(eng, PlatformPolicy(keep_warm_s=args.keep_warm_s),
-                    tenants)
+    # the driver runs the policy pass between bursts; idle the daemon
+    plat = AsyncPlatform(eng, PlatformPolicy(keep_warm_s=args.keep_warm_s,
+                                             tick_interval_s=3600.0),
+                         tenants, workers=args.workers)
 
     rng = np.random.default_rng(args.seed)
     lat_by_state: dict = {}
-    for r_i in range(args.requests):
-        tenant = f"fn{rng.integers(args.tenants)}"
-        plat.submit(Request(tenant, f"s{r_i}",
-                            rng.integers(0, 256, 6).astype(np.int32),
-                            max_new_tokens=4, close_session=True))
-        for resp in plat.step():
-            lat_by_state.setdefault(resp.state_before, []).append(
-                resp.spans["e2e"])
-            print(f"  req{r_i:03d} {tenant:5s} {resp.state_before:9s}->"
-                  f"{resp.state_after:6s} {resp.spans['e2e'] * 1e3:7.0f}ms "
-                  f"faults={resp.faults}", flush=True)
-        if r_i % 3 == 2:
-            for iid in plat.tick():
+    with plat:
+        for b0 in range(0, args.requests, args.burst):
+            burst = []
+            for r_i in range(b0, min(b0 + args.burst, args.requests)):
+                tenant = f"fn{rng.integers(args.tenants)}"
+                fut = plat.submit(Request(
+                    tenant, f"s{r_i}",
+                    rng.integers(0, 256, 6).astype(np.int32),
+                    max_new_tokens=4, close_session=True))
+                burst.append((r_i, tenant, fut))
+            for r_i, tenant, fut in burst:
+                resp = fut.result()
+                lat_by_state.setdefault(resp.state_before, []).append(
+                    resp.spans["e2e"])
+                print(f"  req{r_i:03d} {tenant:5s} {resp.state_before:9s}->"
+                      f"{resp.state_after:6s} "
+                      f"{resp.spans['e2e'] * 1e3:7.0f}ms "
+                      f"faults={resp.faults}", flush=True)
+            for iid in plat.policy_pass():
                 print(f"    [policy] deflated {iid}")
-        # REAP-record each tenant once it has served
-        inst = mgr.instances.get(tenant)
-        if inst is not None and not inst.recorder.working_set:
-            eng.record_sample(tenant, Request(
-                tenant, "probe", rng.integers(0, 256, 4).astype(np.int32),
-                max_new_tokens=2, close_session=True))
+            # REAP-record each tenant once it has served
+            for _, tenant, _ in burst:
+                inst = mgr.instances.get(tenant)
+                if inst is not None and not inst.recorder.working_set:
+                    eng.record_sample(tenant, Request(
+                        tenant, "probe",
+                        rng.integers(0, 256, 4).astype(np.int32),
+                        max_new_tokens=2, close_session=True))
 
     print("\nper-state latency (ms):")
     for st, xs in sorted(lat_by_state.items()):

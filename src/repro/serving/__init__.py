@@ -1,8 +1,10 @@
 from repro.serving.engine import Request, Response, ServingEngine
 from repro.serving.paged_kv import KVSession, PagedKVCache
-from repro.serving.scheduler import Platform, PlatformPolicy
+from repro.serving.scheduler import (AdmissionError, AsyncPlatform,
+                                     Platform, PlatformPolicy)
 
 __all__ = ["Request", "Response", "ServingEngine", "KVSession",
-           "PagedKVCache", "Platform", "PlatformPolicy"]
+           "PagedKVCache", "AdmissionError", "AsyncPlatform",
+           "Platform", "PlatformPolicy"]
 # repro.serving.paged_backend bridges the cache to the Pallas kernel
 # (imported lazily: it pulls in the kernels package)

@@ -17,9 +17,17 @@ Compiled functions are cached per ``(kind, batch, seq-bucket)`` in
 ``inst.compiled`` — they survive hibernation (the paper's kept-alive
 "blocked runtime threads"), which is exactly why a woken container skips
 the cold-start cost.
+
+Concurrency: each instance has a re-entrant serve lock
+(:meth:`ServingEngine.instance_lock`); ``serve_batch`` holds it for the
+whole request, so the AsyncPlatform's worker pool can serve *different*
+instances in parallel while each instance's state machine stays
+race-free.  Wakes route through ``InstanceManager.ensure_awake`` so a
+wake storm on one hibernating tenant performs exactly one inflate.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -100,6 +108,24 @@ class ServingEngine:
         self.window = window
         self.max_new_default = max_new_default
         self.trace = LatencyTrace()
+        self._locks: Dict[str, threading.RLock] = {}
+        self._locks_guard = threading.Lock()
+
+    def instance_lock(self, instance_id: str) -> threading.RLock:
+        """Per-instance serve lock: held for the whole of ``serve_batch``;
+        the platform's policy daemon try-acquires it before deflating so
+        SIGSTOP never races an in-flight request."""
+        with self._locks_guard:
+            lock = self._locks.get(instance_id)
+            if lock is None:
+                lock = self._locks[instance_id] = threading.RLock()
+            return lock
+
+    def drop_instance_lock(self, instance_id: str) -> None:
+        """Forget an evicted instance's lock (tenant churn must not grow
+        the lock table unboundedly)."""
+        with self._locks_guard:
+            self._locks.pop(instance_id, None)
 
     # ------------------------------------------------------------ lifecycle
     def start_instance(self, instance_id: str, arch_key: str,
@@ -266,6 +292,11 @@ class ServingEngine:
         """Continuous-batched execution of requests on one instance:
         per-request prefill, then a joint decode loop that sessions leave
         as they finish."""
+        with self.instance_lock(instance_id):
+            return self._serve_batch_locked(instance_id, reqs)
+
+    def _serve_batch_locked(self, instance_id: str,
+                            reqs: List[Request]) -> List[Response]:
         inst = self.manager.instances[instance_id]
         resps = [Response(r, state_before=inst.state.value) for r in reqs]
         t0 = time.monotonic()
@@ -273,10 +304,10 @@ class ServingEngine:
         # ---- state machine: the request trigger (②⑥⑦)
         wake_stats = None
         if inst.state in (S.HIBERNATE, S.WOKEN):
-            if inst.state == S.HIBERNATE and \
-                    self.manager.cfg.wake_mode == "reap":
-                wake_stats = self.manager.hib.wake(inst, mode="reap",
-                                                   trigger="request")
+            if inst.state == S.HIBERNATE:
+                # wake-storm guard: at most one batched inflate per cycle
+                wake_stats = self.manager.ensure_awake(instance_id,
+                                                       trigger="request")
             inst.sm.fire(Event.REQUEST)       # -> HIBERNATE_RUNNING
             finish_to = S.WOKEN
         elif inst.state == S.WARM:

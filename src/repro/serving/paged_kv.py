@@ -254,17 +254,23 @@ class PagedKVCache:
             s.host_units[key] = arr.reshape(s.host_shapes[key])
 
     def fault_in(self, keys: Sequence[Tuple], swap_file, reap_file) -> int:
-        """Page-fault path: one random read per key."""
-        n = 0
+        """Fault path: the key set is coalesced into one vectored batch
+        read per file (extent-sorted, adjacent extents merged)."""
+        swap_keys, reap_keys = [], []
         for key in keys:
             if key in swap_file:
-                arr = swap_file.read_unit(key)
+                swap_keys.append(key)
             elif key in reap_file.extents:
-                arr = reap_file.read_unit(key)
+                reap_keys.append(key)
             else:
                 raise KeyError(f"kv unit {key} not in any swap file")
-            self._install(key, arr)
-            n += arr.nbytes
+        n = 0
+        for f, ks in ((swap_file, swap_keys), (reap_file, reap_keys)):
+            if not ks:
+                continue
+            for key, arr in f.read_units(ks).items():
+                self._install(key, arr)
+                n += arr.nbytes
         return n
 
     # ------------------------------------------------------------- accounting

@@ -1,9 +1,21 @@
-"""Serverless platform scheduler: routing, keep-alive and deflation policy.
+"""Serverless platform control plane: event-driven, multi-tenant.
 
-This is the control plane of Fig. 3: it decides when a Warm Container is
-deflated (④ SIGSTOP under memory pressure or keep-alive expiry), when a
-Hibernate Container is predictively woken (⑤ SIGCONT), and routes incoming
-requests to instances (cold-starting when none exists).
+This is the control plane of Fig. 3, rebuilt around concurrency:
+
+  * :class:`AsyncPlatform` — per-tenant request queues with admission
+    control, a worker pool that serves *different* instances in parallel
+    (per-instance locks keep each state machine race-free), and a
+    background policy daemon that owns keep-alive deflation (④ SIGSTOP),
+    memory-pressure handling, and predictive/anticipatory wakes (⑤
+    SIGCONT).  ``submit`` returns a future; workers batch whatever is
+    queued per tenant when they claim it (continuous batching).
+  * :class:`Platform` — the original synchronous facade, kept as a thin
+    compatibility shim: ``step()`` drains the queues inline and
+    ``tick()`` runs one policy pass, with no threads involved.
+
+Wake storms are deduplicated below the platform: every inflate routes
+through ``InstanceManager.ensure_awake``, so N concurrent requests to
+one hibernating tenant share a single batched (vectored) inflate.
 
 The policy is intentionally simple (LRU deflate / TTL), matching the
 paper's platform assumptions; FaasCache-style smarter keep-alive is noted
@@ -11,15 +23,21 @@ as related work, not reproduced.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 from repro.core.state import ContainerState
 from repro.serving.engine import Request, Response, ServingEngine
 
 S = ContainerState
+
+
+class AdmissionError(RuntimeError):
+    """A tenant's queue is full: the request was rejected at admission."""
 
 
 @dataclass
@@ -33,77 +51,220 @@ class PlatformPolicy:
     #: next request is due within this margin (seconds); None disables
     anticipate_margin_s: Optional[float] = None
     ewma_alpha: float = 0.3
+    #: admission control: max queued requests per tenant before rejection
+    max_queue_depth: int = 64
+    #: cadence of the background policy daemon (AsyncPlatform only)
+    tick_interval_s: float = 0.05
 
 
-class Platform:
-    """Single-node serverless platform over a :class:`ServingEngine`."""
+class AsyncPlatform:
+    """Event-driven single-node serverless platform over a
+    :class:`ServingEngine`.
+
+    ``arch_of``: instance id -> arch key for the engine factory (requests
+    are keyed by instance id; cold starts look the arch up here).
+
+    Use as a context manager (or call ``start()``/``stop()``)::
+
+        with AsyncPlatform(engine, policy, arch_of, workers=4) as plat:
+            futs = [plat.submit(req) for req in reqs]
+            resps = [f.result() for f in futs]
+    """
 
     def __init__(self, engine: ServingEngine, policy: PlatformPolicy,
-                 arch_of: Dict[str, str]):
-        """``arch_of``: function name -> arch key for the engine factory."""
+                 arch_of: Dict[str, str], workers: int = 4):
         self.engine = engine
         self.policy = policy
         self.arch_of = arch_of
-        self.queue: Deque[Request] = deque()
-        self._ids = 0
+        self.workers = workers
+        #: per-tenant FIFO of (request, future); insertion-ordered dict
+        self.queues: Dict[str, Deque[Tuple[Request, Future]]] = {}
+        self._cv = threading.Condition()
+        self._busy: Set[str] = set()          # tenants claimed by a worker
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
         self.log: List[tuple] = []
         #: per-tenant arrival model: (last_arrival_ts, ewma_gap_s)
         self.arrivals: Dict[str, tuple] = {}
+        self.rejected = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "AsyncPlatform":
+        if self._threads:
+            return self
+        self._stop.clear()
+        for i in range(self.workers):
+            t = threading.Thread(target=self._worker_loop,
+                                 name=f"platform-worker-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        t = threading.Thread(target=self._daemon_loop,
+                             name="platform-daemon", daemon=True)
+        t.start()
+        self._threads.append(t)
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 60.0) -> None:
+        if drain:
+            self.drain(timeout)
+        self._stop.set()
+        with self._cv:
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout)
+        self._threads = []
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        """Block until every queued request has been served (or timeout).
+        Returns True if fully drained."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while any(self.queues.values()) or self._busy:
+                if not self._cv.wait(min(0.1, max(0.0, deadline -
+                                                  time.monotonic()))):
+                    if time.monotonic() >= deadline:
+                        return False
+        return True
+
+    def __enter__(self) -> "AsyncPlatform":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
     # ------------------------------------------------------------- requests
-    def submit(self, req: Request, now: Optional[float] = None) -> None:
-        self.queue.append(req)
+    def submit(self, req: Request, now: Optional[float] = None) -> Future:
+        """Enqueue a request; returns a future resolving to its
+        :class:`Response` (or raising :class:`AdmissionError` if the
+        tenant's queue is full)."""
+        fut: Future = Future()
         now = now if now is not None else time.monotonic()
-        last, gap = self.arrivals.get(req.instance_id, (None, None))
+        with self._cv:
+            q = self.queues.setdefault(req.instance_id, deque())
+            if len(q) >= self.policy.max_queue_depth:
+                self.rejected += 1
+                self.log.append((now, "rejected", req.instance_id))
+                fut.set_exception(AdmissionError(
+                    f"tenant {req.instance_id}: queue depth "
+                    f">= {self.policy.max_queue_depth}"))
+                return fut
+            q.append((req, fut))
+            self._note_arrival(req.instance_id, now)
+            self._cv.notify()
+        if self.policy.predictive_wake:
+            # ⑤ request arrival wakes a hibernated tenant off the serve path
+            if self.engine.manager.ensure_awake(
+                    req.instance_id, trigger="sigcont") is not None:
+                self.log.append((now, "predictive_wake", req.instance_id))
+        return fut
+
+    def _forget_tenant(self, iid: str) -> None:
+        """Drop an evicted tenant's empty queue and serve lock; both are
+        recreated on the next submit/cold-start."""
+        with self._cv:
+            q = self.queues.get(iid)
+            if q is not None and not q:
+                del self.queues[iid]
+        self.engine.drop_instance_lock(iid)
+
+    def _note_arrival(self, iid: str, now: float) -> None:
+        last, gap = self.arrivals.get(iid, (None, None))
         if last is not None:
             a = self.policy.ewma_alpha
             gap = (now - last) if gap is None else \
                 a * (now - last) + (1 - a) * gap
-        self.arrivals[req.instance_id] = (now, gap)
-        if self.policy.predictive_wake:
-            inst = self.engine.manager.instances.get(req.instance_id)
-            if inst is not None and inst.state == S.HIBERNATE:
-                self.engine.manager.predictive_wake(req.instance_id)
-                self.log.append((now, "predictive_wake", req.instance_id))
+        self.arrivals[iid] = (now, gap)
 
-    def step(self) -> List[Response]:
-        """Drain the queue once (grouped per instance for batching)."""
-        by_inst: Dict[str, List[Request]] = {}
-        while self.queue:
-            r = self.queue.popleft()
-            by_inst.setdefault(r.instance_id, []).append(r)
-        out: List[Response] = []
-        for iid, reqs in by_inst.items():
+    # ------------------------------------------------------------- serving
+    def _claim(self):
+        """With ``_cv`` held: pop the whole queue of the first unclaimed
+        tenant with work (one claim = one continuous batch)."""
+        for iid, q in self.queues.items():
+            if q and iid not in self._busy:
+                reqs, futs = [], []
+                while q:
+                    r, f = q.popleft()
+                    reqs.append(r)
+                    futs.append(f)
+                self._busy.add(iid)
+                return iid, reqs, futs
+        return None
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                claim = self._claim()
+                while claim is None:
+                    if self._stop.is_set():
+                        return
+                    self._cv.wait(0.1)
+                    claim = self._claim()
+            iid, reqs, futs = claim
+            try:
+                self._serve(iid, reqs, futs)
+            finally:
+                with self._cv:
+                    self._busy.discard(iid)
+                    self._cv.notify_all()
+
+    def _serve(self, iid: str, reqs: List[Request],
+               futs: List[Future]) -> None:
+        try:
             if iid not in self.engine.manager.instances:
                 self.engine.start_instance(iid, self.arch_of[iid])
                 self.log.append((time.monotonic(), "cold_start", iid))
-            out.extend(self.engine.serve_batch(iid, reqs))
-        return out
+            resps = self.engine.serve_batch(iid, reqs)
+            for f, r in zip(futs, resps):
+                f.set_result(r)
+        except BaseException as e:
+            for f in futs:
+                if not f.done():
+                    f.set_exception(e)
 
     # ------------------------------------------------------------- policy
-    def tick(self, now: Optional[float] = None) -> List[str]:
-        """Apply keep-alive policy: deflate (or evict) idle instances."""
+    def _daemon_loop(self) -> None:
+        while not self._stop.wait(self.policy.tick_interval_s):
+            try:
+                self.policy_pass()
+            except Exception as e:       # policy must never kill the daemon
+                self.log.append((time.monotonic(), "policy_error", repr(e)))
+
+    def policy_pass(self, now: Optional[float] = None) -> List[str]:
+        """One policy sweep: keep-alive deflation (or eviction), memory
+        pressure, anticipatory wakes.  Instances currently serving are
+        skipped via non-blocking per-instance locks."""
         now = now if now is not None else time.monotonic()
         mgr = self.engine.manager
         acted = []
         for iid, inst in list(mgr.instances.items()):
             idle = now - inst.last_used
-            if inst.state in (S.WARM, S.WOKEN) and \
-                    idle > self.policy.keep_warm_s:
+            if inst.state not in (S.WARM, S.WOKEN) or \
+                    idle <= self.policy.keep_warm_s:
+                continue
+            lock = self.engine.instance_lock(iid)
+            if not lock.acquire(blocking=False):
+                continue                       # in-flight request: not idle
+            try:
+                if inst.state not in (S.WARM, S.WOKEN):
+                    continue
                 if self.policy.deflate_instead_of_evict:
                     mgr.deflate(iid)
                     self.log.append((now, "deflate", iid))
                 else:
                     mgr.evict(iid)
                     self.log.append((now, "evict", iid))
+                    self._forget_tenant(iid)
                 acted.append(iid)
+            finally:
+                lock.release()
         if self.policy.memory_target_bytes is not None:
             acted += mgr.handle_memory_pressure(
-                self.policy.memory_target_bytes)
+                self.policy.memory_target_bytes,
+                try_lock=self.engine.instance_lock)
         # ⑤ anticipatory SIGCONT: wake tenants whose EWMA inter-arrival
         # model predicts a request within the margin
         if self.policy.anticipate_margin_s is not None:
-            for iid, inst in mgr.instances.items():
+            for iid, inst in list(mgr.instances.items()):
                 if inst.state != S.HIBERNATE:
                     continue
                 last, gap = self.arrivals.get(iid, (None, None))
@@ -111,7 +272,50 @@ class Platform:
                     continue
                 due_in = (last + gap) - now
                 if due_in <= self.policy.anticipate_margin_s:
-                    mgr.predictive_wake(iid)
-                    self.log.append((now, "anticipated_wake", iid))
-                    acted.append(iid)
+                    if mgr.ensure_awake(iid, trigger="sigcont") is not None:
+                        self.log.append((now, "anticipated_wake", iid))
+                        acted.append(iid)
         return acted
+
+
+class Platform(AsyncPlatform):
+    """Synchronous compatibility shim over :class:`AsyncPlatform`.
+
+    No threads: ``step()`` drains the per-tenant queues inline (grouped
+    per instance for batching, as before) and ``tick()`` runs one policy
+    pass.  ``submit`` still returns a future, already resolved by the
+    time ``step()`` returns.
+    """
+
+    def __init__(self, engine: ServingEngine, policy: PlatformPolicy,
+                 arch_of: Dict[str, str]):
+        super().__init__(engine, policy, arch_of, workers=0)
+
+    def submit(self, req: Request, now: Optional[float] = None) -> Future:
+        """Like the async submit, but admission rejection raises
+        immediately: legacy callers ignore the returned future, and a
+        rejection parked on it would silently drop the request."""
+        fut = super().submit(req, now)
+        if fut.done() and fut.exception() is not None:
+            raise fut.exception()
+        return fut
+
+    def step(self) -> List[Response]:
+        """Drain the queues once (grouped per instance for batching)."""
+        out: List[Response] = []
+        while True:
+            with self._cv:
+                claim = self._claim()
+            if claim is None:
+                return out
+            iid, reqs, futs = claim
+            try:
+                self._serve(iid, reqs, futs)
+            finally:
+                with self._cv:
+                    self._busy.discard(iid)
+            out.extend(f.result() for f in futs)
+
+    def tick(self, now: Optional[float] = None) -> List[str]:
+        """Apply keep-alive/pressure/anticipation policy once."""
+        return self.policy_pass(now)

@@ -1,6 +1,8 @@
 """Bitmap Page Allocator (§3.3, Fig. 4): unit + hypothesis property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip on minimal installs
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitmap_alloc import (PAGES_PER_BLOCK, USABLE_PER_BLOCK,

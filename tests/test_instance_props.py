@@ -4,6 +4,8 @@ import itertools
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip on minimal installs
 from hypothesis import given, settings, strategies as st
 
 from repro.core.manager import InstanceManager, ManagerConfig

@@ -1,6 +1,8 @@
 """Shared page pool: ownership, COW sharing, PSS accounting, madvise."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip on minimal installs
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitmap_alloc import PAGES_PER_BLOCK

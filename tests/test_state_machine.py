@@ -1,5 +1,7 @@
 """Container state machine (Fig. 3): exact transition graph."""
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip on minimal installs
 from hypothesis import given, settings, strategies as st
 
 from repro.core.state import (SERVABLE_STATES, TRANSITIONS, ContainerState,

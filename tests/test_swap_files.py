@@ -3,6 +3,8 @@ import os
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip on minimal installs
 from hypothesis import given, settings, strategies as st
 
 from repro.core.swap import ReapFile, SwapFile
