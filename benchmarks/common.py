@@ -69,13 +69,13 @@ SHARED_PATHS = {"embed"}
 
 
 def make_engine(spool: str, scale: str = "tiny", wake_mode: str = "reap",
-                share: bool = False):
+                share: bool = False, dedup: bool = True):
     shutil.rmtree(spool, ignore_errors=True)
     os.makedirs(spool, exist_ok=True)
     factory = build_factory(scale)
     mgr = InstanceManager(
         ManagerConfig(spool_dir=spool, wake_mode=wake_mode,
-                      share_base_weights=share),
+                      share_base_weights=share, dedup_store=dedup),
         factory, shared_loader=shared_loader_for(factory) if share else None)
     return ServingEngine(mgr), mgr
 

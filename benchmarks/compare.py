@@ -1,0 +1,118 @@
+"""Diff two ``benchmarks.run`` result files and fail on regression.
+
+Throughput-like metrics (table columns whose header contains ``/s``) must
+not drop more than ``--max-regress`` relative to the committed baseline;
+claim checks that passed in the baseline must still pass.  Only suites
+present in BOTH files are compared, so a quick CI subset can be diffed
+against a full baseline.
+
+Usage:
+  python -m benchmarks.compare bench_results.json new.json \
+      --max-regress 0.25 --suites allocator,swap_throughput
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+
+def _to_float(cell) -> float | None:
+    if isinstance(cell, (int, float)):
+        return float(cell)
+    if isinstance(cell, str):
+        try:
+            return float(cell.replace(",", ""))
+        except ValueError:
+            return None
+    return None
+
+
+def throughput_metrics(results: dict) -> Dict[Tuple[str, str, str], float]:
+    """(suite, row-label, column) -> value for every higher-is-better cell."""
+    out = {}
+    for suite, payload in results.items():
+        tab = payload.get("table", {})
+        cols = tab.get("columns", [])
+        for row in tab.get("rows", []):
+            label = str(row[0]) if row else ""
+            for col, cell in zip(cols[1:], row[1:]):
+                if "/s" not in str(col):
+                    continue
+                v = _to_float(cell)
+                if v is not None and v > 0:
+                    out[(suite, label, str(col))] = v
+    return out
+
+
+def passed_checks(results: dict):
+    return {(suite, name) for suite, payload in results.items()
+            for name, ok in payload.get("checks", []) if ok}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="max tolerated fractional throughput drop")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated allowlist (default: all shared)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+    if args.suites:
+        keep = set(args.suites.split(","))
+        base = {k: v for k, v in base.items() if k in keep}
+        cand = {k: v for k, v in cand.items() if k in keep}
+
+    b, c = throughput_metrics(base), throughput_metrics(cand)
+    shared = sorted(set(b) & set(c))
+    if not shared:
+        print("compare: no shared throughput metrics — nothing to diff",
+              file=sys.stderr)
+        return 1
+
+    failures = []
+    # a metric that silently vanished is exactly the signal this gate
+    # exists for (e.g. a renamed row hiding a lost fast path)
+    for key in sorted(set(b) - set(c)):
+        if key[0] in cand:                 # suite ran but metric is gone
+            print(f"METRIC MISSING from candidate: {key}")
+            failures.append((key, 0.0))
+    print(f"{'suite':<16} {'metric':<40} {'baseline':>12} {'new':>12} "
+          f"{'ratio':>7}")
+    for key in shared:
+        suite, label, col = key
+        ratio = c[key] / b[key]
+        flag = ""
+        if ratio < 1.0 - args.max_regress:
+            flag = "  << REGRESSION"
+            failures.append((key, ratio))
+        print(f"{suite:<16} {label + ' [' + col + ']':<40} "
+              f"{b[key]:>12,.0f} {c[key]:>12,.0f} {ratio:>6.2f}x{flag}")
+
+    lost = passed_checks(base) - passed_checks(cand) \
+        if set(cand) else set()
+    for suite, name in sorted(lost):
+        # only flag checks the candidate actually ran and failed
+        ran = {n for n, _ in cand.get(suite, {}).get("checks", [])}
+        if name in ran:
+            print(f"CHECK LOST: {suite}: {name}")
+            failures.append(((suite, name, "check"), 0.0))
+
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond "
+              f"{args.max_regress:.0%} tolerance", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(shared)} throughput metrics within "
+          f"{args.max_regress:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

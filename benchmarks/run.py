@@ -3,6 +3,8 @@
   latency_states   — Fig. 6 (request latency per container state)
   memory_states    — Fig. 7 (PSS per state, 10 instances, sharing on)
   density          — deployment-density conclusion
+  dedup_store      — content-addressed swap store: cross-tenant dedup,
+                     zero-page elision, compression tiers
   swap_throughput  — §3.4 random-vs-sequential storage asymmetry
   sharing          — §3.5 runtime-binary (base-weight) sharing
   allocator        — §3.3 bitmap allocator vs free-list baseline
@@ -10,7 +12,7 @@
                      vectored fault IO
   roofline         — brief: per-(arch x shape x mesh) roofline table
 
-`python -m benchmarks.run [--quick] [--only NAME]`
+`python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`
 """
 from __future__ import annotations
 
@@ -23,28 +25,38 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
-    ap.add_argument("--out", default="bench_results.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    # default deliberately NOT bench_results.json: that file is the
+    # committed CI bench-regression baseline (conservative floor) and must
+    # only be updated intentionally
+    ap.add_argument("--out", default="bench_out.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import (allocator, concurrency, density, latency_states,
-                            memory_states, reap_ablation, roofline,
-                            sharing, swap_throughput)
+    from benchmarks import (allocator, concurrency, dedup_store, density,
+                            latency_states, memory_states, reap_ablation,
+                            roofline, sharing, swap_throughput)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
         ("latency_states", latency_states),
         ("memory_states", memory_states),
         ("density", density),
+        ("dedup_store", dedup_store),
         ("sharing", sharing),
         ("reap_ablation", reap_ablation),
         ("concurrency", concurrency),
         ("roofline", roofline),
     ]
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {n for n, _ in suites}
+        if unknown:
+            ap.error(f"unknown suite(s): {sorted(unknown)}")
     results = {}
     all_checks = []
     for name, mod in suites:
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.monotonic()

@@ -96,7 +96,15 @@ def main():
     for iid, inst in mgr.instances.items():
         rep = memory_report(inst, mgr.shared)
         print(f"  {iid:11s} state={rep.state:9s} "
-              f"pss={rep.pss_total / 2**20:6.2f} MB")
+              f"pss={rep.pss_total / 2**20:6.2f} MB "
+              f"disk={rep.disk_stored_pss / 2**20:5.2f}"
+              f"/{rep.disk_logical / 2**20:5.2f} MB (stored/logical)")
+    st = mgr.store.stats()
+    print(f"  swap store: {st['segments']} segments, "
+          f"{st['stored_bytes'] >> 10} KB stored for "
+          f"{st['logical_bytes'] >> 10} KB logical "
+          f"(dedup hits={st['dedup_hits']}, elided={st['elisions']}, "
+          f"sunk={st['sink_events']})")
 
 
 if __name__ == "__main__":

@@ -10,4 +10,5 @@ from repro.core.reap import ReapRecorder
 from repro.core.state import (DEFLATED_STATES, PAUSED_STATES, SERVABLE_STATES,
                               TRANSITIONS, ContainerState, Event,
                               InvalidTransition, StateMachine)
-from repro.core.swap import ReapFile, SwapFile
+from repro.core.store import StoreClient, StorePolicy, SwapStore
+from repro.core.swap import ReapFile, SwapFile, WriteReceipt

@@ -30,10 +30,15 @@ from repro.core.state import ContainerState, Event
 @dataclass
 class DeflateStats:
     reap_bytes: int = 0
-    swap_bytes: int = 0
+    swap_bytes: int = 0              # logical (raw) bytes sent to swap tier
     kv_pages_swapped: int = 0
     kv_pages_reclaimed: int = 0
     shared_bytes_released: int = 0
+    # content-addressed tier breakdown for a SwapStore-backed instance
+    # (a verbatim per-sandbox SwapFile reports stored == swap_bytes)
+    swap_stored_bytes: int = 0       # new on-disk bytes (post compression)
+    swap_dedup_bytes: int = 0        # satisfied by existing shared segments
+    swap_elided_bytes: int = 0       # constant-fill units, metadata only
     seconds: float = 0.0
 
 
@@ -73,7 +78,22 @@ class HibernationManager:
         # unconditional: an empty working set must CLEAR the REAP file,
         # or a later wake would prefetch a previous cycle's stale extents
         inst.reap_file.write_batch(w_reap + kv_reap)
-        inst.swap_file.write_units(w_swap + kv_swap)
+        # coldness signal for the store's compression tiers: these units
+        # missed the working set this cycle.  Only meaningful when a REAP
+        # working set exists — with no recorded set (pagefault-mode
+        # deployments) nothing can "miss" it, and hot units must not sink
+        # to zlib tiers.  Prune counters for keys that no longer exist
+        # (trimmed sessions) so session churn cannot grow the dict
+        if ws:
+            inst.recorder.note_misses(k for k, _ in w_swap + kv_swap)
+            live = set(inst.units)
+            live.update(k for k, _ in kv_reap + kv_swap)
+            inst.recorder.prune_misses(live)
+        receipt = inst.swap_file.write_units(w_swap + kv_swap)
+        if receipt is not None:
+            st.swap_stored_bytes = receipt.stored_bytes
+            st.swap_dedup_bytes = receipt.dedup_bytes
+            st.swap_elided_bytes = receipt.elided_bytes
         inst.drop_weights()
         if inst.kv is not None:
             inst.kv.drop_pages()

@@ -54,7 +54,7 @@ class WeightUnit:
 class ModelInstance:
     def __init__(self, instance_id: str, cfg, params, *, pool,
                  spool_dir: str, shared_paths: Optional[Set[str]] = None,
-                 base_id: Optional[str] = None):
+                 base_id: Optional[str] = None, store=None):
         self.instance_id = instance_id
         self.cfg = cfg
         self.base_id = base_id
@@ -82,7 +82,15 @@ class ModelInstance:
         self._build_catalog()
         self.resident: Set[Tuple] = set(self.units)   # all resident at start
 
-        self.swap_file = SwapFile(f"{spool_dir}/{instance_id}.swap")
+        # page-fault tier: the deployment's content-addressed SwapStore
+        # when dedup is on, else a private per-sandbox SwapFile.  The REAP
+        # file stays per-sandbox either way: its whole point is private
+        # sequential locality of ONE tenant's working set.
+        if store is not None:
+            self.swap_file = store.client(instance_id)
+            self.swap_file.hotness = self.recorder.miss_count
+        else:
+            self.swap_file = SwapFile(f"{spool_dir}/{instance_id}.swap")
         self.reap_file = ReapFile(f"{spool_dir}/{instance_id}.reap")
         self.fault_log: List[Tuple[float, Tuple]] = []
         self.created_at = time.monotonic()
@@ -186,6 +194,9 @@ class ModelInstance:
         reap_items, swap_items = self.collect_weight_items(working_set)
         if reap_items:
             self.reap_file.write_batch(reap_items)
+        if working_set:
+            # only a real working set defines "missing" it (coldness)
+            self.recorder.note_misses(k for k, _ in swap_items)
         self.swap_file.write_units(swap_items)
         self.drop_weights()
         return {"reap_bytes": sum(a.nbytes for _, a in reap_items),

@@ -25,6 +25,7 @@ from repro.core.hibernate import HibernationManager
 from repro.core.instance import ModelInstance
 from repro.core.pool import PagePool
 from repro.core.state import ContainerState, Event
+from repro.core.store import StorePolicy, SwapStore
 
 
 class SharedWeightsRegistry:
@@ -77,6 +78,12 @@ class ManagerConfig:
     memory_limit_bytes: Optional[int] = None
     share_base_weights: bool = True      # §3.5 policy knob
     wake_mode: str = "reap"              # "reap" | "pagefault"
+    #: content-addressed swap tier (§3.4 de-dup table, cross-tenant).
+    #: False falls back to PR-1 private per-sandbox SwapFiles.
+    dedup_store: bool = True
+    #: per-deployment hash salt; None generates a fresh random one
+    store_salt: Optional[bytes] = None
+    store_policy: Optional[StorePolicy] = None
 
 
 class InstanceManager:
@@ -91,6 +98,10 @@ class InstanceManager:
                              cfg.pool_capacity_pages)
         self.shared = (SharedWeightsRegistry(shared_loader)
                        if (shared_loader and cfg.share_base_weights) else None)
+        self.store = (SwapStore(f"{cfg.spool_dir}/store.cas",
+                                salt=cfg.store_salt,
+                                policy=cfg.store_policy)
+                      if cfg.dedup_store else None)
         self.hib = HibernationManager(self.shared)
         self.instances: Dict[str, ModelInstance] = {}
         self.events: List[tuple] = []
@@ -116,7 +127,8 @@ class InstanceManager:
             instance_id, model_cfg, params, pool=self.pool,
             spool_dir=self.cfg.spool_dir,
             shared_paths=shared_paths if self.shared else None,
-            base_id=arch_key if self.shared else None)
+            base_id=arch_key if self.shared else None,
+            store=self.store)
         if self.shared and inst.base_id and inst.shared_paths:
             self.shared.acquire(inst.base_id, inst)
         inst.sm.fire(Event.COLD_START)

@@ -31,6 +31,12 @@ class MemoryReport:
     kv_rss: int                  # pool pages held (RSS)
     kv_pss: float                # pool pages / refcount (prefix sharing)
     metadata: int                # kept-alive host objects
+    # disk tier (swap + REAP files) — the SwapStore's resident-vs-unique-
+    # vs-compressed view.  logical: what verbatim per-sandbox files would
+    # hold; stored_pss: fair-share on-disk bytes (dedup'd segments split
+    # across referencing units, compressed sizes).
+    disk_logical: int = 0
+    disk_stored_pss: float = 0.0
 
     @property
     def pss_total(self) -> float:
@@ -50,6 +56,11 @@ def memory_report(inst, shared_registry=None) -> MemoryReport:
         nshare = max(1, shared_registry.refcount(inst.base_id))
         if not shared_registry.is_loaded(inst.base_id):
             shared_bytes = 0
+    sf = inst.swap_file
+    disk_logical = (getattr(sf, "logical_bytes", None) or sf.file_bytes) \
+        + inst.reap_file.file_bytes
+    # for a StoreClient, file_bytes is already the fair-share (PSS-style)
+    # compressed on-disk footprint; for a private SwapFile it is the file
     return MemoryReport(
         instance_id=inst.instance_id,
         state=inst.state.value,
@@ -60,6 +71,8 @@ def memory_report(inst, shared_registry=None) -> MemoryReport:
         kv_pss=(inst.pool.pss_bytes(inst.instance_id) if inst.pool else 0)
         + (inst.kv.host_bytes() if inst.kv is not None else 0),
         metadata=inst.metadata_bytes(),
+        disk_logical=disk_logical,
+        disk_stored_pss=sf.file_bytes + inst.reap_file.file_bytes,
     )
 
 

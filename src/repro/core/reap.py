@@ -14,7 +14,7 @@ swapped until page-faulted.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import FrozenSet, Hashable, Set
+from typing import Dict, FrozenSet, Hashable, Set
 
 
 @dataclass
@@ -24,6 +24,9 @@ class ReapRecorder:
     #: survives across record sessions — the stable working set (REAP's
     #: observation: the set is stable across invocations of one function)
     stable: Set[Hashable] = field(default_factory=set)
+    #: how many deflate cycles each unit has missed the working set — the
+    #: coldness signal the SwapStore's compression tiers key off
+    misses: Dict[Hashable, int] = field(default_factory=dict)
 
     def start(self) -> None:
         self.recording = True
@@ -48,6 +51,23 @@ class ReapRecorder:
     def working_set(self) -> FrozenSet[Hashable]:
         return frozenset(self.stable)
 
+    def note_misses(self, keys) -> None:
+        """A deflate cycle sent these units to the page-fault tier (they
+        missed the working set): bump their coldness counters."""
+        for k in keys:
+            self.misses[k] = self.misses.get(k, 0) + 1
+
+    def miss_count(self, key: Hashable) -> int:
+        return self.misses.get(key, 0)
+
+    def prune_misses(self, live: Set[Hashable]) -> None:
+        """Drop coldness counters for keys that no longer exist (closed
+        sessions' KV pages): the dict must not grow with session churn.
+        Weight-unit history is preserved — the caller passes the full unit
+        catalog as live."""
+        self.misses = {k: v for k, v in self.misses.items() if k in live}
+
     def forget(self) -> None:
         self.stable = set()
         self.seen = set()
+        self.misses = {}

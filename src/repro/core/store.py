@@ -1,0 +1,470 @@
+"""Content-addressed swap store: the Swapping Manager's de-dup table (§3.4),
+extended across sandboxes.
+
+The per-sandbox :class:`~repro.core.swap.SwapFile` stores every deflated
+unit verbatim, so disk (and page-cache) footprint scales linearly with
+tenant count even when tenants run the same model.  The paper's Swapping
+Manager keeps a de-dup table so identical swapped-out units are stored
+once; REAP-style snapshot work shows most restored pages are identical
+across snapshots of one function, and the same holds across tenants that
+share a base model.  The :class:`SwapStore` realises that disk tier:
+
+  * units are hashed on deflate (salted BLAKE2b — the salt is generated
+    per deployment, so content hashes never leak across deployments and a
+    tenant cannot probe another deployment's store by hash);
+  * zero/constant payloads are elided to metadata (no disk bytes at all —
+    KV pages' unused tails and zero-init params cost nothing);
+  * duplicate payloads across sessions *and tenants* are stored once in a
+    refcounted segment file; terminating an instance decrefs its segments
+    and frees the extents of any that hit refcount zero (GC), so one
+    tenant's eviction never touches bytes another tenant still references;
+  * cold payloads are transparently compressed: a unit that keeps missing
+    the REAP working set keeps coming back through the page-fault tier,
+    and its miss count selects a zlib level (:class:`StorePolicy`) —
+    payloads only ever *sink* to higher compression, never decompress back
+    up a tier.
+
+The inflate path keeps the vectored ``preadv`` batching of the plain swap
+files: requested units are dedup'd by digest, segment extents are sorted
+and adjacent extents merged into runs (``repro.core.swap.read_extents``),
+so a wake storm's fault set is still a handful of sequential disk passes.
+
+Tenants that opt out of dedup (``ManagerConfig.dedup_store=False``) keep
+the PR-1 private per-sandbox ``SwapFile`` — the store is interface-
+compatible (:class:`StoreClient` duck-types ``SwapFile``), so every layer
+above (``HibernationManager``, ``ModelInstance``, ``PagedKVCache``) is
+agnostic to which tier backs it.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+import zlib
+from dataclasses import dataclass
+from typing import (Callable, Dict, Hashable, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from repro.core.swap import WriteReceipt, read_extents
+
+
+@dataclass
+class StorePolicy:
+    """Adaptive compression tiers.
+
+    ``tiers`` maps a REAP-working-set miss count threshold to a zlib
+    level; the highest threshold <= the unit's miss count wins.  Units
+    below ``min_size`` are never compressed (header overhead dominates).
+    A segment's level only increases (cold payloads sink); if compression
+    does not save at least ``1 - min_ratio`` of the payload it stays raw
+    (marginal wins are not worth paying inflate bandwidth on every wake —
+    random float mantissas "compress" ~10-15% via exponent-byte structure)
+    and the attempted level is remembered so hot loops don't re-deflate
+    incompressible data.
+    """
+    tiers: Tuple[Tuple[int, int], ...] = ((0, 0), (2, 1), (4, 6), (8, 9))
+    min_size: int = 512
+    min_ratio: float = 0.8
+
+    def level_for(self, miss_count: int, nbytes: int) -> int:
+        if nbytes < self.min_size:
+            return 0
+        lvl = 0
+        for thresh, level in self.tiers:
+            if miss_count >= thresh:
+                lvl = level
+        return lvl
+
+
+@dataclass
+class _Segment:
+    offset: int
+    stored_nbytes: int           # on-disk bytes (post compression)
+    raw_nbytes: int
+    level: int                   # zlib level the payload is stored at (0=raw)
+    refs: int = 0
+    tried_level: int = 0         # highest level ever attempted (anti-thrash)
+
+
+@dataclass
+class UnitMeta:
+    """Per-(owner, key) record: either a constant fill or a digest into
+    the shared segment table."""
+    digest: Optional[bytes]      # None -> constant-elided
+    fill: int                    # byte value when elided
+    nbytes: int
+    dtype: str
+    shape: Tuple[int, ...]
+
+
+class SwapStore:
+    """One per deployment (``InstanceManager``): the shared, refcounted,
+    content-addressed segment file all tenants' page-fault tiers ride."""
+
+    def __init__(self, path: str, *, salt: Optional[bytes] = None,
+                 policy: Optional[StorePolicy] = None):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.fd: Optional[int] = os.open(
+            path, os.O_RDWR | os.O_CREAT | os.O_TRUNC, 0o600)
+        #: per-deployment hash salt (security: content hashes are not
+        #: comparable across deployments)
+        self.salt = os.urandom(16) if salt is None else salt
+        self.policy = policy or StorePolicy()
+        self._segments: Dict[bytes, _Segment] = {}
+        self._free: List[Tuple[int, int]] = []       # coalesced (off, nbytes)
+        self._append_at = 0
+        #: reads run outside the lock; extents freed while any read is in
+        #: flight are quarantined here so a reader's snapshot can never be
+        #: overwritten by a concurrent allocation
+        self._active_reads = 0
+        self._quarantine: List[Tuple[int, int]] = []
+        self._clients: Dict[str, "StoreClient"] = {}
+        self._lock = threading.RLock()
+        # counters (store-wide; clients keep their own read/write counters)
+        self.puts = 0
+        self.dedup_hits = 0
+        self.elisions = 0
+        self.sink_events = 0                          # recompressions
+        self.bytes_written = 0                        # on-disk bytes written
+        self.writes = 0                               # write syscalls
+        self.reads = 0                                # read syscalls
+
+    # ------------------------------------------------------------- clients
+    def client(self, owner: str) -> "StoreClient":
+        with self._lock:
+            c = self._clients.get(owner)
+            if c is None:
+                c = self._clients[owner] = StoreClient(self, owner)
+            return c
+
+    # ------------------------------------------------------------- hashing
+    def _digest(self, buf: bytes) -> bytes:
+        return hashlib.blake2b(buf, digest_size=16, key=self.salt).digest()
+
+    # ------------------------------------------------------------- extents
+    def _alloc(self, n: int) -> int:
+        """First-fit from the GC free list, else append."""
+        for i, (off, sz) in enumerate(self._free):
+            if sz >= n:
+                if sz == n:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (off + n, sz - n)
+                return off
+        off = self._append_at
+        self._append_at += n
+        return off
+
+    def _release_extent(self, off: int, n: int) -> None:
+        """Return an extent to the free list, coalescing neighbours.
+        While reads are in flight the extent is quarantined instead: an
+        unlocked reader may still be preadv-ing those bytes."""
+        if n <= 0:
+            return
+        if self._active_reads:
+            self._quarantine.append((off, n))
+            return
+        self._free.append((off, n))
+        self._free.sort()
+        merged: List[Tuple[int, int]] = []
+        for o, s in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == o:
+                merged[-1] = (merged[-1][0], merged[-1][1] + s)
+            else:
+                merged.append((o, s))
+        # trailing free space shrinks the append frontier (and the file)
+        if merged and merged[-1][0] + merged[-1][1] == self._append_at:
+            o, _ = merged.pop()
+            self._append_at = o
+            os.ftruncate(self.fd, o)
+        self._free = merged
+
+    # ------------------------------------------------------------- encode
+    def _encode(self, buf: bytes, level: int) -> Tuple[bytes, int]:
+        if level > 0:
+            comp = zlib.compress(buf, level)
+            if len(comp) <= self.policy.min_ratio * len(buf):
+                return comp, level
+        return buf, 0
+
+    def _payload(self, seg: _Segment) -> bytes:
+        blob = os.pread(self.fd, seg.stored_nbytes, seg.offset)
+        self.reads += 1
+        return zlib.decompress(blob) if seg.level else blob
+
+    def _maybe_sink(self, seg: _Segment, want_level: int) -> None:
+        """Re-store a segment at a higher zlib level (cold payloads sink)."""
+        if want_level <= max(seg.level, seg.tried_level) or \
+                seg.raw_nbytes < self.policy.min_size:
+            return
+        raw = self._payload(seg)
+        seg.tried_level = want_level
+        comp, level = self._encode(raw, want_level)
+        if level == 0 or len(comp) >= seg.stored_nbytes:
+            return                          # incompressible: stays put
+        old_off, old_n = seg.offset, seg.stored_nbytes
+        seg.offset = self._alloc(len(comp))
+        seg.stored_nbytes = len(comp)
+        seg.level = level
+        os.pwrite(self.fd, comp, seg.offset)
+        self.bytes_written += len(comp)
+        self.writes += 1
+        self.sink_events += 1
+        self._release_extent(old_off, old_n)
+
+    # ------------------------------------------------------------- put/get
+    def put(self, client: "StoreClient", key: Hashable, arr: np.ndarray,
+            miss_count: int = 0) -> WriteReceipt:
+        arr = np.ascontiguousarray(arr)
+        buf = arr.tobytes()
+        r = WriteReceipt(logical_bytes=len(buf))
+        with self._lock:
+            self.puts += 1
+            # constant-fill elision: zero pages (and any single-byte fill)
+            # become pure metadata
+            if len(buf) == 0 or buf.count(buf[:1]) == len(buf):
+                self._drop_meta(client.extents.pop(key, None))
+                client.extents[key] = UnitMeta(
+                    None, buf[0] if buf else 0, len(buf),
+                    str(arr.dtype), arr.shape)
+                self.elisions += 1
+                r.elided_bytes = len(buf)
+                return r
+            digest = self._digest(buf)
+            old = client.extents.get(key)
+            if old is not None and old.digest == digest:
+                # rewrite-identical (every re-deflate of unchanged weights):
+                # no disk IO, no refcount change
+                self.dedup_hits += 1
+                r.dedup_bytes = len(buf)
+                self._maybe_sink(self._segments[digest],
+                                 self.policy.level_for(miss_count, len(buf)))
+                client.extents[key] = UnitMeta(
+                    digest, 0, len(buf), str(arr.dtype), arr.shape)
+                return r
+            self._drop_meta(client.extents.pop(key, None))
+            seg = self._segments.get(digest)
+            level = self.policy.level_for(miss_count, len(buf))
+            if seg is None:
+                payload, stored_level = self._encode(buf, level)
+                seg = _Segment(self._alloc(len(payload)), len(payload),
+                               len(buf), stored_level, refs=0,
+                               tried_level=level)
+                os.pwrite(self.fd, payload, seg.offset)
+                self.bytes_written += len(payload)
+                self.writes += 1
+                self._segments[digest] = seg
+                r.stored_bytes = len(payload)
+            else:
+                self.dedup_hits += 1
+                r.dedup_bytes = len(buf)
+                self._maybe_sink(seg, level)
+            seg.refs += 1
+            client.extents[key] = UnitMeta(
+                digest, 0, len(buf), str(arr.dtype), arr.shape)
+            return r
+
+    def read(self, client: "StoreClient", keys: Sequence[Hashable]
+             ) -> Dict[Hashable, np.ndarray]:
+        """Vectored batch read: keys dedup by digest, segment extents are
+        sorted and adjacent extents merged — one ``preadv`` per run.
+
+        The lock is held only to snapshot the extent plan: the disk IO and
+        zlib inflate run unlocked so concurrent tenants' wakes overlap
+        (a wake storm must not serialize on the deployment-wide store).
+        The snapshot stays valid because (a) the caller holds a ref on
+        every segment it reads, so GC cannot free them, and (b) extents
+        freed by *other* tenants' GC or by sinking are quarantined until
+        in-flight reads drain (`_release_extent`)."""
+        with self._lock:
+            metas = [(k, client.extents[k]) for k in keys]
+            by_digest: Dict[bytes, List[Tuple[Hashable, UnitMeta]]] = {}
+            constants: List[Tuple[Hashable, UnitMeta]] = []
+            for key, m in metas:
+                if m.digest is None:
+                    constants.append((key, m))
+                else:
+                    by_digest.setdefault(m.digest, []).append((key, m))
+            plan = sorted(((d, self._segments[d].offset,
+                            self._segments[d].stored_nbytes,
+                            self._segments[d].level) for d in by_digest),
+                          key=lambda p: p[1])
+            self._active_reads += 1
+        out: Dict[Hashable, np.ndarray] = {}
+        calls = nbytes = 0
+        try:
+            for key, m in constants:       # materialized outside the lock
+                out[key] = np.frombuffer(
+                    bytes([m.fill]) * m.nbytes if m.nbytes else b"",
+                    m.dtype).reshape(m.shape).copy()
+            bufs, calls = read_extents(self.fd,
+                                       [(off, n) for _, off, n, _ in plan])
+            for (d, _, _, level), buf in zip(plan, bufs):
+                raw = zlib.decompress(bytes(buf)) if level else buf
+                for key, m in by_digest[d]:
+                    out[key] = np.frombuffer(
+                        raw, m.dtype, count=m.nbytes
+                        // np.dtype(m.dtype).itemsize
+                    ).reshape(m.shape).copy()
+                    nbytes += m.nbytes
+        finally:
+            with self._lock:
+                self._active_reads -= 1
+                if not self._active_reads and self._quarantine:
+                    pending, self._quarantine = self._quarantine, []
+                    for off, n in pending:
+                        self._release_extent(off, n)
+                self.reads += calls
+                client.reads += calls
+                client.bytes_read += nbytes
+        return out
+
+    # ------------------------------------------------------------- GC
+    def _drop_meta(self, meta: Optional[UnitMeta]) -> None:
+        if meta is None or meta.digest is None:
+            return
+        seg = self._segments.get(meta.digest)
+        if seg is None:
+            return
+        seg.refs -= 1
+        if seg.refs <= 0:
+            del self._segments[meta.digest]
+            self._release_extent(seg.offset, seg.stored_nbytes)
+
+    def release(self, client: "StoreClient") -> int:
+        """Instance termination: decref every segment the owner references;
+        segments at refcount zero are freed (their extents return to the
+        allocator).  Returns on-disk bytes reclaimed."""
+        with self._lock:
+            before = self.live_bytes
+            for meta in client.extents.values():
+                self._drop_meta(meta)
+            client.extents.clear()
+            self._clients.pop(client.owner, None)
+            return before - self.live_bytes
+
+    def close(self) -> None:
+        with self._lock:
+            if self.fd is not None:
+                os.close(self.fd)
+                self.fd = None
+            if os.path.exists(self.path):
+                os.unlink(self.path)
+            self._segments.clear()
+            self._clients.clear()
+
+    # ------------------------------------------------------------- stats
+    @property
+    def live_bytes(self) -> int:
+        """On-disk bytes referenced by live segments."""
+        return sum(s.stored_nbytes for s in self._segments.values())
+
+    @property
+    def file_bytes(self) -> int:
+        return self._append_at
+
+    def stats(self) -> Dict[str, float]:
+        """Resident-vs-unique-vs-compressed accounting (density analysis)."""
+        with self._lock:
+            segs = list(self._segments.values())
+            logical = elided = 0
+            for c in self._clients.values():
+                for m in c.extents.values():
+                    logical += m.nbytes
+                    if m.digest is None:
+                        elided += m.nbytes
+            unique = sum(s.raw_nbytes for s in segs)
+            stored = sum(s.stored_nbytes for s in segs)
+            return {
+                "logical_bytes": logical,    # what verbatim files would hold
+                "unique_bytes": unique,      # after dedup + elision
+                "stored_bytes": stored,      # after compression (on disk)
+                "elided_bytes": elided,
+                "segments": len(segs),
+                "puts": self.puts,
+                "dedup_hits": self.dedup_hits,
+                "elisions": self.elisions,
+                "sink_events": self.sink_events,
+                "free_bytes": sum(n for _, n in self._free),
+            }
+
+
+class StoreClient:
+    """One tenant's view of the shared store — duck-typed to
+    :class:`~repro.core.swap.SwapFile` so ``ModelInstance`` /
+    ``HibernationManager`` / ``PagedKVCache`` work unchanged on either.
+
+    ``hotness(key) -> int`` (wired to the instance's
+    :meth:`~repro.core.reap.ReapRecorder.miss_count`) feeds the adaptive
+    compression policy at write time.
+    """
+
+    def __init__(self, store: SwapStore, owner: str):
+        self.store = store
+        self.owner = owner
+        self.path = store.path
+        self.extents: Dict[Hashable, UnitMeta] = {}
+        self.hotness: Optional[Callable[[Hashable], int]] = None
+        self.bytes_written = 0               # logical (raw) bytes written
+        self.bytes_read = 0
+        self.reads = 0                       # read syscalls this owner caused
+        self.writes = 0                      # unit writes (puts)
+        self.last_receipt = WriteReceipt()
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self.extents
+
+    def _miss(self, key: Hashable) -> int:
+        return self.hotness(key) if self.hotness is not None else 0
+
+    # ------------------------------------------------------------- writes
+    def write_unit(self, key: Hashable, arr: np.ndarray) -> None:
+        r = self.store.put(self, key, arr, self._miss(key))
+        self.bytes_written += r.logical_bytes
+        self.writes += 1
+        self.last_receipt += r
+
+    def write_units(self, items: Sequence[Tuple[Hashable, np.ndarray]]
+                    ) -> WriteReceipt:
+        r = WriteReceipt()
+        for k, a in items:
+            r += self.store.put(self, k, a, self._miss(k))
+            self.writes += 1
+        self.bytes_written += r.logical_bytes
+        self.last_receipt = r
+        return r
+
+    # ------------------------------------------------------------- reads
+    def read_unit(self, key: Hashable) -> np.ndarray:
+        return self.store.read(self, [key])[key]
+
+    def read_units(self, keys: Sequence[Hashable]
+                   ) -> Dict[Hashable, np.ndarray]:
+        return self.store.read(self, keys)
+
+    # ------------------------------------------------------------- admin
+    def delete(self) -> None:
+        """Sandbox termination (§3.4): release this owner's refs; shared
+        segments survive for the tenants still referencing them."""
+        self.store.release(self)
+
+    @property
+    def logical_bytes(self) -> int:
+        return sum(m.nbytes for m in self.extents.values())
+
+    @property
+    def file_bytes(self) -> int:
+        """Fair-share on-disk footprint (PSS analogue for disk): each
+        segment's stored bytes split across its referencing units."""
+        with self.store._lock:
+            tot = 0.0
+            for m in self.extents.values():
+                if m.digest is None:
+                    continue
+                seg = self.store._segments.get(m.digest)
+                if seg is not None and seg.refs:
+                    tot += seg.stored_nbytes / seg.refs
+            return int(tot)

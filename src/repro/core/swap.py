@@ -64,6 +64,73 @@ class _Extent:
     shape: Tuple[int, ...]
 
 
+@dataclass
+class WriteReceipt:
+    """What one batch of unit writes actually did to the disk tier.
+
+    ``logical_bytes`` is what a verbatim per-sandbox layout would store;
+    the other fields break that down for content-addressed backends
+    (``SwapStore``).  Plain files store everything verbatim, so for them
+    ``stored_bytes == logical_bytes``.
+    """
+    logical_bytes: int = 0       # raw bytes the caller asked to persist
+    stored_bytes: int = 0        # new on-disk bytes this write added
+    dedup_bytes: int = 0         # raw bytes satisfied by existing segments
+    elided_bytes: int = 0        # raw bytes elided to constant-fill metadata
+
+    def __iadd__(self, o: "WriteReceipt") -> "WriteReceipt":
+        self.logical_bytes += o.logical_bytes
+        self.stored_bytes += o.stored_bytes
+        self.dedup_bytes += o.dedup_bytes
+        self.elided_bytes += o.elided_bytes
+        return self
+
+
+def read_extents(fd, extents: Sequence[Tuple[int, int]]
+                 ) -> Tuple[List[bytearray], int]:
+    """Vectored read of ``(offset, nbytes)`` extents pre-sorted by offset:
+    adjacent extents merge into runs and each run is one ``preadv``
+    (chunked at ``IOV_MAX`` io-vectors).  Returns the filled buffers in
+    input order plus the syscall count — shared by the per-sandbox files
+    and the content-addressed ``SwapStore`` segment reads."""
+    bufs: List[bytearray] = []
+    run: List[bytearray] = []
+    run_start = run_end = None
+    calls = 0
+
+    def flush():
+        nonlocal calls
+        if not run:
+            return
+        if _HAVE_PREADV:
+            pos, i = run_start, 0
+            while i < len(run):
+                chunk = run[i:i + IOV_MAX]
+                calls += _preadv_full(fd, chunk, pos)
+                pos += sum(len(b) for b in chunk)
+                i += IOV_MAX
+        else:                              # pragma: no cover - non-POSIX
+            pos = run_start
+            for buf in run:
+                buf[:] = os.pread(fd, len(buf), pos)
+                calls += 1
+                pos += len(buf)
+        run.clear()
+
+    for off, n in extents:
+        if run_end is not None and off != run_end:
+            flush()
+            run_start = None
+        if run_start is None:
+            run_start = off
+        buf = bytearray(n)
+        run.append(buf)
+        bufs.append(buf)
+        run_end = off + n
+    flush()
+    return bufs, calls
+
+
 class _FileBase:
     def __init__(self, path: str):
         self.path = path
@@ -104,38 +171,13 @@ class _FileBase:
         """
         exts = sorted(((k, self.extents[k]) for k in keys),
                       key=lambda kv: kv[1].offset)
+        bufs, calls = read_extents(self.fd,
+                                   [(e.offset, e.nbytes) for _, e in exts])
+        self.reads += calls
         out: Dict[Hashable, np.ndarray] = {}
-        run: List[Tuple[Hashable, _Extent, bytearray]] = []
-        run_end = None
-
-        def flush():
-            if not run:
-                return
-            bufs = [b for _, _, b in run]
-            start = run[0][1].offset
-            if _HAVE_PREADV:
-                pos, i = start, 0
-                while i < len(bufs):
-                    chunk = bufs[i:i + IOV_MAX]
-                    self.reads += _preadv_full(self.fd, chunk, pos)
-                    pos += sum(len(b) for b in chunk)
-                    i += IOV_MAX
-            else:                          # pragma: no cover - non-POSIX
-                for _, ext, buf in run:
-                    buf[:] = os.pread(self.fd, ext.nbytes, ext.offset)
-                    self.reads += 1
-            for key, ext, buf in run:
-                self.bytes_read += ext.nbytes
-                out[key] = np.frombuffer(
-                    buf, ext.dtype).reshape(ext.shape).copy()
-            run.clear()
-
-        for key, ext in exts:
-            if run_end is not None and ext.offset != run_end:
-                flush()
-            run.append((key, ext, bytearray(ext.nbytes)))
-            run_end = ext.offset + ext.nbytes
-        flush()
+        for (key, ext), buf in zip(exts, bufs):
+            self.bytes_read += ext.nbytes
+            out[key] = np.frombuffer(buf, ext.dtype).reshape(ext.shape).copy()
         return out
 
 
@@ -156,9 +198,14 @@ class SwapFile(_FileBase):
         self.bytes_written += len(buf)
         self.writes += 1
 
-    def write_units(self, items: Sequence[Tuple[Hashable, np.ndarray]]) -> None:
+    def write_units(self, items: Sequence[Tuple[Hashable, np.ndarray]]
+                    ) -> WriteReceipt:
+        r = WriteReceipt()
         for k, a in items:
             self.write_unit(k, a)
+            r.logical_bytes += a.nbytes
+            r.stored_bytes += a.nbytes       # verbatim: no dedup/elision
+        return r
 
     def read_unit(self, key: Hashable) -> np.ndarray:
         """One random read — the page-fault swap-in path."""

@@ -128,6 +128,19 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch          # decode: one token/seq
 
 
+def xla_cost_dict(compiled) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across jax versions: older
+    releases return a dict, newer ones a one-element list of dicts (one
+    per device), and either may be empty/None."""
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return c or {}
+
+
 def analyse(compiled, cfg, shape, mesh_name: str, chips: int) -> Roofline:
     """Roofline terms from the partitioned module via the trip-count-aware
     HLO cost model (launch/hlo_cost.py).  ``compiled.cost_analysis()`` is
@@ -135,7 +148,7 @@ def analyse(compiled, cfg, shape, mesh_name: str, chips: int) -> Roofline:
     under-reports by ~L (verified; EXPERIMENTS.md §Roofline methodology)."""
     from repro.launch import hlo_cost
 
-    xla_cost = compiled.cost_analysis() or {}
+    xla_cost = xla_cost_dict(compiled)
     try:
         mem = compiled.memory_analysis()
         bpd = (getattr(mem, "temp_size_in_bytes", 0)

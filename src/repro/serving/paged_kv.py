@@ -198,7 +198,13 @@ class PagedKVCache:
     def export_items(self, working_set: frozenset
                      ) -> Tuple[List[Tuple[Tuple, np.ndarray]],
                                 List[Tuple[Tuple, np.ndarray]]]:
-        """Partition resident cache units into (reap, swap) item lists."""
+        """Partition resident cache units into (reap, swap) item lists.
+
+        The region of a page beyond its written tokens is allocator
+        garbage; it is zeroed in the exported copy so identical-content
+        pages hash identically across sessions and tenants — this is what
+        lets KV pages dedup (and half-empty tail pages constant-elide) in
+        the content-addressed SwapStore."""
         reap, swap = [], []
         for sid, s in self.sessions.items():
             for layer in range(len(s.pages)):
@@ -208,6 +214,9 @@ class PagedKVCache:
                     key = ("kv", sid, layer, pidx)
                     phys = self.pool._phys([pid])[0]
                     data = self.pool.data[phys].copy()
+                    used = min(max(s.num_tokens - pidx * self.page_tokens, 0),
+                               self.page_tokens) * self.token_elems
+                    data[used:] = 0
                     (reap if key in working_set else swap).append((key, data))
             for key, arr in s.host_units.items():
                 if arr is None:

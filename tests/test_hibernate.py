@@ -94,8 +94,12 @@ def test_expert_units_are_separate(tiny_factory, spool_dir):
     assert st.faulted_bytes < total / cfg.moe.num_experts + 1
 
 
-def test_swap_files_deleted_on_evict(mgr, spool_dir):
+def test_swap_files_deleted_on_evict(tiny_factory, spool_dir):
+    """§3.4: private per-sandbox files are unlinked at termination."""
     import os
+    mgr = InstanceManager(
+        ManagerConfig(spool_dir=spool_dir, wake_mode="reap",
+                      dedup_store=False), tiny_factory)
     inst = _start(mgr)
     mgr.deflate("i0")
     paths = [inst.swap_file.path, inst.reap_file.path]
@@ -104,6 +108,22 @@ def test_swap_files_deleted_on_evict(mgr, spool_dir):
     mgr.evict("i0")
     assert not any(os.path.exists(p) for p in paths)
     assert inst.state == ContainerState.DEAD
+
+
+def test_store_released_on_evict(mgr):
+    """Dedup mode: evicting a tenant decrefs its store units (the shared
+    segment file survives for other tenants) and deletes its REAP file."""
+    import os
+    inst = _start(mgr)
+    mgr.deflate("i0")
+    assert inst.swap_file.extents and mgr.store.stats()["stored_bytes"] > 0
+    mgr.hib.wake(inst, mode="reap", trigger="sigcont")
+    mgr.evict("i0")
+    assert inst.state == ContainerState.DEAD
+    assert not inst.swap_file.extents
+    assert mgr.store.stats()["stored_bytes"] == 0      # sole tenant: all GC'd
+    assert not os.path.exists(inst.reap_file.path)
+    assert os.path.exists(mgr.store.path)              # deployment-lifetime
 
 
 def test_memory_pressure_deflates_lru(mgr):

@@ -34,7 +34,8 @@ def test_scan_multiplies_by_trip_count():
     assert c.flops == 12 * 2 * 32 * 64 * 64
     # raw XLA cost_analysis undercounts (documents the bug we fix):
     # it reports ~one body's flops (+ loop-control scalar ops), not 12x
-    raw = jax.jit(scanned).lower(x, w).compile().cost_analysis()
+    from repro.launch.analysis import xla_cost_dict
+    raw = xla_cost_dict(jax.jit(scanned).lower(x, w).compile())
     assert raw["flops"] < 1.1 * 2 * 32 * 64 * 64
 
 
