@@ -23,6 +23,7 @@ BUDGET = 256 << 20          # 256 MB of "device" memory
 def packed_instances(policy: str, spool: str):
     eng, mgr = make_engine(f"{spool}/{policy}", "tiny", "reap", share=True)
     count = 0
+    wake_stats = []
     while count < 200:
         iid = f"i{count}"
         inst = eng.start_instance(iid, ARCH, shared_paths={"embed"})
@@ -34,8 +35,14 @@ def packed_instances(policy: str, spool: str):
                                                    close_session=True))
             mgr.deflate(iid)
             if policy == "woken-mix":
-                # woken residency: wake with the working set resident
-                mgr.predictive_wake(iid)
+                # woken residency: wake with the working set resident.
+                # The anticipatory wake streams (low priority); density
+                # counts settled residency, so drain the tail first.
+                st = mgr.predictive_wake(iid)
+                if inst.wake_pipeline is not None:
+                    inst.wake_pipeline.wait(60)
+                if st is not None:
+                    wake_stats.append(st)
         total = sum(memory_report(i, mgr.shared).pss_total
                     for i in mgr.instances.values())
         if total > BUDGET:
@@ -47,13 +54,20 @@ def packed_instances(policy: str, spool: str):
     reps = [memory_report(i, mgr.shared) for i in mgr.instances.values()]
     disk_logical = sum(r.disk_logical for r in reps)
     disk_stored = sum(r.disk_stored_pss for r in reps)
-    return count, disk_logical, disk_stored
+    return count, disk_logical, disk_stored, wake_stats
+
+
+def _wake_ms(stats, attr):
+    if not stats:
+        return "-"
+    return f"{sum(getattr(s, attr) for s in stats) / len(stats) * 1e3:.2f}"
 
 
 def main(quick: bool = False):
     tab = Table(f"Density: tenants within {BUDGET >> 20} MB ({ARCH})",
                 ["policy", "instances", "x vs warm-only",
-                 "disk logical MB", "disk stored MB"])
+                 "disk logical MB", "disk stored MB",
+                 "wake io ms", "wake inflate ms", "wake crit ms"])
     rows = [("warm-only", *packed_instances("warm-only",
                                             "/tmp/bench_density"))]
     base = rows[0][1]
@@ -61,8 +75,10 @@ def main(quick: bool = False):
             else ["hibernate-all", "hibernate-cold", "woken-mix"])
     for pol in pols:
         rows.append((pol, *packed_instances(pol, "/tmp/bench_density")))
-    for pol, n, dl, ds in rows:
-        tab.add(pol, n, f"{n / max(base, 1):.1f}x", fmt_mb(dl), fmt_mb(ds))
+    for pol, n, dl, ds, ws in rows:
+        tab.add(pol, n, f"{n / max(base, 1):.1f}x", fmt_mb(dl), fmt_mb(ds),
+                _wake_ms(ws, "io_seconds"), _wake_ms(ws, "inflate_seconds"),
+                _wake_ms(ws, "critical_path_seconds"))
     print(tab.render())
     cold = rows[2]
     checks = [("density", rows[1][1] > rows[0][1]),

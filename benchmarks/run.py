@@ -5,6 +5,8 @@
   density          — deployment-density conclusion
   dedup_store      — content-addressed swap store: cross-tenant dedup,
                      zero-page elision, compression tiers
+  wake_latency     — streamed wake pipeline: synchronous vs pipelined
+                     time-to-first-token (p50/p99)
   swap_throughput  — §3.4 random-vs-sequential storage asymmetry
   sharing          — §3.5 runtime-binary (base-weight) sharing
   allocator        — §3.3 bitmap allocator vs free-list baseline
@@ -35,10 +37,11 @@ def main(argv=None):
 
     from benchmarks import (allocator, concurrency, dedup_store, density,
                             latency_states, memory_states, reap_ablation,
-                            roofline, sharing, swap_throughput)
+                            roofline, sharing, swap_throughput, wake_latency)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
+        ("wake_latency", wake_latency),
         ("latency_states", latency_states),
         ("memory_states", memory_states),
         ("density", density),

@@ -1,0 +1,170 @@
+"""Wake latency: synchronous vs pipelined (streamed) REAP wake.
+
+The paper's claim is that a Woken container answers with near-Warm
+latency because only *part* of the deflated memory must be inflated
+before the request runs.  This suite measures exactly that:
+**time-to-first-token** for a request that wakes a hibernated tenant
+whose working set is dominated by tail bytes the first token does not
+need — other sessions' deep-layer KV context, the shape of a real
+multi-turn chat deployment.
+
+  synchronous  — ``wake()`` restores the WHOLE working set, then serves.
+  pipelined    — ``wake()`` returns at the prefill-critical prefix
+                 (weights + embedding blocks + layer-0 KV); the deeper
+                 layers' KV streams in the background while the first
+                 request computes.
+
+The tenant: a tiny dense llama stretched to 6 layers, with SESSIONS
+long-context sessions resident in the working set.  Session KV is
+synthesized directly into pool pages (the wake path neither knows nor
+cares how the pages got their bytes); the probe request is a real
+prefill on a fresh session.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import shutil
+import time
+
+import numpy as np
+
+from benchmarks.common import Table, fmt_mb, request_for
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.core.metrics import percentile
+from repro.serving.engine import ServingEngine
+
+ARCH = "llama3.2-3b"
+NUM_LAYERS = 6
+SESSIONS = 16
+SESSION_TOKENS = 1024        # 16 pool pages per layer per session
+PROBE_LEN = 4
+
+
+def _factory():
+    import jax
+    from repro.configs import get_config, tiny_config
+    from repro.models import model
+    cache = {}
+
+    def factory(arch_key):
+        if arch_key not in cache:
+            cfg = dataclasses.replace(tiny_config(get_config(arch_key)),
+                                      num_layers=NUM_LAYERS)
+            params = model.init_params(jax.random.PRNGKey(0), cfg)
+            cache[arch_key] = (cfg, params)
+        cfg, params = cache[arch_key]
+        return cfg, jax.tree.map(lambda x: x.copy(), params)
+
+    return factory
+
+
+def _synthesize_sessions(inst, sessions: int, tokens: int) -> int:
+    """Fill the cache with long-context sessions (multi-turn history).
+
+    Pages are written directly — the swap/wake machinery is agnostic to
+    how KV bytes were produced, and this keeps the benchmark's setup cost
+    off model compute."""
+    kv = inst.kv
+    rng = np.random.default_rng(0)
+    n = 0
+    for s in range(sessions):
+        sid = f"chat{s}"
+        kv.new_session(sid)
+        data = rng.standard_normal(
+            (tokens, kv.token_elems)).astype(np.float32)
+        for layer in range(inst.cfg.num_layers):
+            kv.write_tokens(sid, layer, data, 0)
+            n += data.nbytes
+        kv.sessions[sid].num_tokens = tokens
+    return n
+
+
+def _weight_digests(inst):
+    return {k: hashlib.blake2b(np.ascontiguousarray(v).tobytes(),
+                               digest_size=16).digest()
+            for k, v in inst.weights.items()}
+
+
+def _setup(spool: str, pipelined: bool, sessions: int):
+    shutil.rmtree(spool, ignore_errors=True)
+    mgr = InstanceManager(
+        ManagerConfig(spool_dir=spool, wake_mode="reap",
+                      pipelined_wake=pipelined,
+                      pool_capacity_pages=1 << 16), _factory())
+    eng = ServingEngine(mgr)
+    inst = eng.start_instance("tenant", ARCH)
+    cfg = inst.cfg
+    _synthesize_sessions(inst, sessions, SESSION_TOKENS)
+    # compile-cache warmup for the probe shape (survives hibernation)
+    eng.handle(request_for(cfg, "tenant", "warm", PROBE_LEN, 0, seed=99,
+                           close_session=True))
+    # working set := everything resident (hibernate-all with full WS)
+    inst.recorder.start()
+    inst.recorder.record_many(inst.units)
+    for sid in inst.kv.sessions:
+        inst.recorder.record_many(inst.kv.keys_for(sid))
+    inst.recorder.stop()
+    return eng, mgr, inst
+
+
+def _cycles(eng, mgr, inst, n: int):
+    """n deflate -> wake-by-request cycles: (ttfts, wake stats)."""
+    cfg = inst.cfg
+    ttfts, stats = [], []
+    for c in range(n):
+        mgr.deflate("tenant")
+        t0 = time.monotonic()
+        eng.handle(request_for(cfg, "tenant", f"probe{c}", PROBE_LEN, 0,
+                               seed=100 + c, close_session=True))
+        ttfts.append(time.monotonic() - t0)
+        if inst.wake_pipeline is not None:
+            inst.wake_pipeline.wait(120)
+        inst.quiesce_bg()
+        wakes = [s for op, _, s in mgr.hib.log if op == "wake"]
+        stats.append(wakes[-1])
+    return ttfts, stats
+
+
+def main(quick: bool = False):
+    # quick mode trims cycles, NOT the working set: the tail/critical
+    # ratio is what the 2x claim rides on
+    n = 5 if quick else 9
+    sessions = SESSIONS
+    tab = Table("Wake latency: time-to-first-token, synchronous vs "
+                f"pipelined wake ({ARCH}, {NUM_LAYERS} layers, "
+                f"{sessions}x{SESSION_TOKENS}-token sessions)",
+                ["mode", "ttft p50 ms", "ttft p99 ms", "wakes/s",
+                 "crit ms", "io ms", "inflate ms", "restore MB"])
+    results = {}
+    for mode, pipelined in (("synchronous", False), ("pipelined", True)):
+        eng, mgr, inst = _setup(f"/tmp/bench_wake_latency/{mode}",
+                                pipelined, sessions)
+        digests = _weight_digests(inst)
+        ttfts, stats = _cycles(eng, mgr, inst, n)
+        inst.ensure_all_resident()
+        exact = _weight_digests(inst) == digests
+        p50 = percentile(ttfts, 50)
+        p99 = percentile(ttfts, 99)
+        tab.add(mode, f"{p50 * 1e3:.1f}", f"{p99 * 1e3:.1f}",
+                f"{1.0 / p50:.2f}",
+                f"{np.mean([s.critical_path_seconds for s in stats]) * 1e3:.1f}",
+                f"{np.mean([s.io_seconds for s in stats]) * 1e3:.1f}",
+                f"{np.mean([s.inflate_seconds for s in stats]) * 1e3:.1f}",
+                fmt_mb(stats[-1].prefetched_bytes))
+        results[mode] = (p50, p99, exact)
+        del eng, mgr, inst
+    print(tab.render())
+    sync_p50, _, sync_exact = results["synchronous"]
+    pipe_p50, _, pipe_exact = results["pipelined"]
+    checks = [
+        ("pipelined ttft >= 2x better than synchronous",
+         sync_p50 >= 2.0 * pipe_p50),
+        ("restored state byte-identical in both modes",
+         sync_exact and pipe_exact),
+    ]
+    return tab, checks
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,10 @@ Demonstrates the AsyncPlatform API:
   * the background daemon deflates idle tenants (keep-alive ④) without
     any manual ``tick()`` calls;
   * a wake storm — 8 threads hitting one hibernating tenant — shares a
-    single batched (vectored preadv) inflate.
+    single streamed inflate;
+  * an anticipatory (⑤ SIGCONT) wake runs the streamed pipeline at low
+    priority and *absorbs a request mid-stream*: the request demand-pulls
+    the chunks it needs while the tail keeps inflating behind it.
 
 Run:  PYTHONPATH=src python examples/async_platform.py
 """
@@ -25,7 +28,7 @@ from repro.serving import (AsyncPlatform, PlatformPolicy, Request,
                            ServingEngine)
 
 SPOOL = "/tmp/repro_async_platform"
-TENANTS = {"chat-app": "llama3.2-3b", "search-app": "phi4-mini-3.8b",
+TENANTS = {"chat-app": "arctic-480b", "search-app": "phi4-mini-3.8b",
            "stream-app": "mamba2-130m"}
 
 
@@ -90,6 +93,43 @@ def main():
               f"(deduped: {mgr.wakes_deduped})")
         print(f"  storm e2e p50={lats[len(lats) // 2] * 1e3:.0f} ms "
               f"max={lats[-1] * 1e3:.0f} ms")
+
+        # ---- phase 4: anticipatory pipelined wake absorbs a request
+        print("== phase 4: anticipatory (sigcont) wake, request mid-stream ==")
+        inst = mgr.instances["chat-app"]
+        # fatten the working set so the stream is observable
+        inst.recorder.start()
+        inst.recorder.record_many(inst.units)
+        inst.recorder.stop()
+        wk = None
+        deadline = time.monotonic() + 5.0
+        while wk is None and time.monotonic() < deadline:
+            if mgr.states()["chat-app"] == "hibernate":
+                # ⑤ low-priority stream; None while the daemon's deflate
+                # (④) is still completing — retry
+                wk = mgr.predictive_wake("chat-app")
+            if wk is None:
+                time.sleep(0.05)
+        if wk is None:
+            print("  (daemon never hibernated chat-app within the window; "
+                  "skipping phase 4)")
+        else:
+            pipe = inst.wake_pipeline
+            active_at_submit = pipe is not None and pipe.active
+            fut = plat.submit(Request(
+                "chat-app", "mid-stream",
+                rng.integers(0, 256, 3).astype(np.int32), max_new_tokens=2))
+            r = fut.result()
+            if pipe is not None:
+                pipe.wait(30)
+            print(f"  wake critical path: "
+                  f"{wk.critical_path_seconds * 1e3:.1f} ms"
+                  f" over {len(pipe.chunks) if pipe else 0} chunks"
+                  f" (io {wk.io_seconds * 1e3:.1f} ms,"
+                  f" inflate {wk.inflate_seconds * 1e3:.1f} ms)")
+            print(f"  request absorbed mid-stream={active_at_submit}: "
+                  f"{r.state_before} -> {r.state_after} "
+                  f"({r.spans['e2e'] * 1e3:.0f} ms, {r.faults} demand faults)")
 
     print("== summary ==")
     print(f"  states: {mgr.states()}")

@@ -1,30 +1,44 @@
-"""HibernationManager — the 4-step deflation of §3.2 and both inflate paths.
+"""HibernationManager — the 4-step deflation of §3.2 and all inflate paths.
 
 Deflate (Warm/Woken -> Hibernate):
   1. *Pause*: SIGSTOP transition; the engine stops scheduling the instance
      (its compiled executables — the "blocked runtime threads" — stay alive).
+     An in-flight wake stream is cancelled and drained first, and any
+     working-set unit the cancelled stream never delivered is restored from
+     the (unmodified) REAP file before it is rewritten — a deflate racing a
+     wake can never lose bytes.
   2. *Reclaim freed memory*: trim KV-cache slack pages back to the shared
      pool (the Bitmap allocator returns fully-free blocks to the host).
   3. *Swap out committed memory*: weight units + live KV pages.  Working-set
      units (from the REAP recorder) go to the REAP file with one batched
-     sequential write; the rest go to the page-fault swap file.
+     sequential write **in first-touch order**; the rest go to the
+     page-fault swap file.
   4. *Clean file-backed mmap*: shared base-weight leaves are decref'd in the
      registry (dropped at zero; re-read from the checkpoint on demand).
 
-Wake:
-  * ``mode="reap"``      — one batched sequential read restores the working
-                           set; everything else page-faults later.
+Wake — three inflate paths:
+  * ``mode="reap"``, pipelined (default deployment config) — the streamed
+    wake pipeline (:mod:`repro.core.inflate`): the REAP extent list is
+    split into chunks and ``preadv`` double-buffers against decode/install
+    workers; ``wake()`` returns as soon as the prefill-critical prefix
+    (embedding blocks + layer-0 units) is resident while the tail streams
+    in the background.  Faults arriving mid-stream demand-pull their
+    chunks; serviced faults trigger lookahead prefetch of the next
+    layer's units.
+  * ``mode="reap"``, synchronous — one batched sequential read restores
+    the whole working set before ``wake()`` returns.
   * ``mode="pagefault"`` — nothing restored upfront; each unit is a random
-                           read on first access.
+    read on first access.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
+from repro.core.inflate import InflatePipeline, InflatorPool
 from repro.core.instance import ModelInstance
-from repro.core.state import ContainerState, Event
+from repro.core.state import Event
 
 
 @dataclass
@@ -48,21 +62,55 @@ class WakeStats:
     prefetched_bytes: int = 0
     faulted_bytes: int = 0
     faults: int = 0
+    #: wall time ``wake()``/``fault()`` blocked the caller.  For a
+    #: pipelined wake this is the *critical path* only — the tail keeps
+    #: streaming after the call returns.
     seconds: float = 0.0
+    #: time spent in vectored reads (pipelined: summed across concurrent
+    #: chunk reads, may exceed wall time)
+    io_seconds: float = 0.0
+    #: time spent decoding + installing units (zlib inflate for store-tier
+    #: payloads, array materialization + pool scatter for REAP chunks)
+    inflate_seconds: float = 0.0
+    #: time-to-first-schedulable: from wake start until the prefill-
+    #: critical prefix was resident (== ``seconds`` for synchronous wakes)
+    critical_path_seconds: float = 0.0
+    #: stream was pipelined (the tail may still be inflating)
+    pipelined: bool = False
 
 
 class HibernationManager:
-    def __init__(self, shared_registry=None):
+    def __init__(self, shared_registry=None, *,
+                 inflator: Optional[InflatorPool] = None,
+                 wake_chunk_bytes: int = 256 << 10):
         self.shared_registry = shared_registry      # manager's weight registry
+        self.inflator = inflator
+        self.wake_chunk_bytes = wake_chunk_bytes
         self.log: List[Tuple[str, str, object]] = []
+        #: lookahead-prefetch accounting
+        self.lookahead_keys = 0
 
     # ------------------------------------------------------------- deflate
     def deflate(self, inst: ModelInstance) -> DeflateStats:
         t0 = time.monotonic()
         st = DeflateStats()
 
+        # step 0: an in-flight wake stream drains first (no new chunks are
+        # claimed; in-flight chunks finish installing), and background
+        # lookahead fetches quiesce — deflate must own the instance
+        pipe = inst.wake_pipeline
+        if pipe is not None:
+            pipe.cancel(drain=True)
+            inst.wake_pipeline = None
+        inst.quiesce_bg()
+
         # step 1: pause (SIGSTOP).  Raises if a request is in flight.
         inst.sm.fire(Event.SIGSTOP)
+
+        # a cancelled stream may have left working-set units undelivered;
+        # the REAP file is rewritten below from *resident* state, so
+        # restore them now or their bytes would be lost
+        self._restore_reap_leftovers(inst)
 
         # step 2: reclaim freed memory — trim KV slack back to the pool
         if inst.kv is not None:
@@ -76,8 +124,14 @@ class HibernationManager:
             kv_reap, kv_swap = inst.kv.export_items(ws)
             n_pages = len(kv_reap) + len(kv_swap)
         # unconditional: an empty working set must CLEAR the REAP file,
-        # or a later wake would prefetch a previous cycle's stale extents
-        inst.reap_file.write_batch(w_reap + kv_reap)
+        # or a later wake would prefetch a previous cycle's stale extents.
+        # The batch is laid out in FIRST-TOUCH order (the recorder's
+        # insertion order) so the wake pipeline streams units in the order
+        # the sample request needed them.
+        order = {k: i for i, k in enumerate(inst.recorder.ordered_working_set)}
+        items = sorted(w_reap + kv_reap,
+                       key=lambda it: order.get(it[0], len(order)))
+        inst.reap_file.write_batch(items)
         # coldness signal for the store's compression tiers: these units
         # missed the working set this cycle.  Only meaningful when a REAP
         # working set exists — with no recorded set (pagefault-mode
@@ -111,12 +165,38 @@ class HibernationManager:
         self.log.append(("deflate", inst.instance_id, st))
         return st
 
+    def _restore_reap_leftovers(self, inst: ModelInstance) -> None:
+        """Fault in working-set units still sitting only in the REAP file
+        (a cancelled mid-stream wake, or pagefault-mode access that never
+        touched them) before the file is rewritten."""
+        if not inst.reap_file.extents:
+            return
+        wkeys = [k for k in inst.reap_file.extents
+                 if k[0] == "w" and k not in inst.resident]
+        if wkeys:
+            inst.fault_in(wkeys)
+        if inst.kv is not None:
+            kvkeys = inst.kv.nonresident_keys(
+                [k for k in inst.reap_file.extents
+                 if k[0] in ("kv", "kvh")])
+            if kvkeys:
+                with inst.install_lock:
+                    inst.kv.fault_in(kvkeys, inst.swap_file, inst.reap_file)
+
     # ------------------------------------------------------------- wake
     def wake(self, inst: ModelInstance, mode: str = "reap",
-             trigger: str = "request") -> WakeStats:
+             trigger: str = "request", pipelined: bool = False,
+             priority: str = "high") -> WakeStats:
         """Inflate.  ``trigger="sigcont"`` is the predictive control-plane
         wake (⑤); ``trigger="request"`` is the request-driven wake (⑦) —
-        the state transition to HIBERNATE_RUNNING is fired by the engine."""
+        the state transition to HIBERNATE_RUNNING is fired by the engine.
+
+        With ``pipelined=True`` the REAP restore streams through an
+        :class:`InflatePipeline`: this call returns once the prefill-
+        critical prefix is resident (``critical_path_seconds``); the tail
+        keeps inflating on ``inst.wake_pipeline``.  Anticipatory wakes
+        (``priority="low"``) run the same pipeline without read
+        double-buffering and yield between chunks."""
         t0 = time.monotonic()
         st = WakeStats(mode=mode)
 
@@ -125,34 +205,112 @@ class HibernationManager:
             self.shared_registry.acquire(inst.base_id, inst)
 
         if mode == "reap" and inst.reap_file.extents:
-            # ONE batched sequential read (preadv), dispatched to weights + KV
-            data = inst.reap_file.read_batch()
-            st.prefetched_bytes += inst.apply_prefetch(data)
-            if inst.kv is not None:
-                st.prefetched_bytes += inst.kv.apply_prefetch(data)
+            if pipelined:
+                st.pipelined = True
+                pipe = InflatePipeline(
+                    inst, self.inflator, st,
+                    chunk_bytes=self.wake_chunk_bytes, priority=priority)
+                inst.wake_pipeline = pipe
+                pipe.start()
+                pipe.wait_critical()
+            else:
+                # ONE batched sequential read (preadv), -> weights + KV
+                t_io = time.monotonic()
+                data = inst.reap_file.read_batch()
+                st.io_seconds = time.monotonic() - t_io
+                t_inf = time.monotonic()
+                st.prefetched_bytes += inst.apply_prefetch(data)
+                if inst.kv is not None:
+                    st.prefetched_bytes += inst.kv.apply_prefetch(data)
+                st.inflate_seconds = time.monotonic() - t_inf
         # pagefault mode restores nothing here; units fault in on access
 
         inst.inflated = True
         if trigger == "sigcont":
             inst.sm.fire(Event.SIGCONT)
         st.seconds = time.monotonic() - t0
+        if not st.pipelined:
+            st.critical_path_seconds = st.seconds
         self.log.append(("wake", inst.instance_id, st))
         return st
 
     # ------------------------------------------------------------- faults
     def fault(self, inst: ModelInstance, keys) -> WakeStats:
-        """Fault path for weight and KV unit keys.  The key set is batched
-        through the vectored swap-file read (`read_units`): extent-sorted,
-        adjacent extents merged, one `preadv` per run — not one random
-        `pread` per unit."""
+        """Fault path for weight and KV unit keys.
+
+        Keys covered by an in-flight wake stream are *demand-pulled*: their
+        chunks are claimed and processed inline (or waited on if the
+        streamer already has them) — a fault never re-reads bytes the
+        pipeline is about to deliver.  The remainder batches through the
+        vectored swap-file read (`read_units`): extent-sorted, adjacent
+        extents merged, one ``preadv`` per run."""
         t0 = time.monotonic()
         st = WakeStats(mode="pagefault")
+        pipe = inst.wake_pipeline
+        if pipe is not None and pipe.active:
+            covered = [k for k in keys if pipe.covers(k)]
+            if covered:
+                st.faulted_bytes += pipe.demand(covered)
+        # the residual path re-checks residency, so anything the pipeline
+        # just delivered (or a cancelled stream failed to) is handled
+        # exactly once
         wkeys = [k for k in keys if k and k[0] == "w"]
         kvkeys = [k for k in keys if k and k[0] in ("kv", "kvh")]
         st.faulted_bytes += inst.fault_in(wkeys)
         if kvkeys and inst.kv is not None:
-            st.faulted_bytes += inst.kv.fault_in(
-                kvkeys, inst.swap_file, inst.reap_file)
-        st.faults = len(wkeys) + len(kvkeys)
+            kvkeys_nr = inst.kv.nonresident_keys(kvkeys)
+            if kvkeys_nr:
+                with inst.install_lock:
+                    st.faulted_bytes += inst.kv.fault_in(
+                        kvkeys_nr, inst.swap_file, inst.reap_file)
+        st.faults += len(wkeys) + len(kvkeys)
         st.seconds = time.monotonic() - t0
         return st
+
+    # ------------------------------------------------------------- lookahead
+    def prefetch_async(self, inst: ModelInstance, keys) -> int:
+        """Lookahead prefetch: asynchronously make ``keys`` resident on an
+        inflator-pool thread so the units the next layer (or the session's
+        next KV pages) will touch hit residency instead of faulting.
+
+        Best-effort: errors are swallowed, residency is re-checked under
+        the install lock, and deflate quiesces outstanding fetches via the
+        instance's background-task counter."""
+        keys = [k for k in dict.fromkeys(keys)]
+        if not keys or self.inflator is None:
+            return 0
+        inst.bg_begin()
+        self.inflator.submit(self._prefetch_task, inst, keys)
+        self.lookahead_keys += len(keys)
+        return len(keys)
+
+    def _prefetch_task(self, inst: ModelInstance, keys) -> None:
+        try:
+            if not inst.inflated:
+                return                          # deflated since scheduling
+            pipe = inst.wake_pipeline
+            if pipe is not None and pipe.active:
+                # opportunistic (wait=False): a pool worker must never
+                # park waiting on an in-flight chunk — the read that
+                # would complete it may be queued behind this very task
+                # on the same pool (priority inversion).  In-flight
+                # chunks are coming anyway; pending ones process inline.
+                covered = [k for k in keys if pipe.covers(k)]
+                if covered:
+                    pipe.demand(covered, timeout=30.0, wait=False)
+                    keys = [k for k in keys if k not in set(covered)]
+            swap_ks = [k for k in keys if k in inst.swap_file]
+            reap_ks = [k for k in keys if k not in inst.swap_file
+                       and k in inst.reap_file.extents]
+            for f, ks in ((inst.swap_file, swap_ks),
+                          (inst.reap_file, reap_ks)):
+                if not ks:
+                    continue
+                # chunked streaming read: bounded memory, and the install
+                # lock is only held per-chunk
+                for batch in f.read_units_iter(ks, self.wake_chunk_bytes):
+                    inst.install_units(batch)
+        except Exception:                      # pragma: no cover - best effort
+            pass
+        finally:
+            inst.bg_end()

@@ -17,6 +17,7 @@ from the checkpoint on demand.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
@@ -98,6 +99,17 @@ class ModelInstance:
         #: True once the current hibernation cycle's upfront inflate ran
         #: (cleared by deflate; the manager's wake-storm guard keys off it)
         self.inflated = True
+        #: in-flight streamed wake (``repro.core.inflate.InflatePipeline``)
+        #: — the wake-storm guard hands this handle to late arrivals and
+        #: the fault path demand-pulls from it
+        self.wake_pipeline = None
+        #: serializes unit installation across the wake streamer, demand
+        #: pulls, lookahead prefetch and the engine's fault path (re-entrant:
+        #: the fault path nests install calls)
+        self.install_lock = threading.RLock()
+        # background prefetch bookkeeping: deflate/terminate quiesce on it
+        self._bg_cv = threading.Condition()
+        self._bg_tasks = 0
 
     # ------------------------------------------------------------------ catalog
     def _is_expert_leaf(self, path: str, arr: np.ndarray) -> bool:
@@ -212,42 +224,67 @@ class ModelInstance:
         """Install weight units from a batch read (KV keys are skipped —
         :meth:`PagedKVCache.apply_prefetch` owns those)."""
         n = 0
-        for key, arr in data.items():
-            if key[0] != "w":
-                continue
-            self._set_unit(self.units[key], arr)
-            self.resident.add(key)
-            n += arr.nbytes
+        with self.install_lock:
+            for key, arr in data.items():
+                if key[0] != "w":
+                    continue
+                self._set_unit(self.units[key], arr)
+                self.resident.add(key)
+                n += arr.nbytes
+        return n
+
+    def install_units(self, data: Dict[Hashable, np.ndarray]) -> int:
+        """Install a mixed batch of swapped-in units (the wake pipeline's
+        stage 3): weight units via ``_set_unit``; KV pool pages and host
+        cache units batched through :meth:`PagedKVCache.install_batch`
+        (one pool scatter per call).  Already-resident weight units are
+        skipped, so concurrent installers (streamer, demand pulls,
+        lookahead) are idempotent.  Returns bytes newly installed."""
+        n = 0
+        kv_items: List[Tuple[Tuple, np.ndarray]] = []
+        with self.install_lock:
+            for key, arr in data.items():
+                if key[0] == "w":
+                    if key in self.resident:
+                        continue
+                    self._set_unit(self.units[key], arr)
+                    self.resident.add(key)
+                    n += arr.nbytes
+                else:
+                    kv_items.append((key, arr))
+            if kv_items and self.kv is not None:
+                n += self.kv.install_batch(kv_items)
         return n
 
     def fault_in(self, keys: Sequence[Tuple]) -> int:
         """Fault swap-in: the key set is coalesced into vectored batch
         reads (one per file, adjacent extents merged) instead of one random
         read per unit."""
-        swap_keys, reap_keys = [], []
-        for key in keys:
-            if key in self.resident:
-                continue
-            if key in self.swap_file:
-                swap_keys.append(key)
-            elif key in self.reap_file.extents:
-                # unit was in the REAP file but prefetch didn't run
-                # (pagefault-mode wake) — read it from there
-                reap_keys.append(key)
-            else:
-                raise KeyError(f"unit {key} neither resident nor swapped")
-        n = 0
-        for f, ks in ((self.swap_file, swap_keys),
-                      (self.reap_file, reap_keys)):
-            if not ks:
-                continue
-            now = time.monotonic()
-            for key, arr in f.read_units(ks).items():
-                u = self.units[key]
-                self._set_unit(u, arr)
-                self.resident.add(key)
-                self.fault_log.append((now, key))
-                n += u.nbytes
+        with self.install_lock:
+            swap_keys, reap_keys = [], []
+            for key in keys:
+                if key in self.resident:
+                    continue
+                if key in self.swap_file:
+                    swap_keys.append(key)
+                elif key in self.reap_file.extents:
+                    # unit was in the REAP file but prefetch didn't run
+                    # (pagefault-mode wake) — read it from there
+                    reap_keys.append(key)
+                else:
+                    raise KeyError(f"unit {key} neither resident nor swapped")
+            n = 0
+            for f, ks in ((self.swap_file, swap_keys),
+                          (self.reap_file, reap_keys)):
+                if not ks:
+                    continue
+                now = time.monotonic()
+                for key, arr in f.read_units(ks).items():
+                    u = self.units[key]
+                    self._set_unit(u, arr)
+                    self.resident.add(key)
+                    self.fault_log.append((now, key))
+                    n += u.nbytes
         return n
 
     def ensure_all_resident(self) -> int:
@@ -286,7 +323,34 @@ class ModelInstance:
         handles, state machine — small by design."""
         return 1 << 16
 
+    # ---------------------------------------------------------- background
+    def bg_begin(self) -> None:
+        """Register an in-flight background prefetch task."""
+        with self._bg_cv:
+            self._bg_tasks += 1
+
+    def bg_end(self) -> None:
+        with self._bg_cv:
+            self._bg_tasks -= 1
+            self._bg_cv.notify_all()
+
+    def quiesce_bg(self, timeout: float = 120.0) -> bool:
+        """Block until outstanding background prefetch tasks drain —
+        deflate/terminate must not race a lookahead install."""
+        deadline = time.monotonic() + timeout
+        with self._bg_cv:
+            while self._bg_tasks:
+                if not self._bg_cv.wait(max(0.0, min(
+                        1.0, deadline - time.monotonic()))):
+                    if time.monotonic() >= deadline:
+                        return False
+            return True
+
     def terminate(self) -> None:
+        if self.wake_pipeline is not None:
+            self.wake_pipeline.cancel(drain=True)
+            self.wake_pipeline = None
+        self.quiesce_bg()
         self.swap_file.delete()
         self.reap_file.delete()
         if self.pool is not None:

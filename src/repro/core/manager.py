@@ -22,6 +22,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.hibernate import HibernationManager
+from repro.core.inflate import InflatorPool
 from repro.core.instance import ModelInstance
 from repro.core.pool import PagePool
 from repro.core.state import ContainerState, Event
@@ -84,6 +85,19 @@ class ManagerConfig:
     #: per-deployment hash salt; None generates a fresh random one
     store_salt: Optional[bytes] = None
     store_policy: Optional[StorePolicy] = None
+    #: streamed wake pipeline (repro.core.inflate): ``ensure_awake``
+    #: returns at the prefill-critical prefix while the tail inflates in
+    #: the background.  False restores the fully-synchronous REAP wake.
+    pipelined_wake: bool = True
+    #: pipeline chunk size: one vectored read / one install per chunk —
+    #: small enough that the critical prefix is not diluted by tail
+    #: neighbours sharing its chunks, large enough to amortize syscalls
+    wake_chunk_bytes: int = 256 << 10
+    #: per-deployment inflator worker threads (read double-buffering +
+    #: background lookahead fetches)
+    inflate_workers: int = 3
+    #: turn serviced faults into asynchronous next-layer prefetch
+    lookahead: bool = True
 
 
 class InstanceManager:
@@ -102,7 +116,9 @@ class InstanceManager:
                                 salt=cfg.store_salt,
                                 policy=cfg.store_policy)
                       if cfg.dedup_store else None)
-        self.hib = HibernationManager(self.shared)
+        self.inflator = InflatorPool(cfg.inflate_workers)
+        self.hib = HibernationManager(self.shared, inflator=self.inflator,
+                                      wake_chunk_bytes=cfg.wake_chunk_bytes)
         self.instances: Dict[str, ModelInstance] = {}
         self.events: List[tuple] = []
         self._lock = threading.RLock()                 # instance table
@@ -140,7 +156,8 @@ class InstanceManager:
     def deflate(self, instance_id: str):
         return self.hib.deflate(self.instances[instance_id])
 
-    def ensure_awake(self, instance_id: str, trigger: str = "request"):
+    def ensure_awake(self, instance_id: str, trigger: str = "request",
+                     priority: Optional[str] = None):
         """Inflate a hibernating instance exactly once per storm.
 
         Any number of threads may call this concurrently for the same
@@ -149,10 +166,19 @@ class InstanceManager:
         inflate, and late arrivals are counted in ``wakes_deduped``.
         Returns the :class:`WakeStats` for the thread that performed the
         inflate, ``None`` for everyone else.
+
+        With the pipelined wake the performer returns as soon as the
+        prefill-critical prefix is resident; late arrivals (and the
+        engine's fault path) find the in-flight stream handle on
+        ``inst.wake_pipeline`` and demand-pull from it rather than issuing
+        their own reads.  Anticipatory wakes (``trigger="sigcont"``) run
+        the same pipeline at low priority unless overridden.
         """
         inst = self.instances.get(instance_id)
         if inst is None or inst.state != ContainerState.HIBERNATE:
             return None
+        if priority is None:
+            priority = "low" if trigger == "sigcont" else "high"
         with self._wake_lock(instance_id):
             if inst.state != ContainerState.HIBERNATE or inst.inflated:
                 self.wakes_deduped += 1        # someone else inflated first
@@ -165,11 +191,17 @@ class InstanceManager:
                 return None
             self.wakes_performed += 1
             return self.hib.wake(inst, mode=self.cfg.wake_mode,
-                                 trigger=trigger)
+                                 trigger=trigger,
+                                 pipelined=self.cfg.pipelined_wake,
+                                 priority=priority)
 
-    def predictive_wake(self, instance_id: str):
-        """⑤ control-plane wake in anticipation of a request."""
-        return self.ensure_awake(instance_id, trigger="sigcont")
+    def predictive_wake(self, instance_id: str, priority: str = "low"):
+        """⑤ control-plane wake in anticipation of a request — the
+        streamed pipeline at low priority (no read double-buffering,
+        yields between chunks): a real request arriving mid-stream is
+        absorbed by the same pipeline via demand-pull."""
+        return self.ensure_awake(instance_id, trigger="sigcont",
+                                 priority=priority)
 
     def evict(self, instance_id: str) -> None:
         with self._lock:

@@ -38,6 +38,10 @@ class PagePool:
         # one pool serves every tenant; concurrent serves allocate/free
         # from worker threads, so allocator mutations are lock-guarded
         self._lock = threading.RLock()
+        #: route batched scatters through the page_copy Pallas kernel
+        #: (TPU deployments; CPU tests flip it to prove equivalence)
+        self.use_kernel_scatter = False
+        self.scatter_calls = 0
 
     # -- block <-> physical slot mapping ------------------------------------
     def _on_grow(self, block_id: int) -> None:
@@ -98,6 +102,36 @@ class PagePool:
     def gather(self, pages: Sequence[int]) -> np.ndarray:
         """Zero-copy-ish view for compute (CPU sim of the paged gather)."""
         return self.data[self._phys(pages)]
+
+    def scatter(self, pages: Sequence[int], rows: np.ndarray, *,
+                use_kernel: Optional[bool] = None) -> None:
+        """Batched page scatter: install a contiguous buffer of restored
+        pages in ONE store — the inflate-side half of the ``page_copy``
+        kernel's contract (scattered pool pages <-> one sequential
+        stream).  The wake pipeline issues one scatter per chunk instead
+        of a per-page ``_set`` copy.
+
+        ``use_kernel`` routes the copy through the ``page_copy.
+        scatter_pages`` Pallas kernel (the TPU path; CPU runs it in
+        interpret mode).  The kernel path rebinds ``self.data`` to the
+        kernel's output buffer, so it must only be enabled when no other
+        thread holds page views into the pool — the default numpy path is
+        an in-place vectorized store and is always safe."""
+        rows = np.asarray(rows, self.dtype).reshape(len(pages),
+                                                    self.page_elems)
+        with self._lock:
+            phys = self._phys(pages)
+        if use_kernel is None:
+            use_kernel = self.use_kernel_scatter
+        if use_kernel and self.page_elems % 128 == 0:
+            import jax.numpy as jnp
+            from repro.kernels.page_copy import ops as pc_ops
+            self.data = np.asarray(pc_ops.scatter_pages(
+                jnp.asarray(self.data), jnp.asarray(phys, jnp.int32),
+                jnp.asarray(rows)))
+        else:
+            self.data[phys] = rows
+        self.scatter_calls += 1
 
     # -- accounting (PSS analogue) ------------------------------------------------
     @property

@@ -10,46 +10,65 @@ touches.  For an LLM instance the unit keys are:
 The recorded set becomes the REAP file's scatter io-vector: on wake-up it
 is prefetched with one batched sequential read; everything else stays
 swapped until page-faulted.
+
+The recorder preserves **first-touch order** (insertion-ordered dicts used
+as ordered sets): the REAP file is laid out in that order, so the streamed
+wake pipeline (:mod:`repro.core.inflate`) restores units in the order the
+sample request needed them — the prefill-critical prefix arrives first and
+compute can start while the tail is still inflating.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Hashable, Set
+from typing import Dict, FrozenSet, Hashable, Set, Tuple
 
 
 @dataclass
 class ReapRecorder:
     recording: bool = False
-    seen: Set[Hashable] = field(default_factory=set)
+    #: insertion-ordered set: key -> None, first-touch order of this session
+    seen: Dict[Hashable, None] = field(default_factory=dict)
     #: survives across record sessions — the stable working set (REAP's
-    #: observation: the set is stable across invocations of one function)
-    stable: Set[Hashable] = field(default_factory=set)
+    #: observation: the set is stable across invocations of one function).
+    #: Insertion-ordered: a unit keeps the position of its FIRST touch ever.
+    stable: Dict[Hashable, None] = field(default_factory=dict)
     #: how many deflate cycles each unit has missed the working set — the
     #: coldness signal the SwapStore's compression tiers key off
     misses: Dict[Hashable, int] = field(default_factory=dict)
 
     def start(self) -> None:
         self.recording = True
-        self.seen = set()
+        self.seen = {}
 
     def record(self, key: Hashable) -> None:
-        if self.recording:
-            self.seen.add(key)
+        if self.recording and key not in self.seen:
+            self.seen[key] = None
 
     def record_many(self, keys) -> None:
         if self.recording:
-            self.seen.update(keys)
+            for k in keys:
+                if k not in self.seen:
+                    self.seen[k] = None
 
     def stop(self) -> FrozenSet[Hashable]:
         self.recording = False
         # union: pages touched by any recorded invocation are kept (stable
-        # working set across invocations per REAP)
-        self.stable |= self.seen
+        # working set across invocations per REAP); existing units keep
+        # their original touch position, new units append in touch order
+        for k in self.seen:
+            if k not in self.stable:
+                self.stable[k] = None
         return frozenset(self.stable)
 
     @property
     def working_set(self) -> FrozenSet[Hashable]:
         return frozenset(self.stable)
+
+    @property
+    def ordered_working_set(self) -> Tuple[Hashable, ...]:
+        """The stable working set in first-touch order — the REAP file's
+        on-disk layout and the wake pipeline's streaming order."""
+        return tuple(self.stable)
 
     def note_misses(self, keys) -> None:
         """A deflate cycle sent these units to the page-fault tier (they
@@ -68,6 +87,6 @@ class ReapRecorder:
         self.misses = {k: v for k, v in self.misses.items() if k in live}
 
     def forget(self) -> None:
-        self.stable = set()
-        self.seen = set()
+        self.stable = {}
+        self.seen = {}
         self.misses = {}

@@ -322,6 +322,25 @@ class SwapStore:
                 client.bytes_read += nbytes
         return out
 
+    def read_iter(self, client: "StoreClient", keys: Sequence[Hashable],
+                  chunk_bytes: int = 1 << 20):
+        """Streaming variant of :meth:`read`: yields ``{key: array}`` dicts
+        of ~``chunk_bytes`` (logical) each.  Every chunk snapshots its own
+        extent plan under the lock and runs its IO + zlib inflate unlocked,
+        so a long stream never starves concurrent tenants' wakes — the
+        chunk granularity is what the wake pipeline double-buffers."""
+        batch: List[Hashable] = []
+        pending = 0
+        for k in keys:
+            batch.append(k)
+            with self._lock:
+                pending += client.extents[k].nbytes
+            if pending >= chunk_bytes:
+                yield self.read(client, batch)
+                batch, pending = [], 0
+        if batch:
+            yield self.read(client, batch)
+
     # ------------------------------------------------------------- GC
     def _drop_meta(self, meta: Optional[UnitMeta]) -> None:
         if meta is None or meta.digest is None:
@@ -444,6 +463,12 @@ class StoreClient:
     def read_units(self, keys: Sequence[Hashable]
                    ) -> Dict[Hashable, np.ndarray]:
         return self.store.read(self, keys)
+
+    def read_units_iter(self, keys: Sequence[Hashable],
+                        chunk_bytes: int = 1 << 20):
+        """Chunk-granular streaming read (duck-types
+        :meth:`~repro.core.swap._FileBase.read_units_iter`)."""
+        return self.store.read_iter(self, keys, chunk_bytes)
 
     # ------------------------------------------------------------- admin
     def delete(self) -> None:

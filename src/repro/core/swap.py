@@ -180,6 +180,24 @@ class _FileBase:
             out[key] = np.frombuffer(buf, ext.dtype).reshape(ext.shape).copy()
         return out
 
+    def read_units_iter(self, keys: Sequence[Hashable],
+                        chunk_bytes: int = 1 << 20):
+        """Streaming variant of :meth:`read_units`: yields ``{key: array}``
+        dicts of ~``chunk_bytes`` each, one vectored batch read per chunk.
+        Callers overlap downstream work (install, decompress) with the next
+        chunk's IO instead of materializing the whole fault set at once —
+        the building block of the streamed wake pipeline."""
+        batch: List[Hashable] = []
+        pending = 0
+        for k in keys:
+            batch.append(k)
+            pending += self.extents[k].nbytes
+            if pending >= chunk_bytes:
+                yield self.read_units(batch)
+                batch, pending = [], 0
+        if batch:
+            yield self.read_units(batch)
+
 
 class SwapFile(_FileBase):
     """Page-fault swap file: per-unit writes, random per-unit reads."""

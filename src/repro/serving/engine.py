@@ -202,6 +202,40 @@ class ServingEngine:
         resp.faulted_bytes += st.faulted_bytes
         resp.faults += st.faults
         inst.recorder.record_many(missing + kv_missing)
+        # serviced faults become lookahead: asynchronously pull the next
+        # layer's KV pages / adjacent embed blocks so the following step
+        # hits residency instead of faulting
+        if self.manager.cfg.lookahead:
+            la = self._lookahead_keys(inst, missing + kv_missing)
+            if la:
+                self.manager.hib.prefetch_async(inst, la)
+
+    def _lookahead_keys(self, inst: ModelInstance,
+                        faulted: Sequence[Tuple]) -> List[Tuple]:
+        """Predict the fault set's successors: when layer *k*'s KV page
+        faults, layer *k+1*'s page (and the session's next page in the
+        same layer) is about to be touched; when an embedding block
+        faults mid-decode, its neighbour is the next most likely row
+        block.  Weight leaves are layer-stacked, so weight-side lookahead
+        only applies to embed blocks."""
+        out: List[Tuple] = []
+        kv = inst.kv
+        for k in faulted:
+            if k[0] == "kv" and kv is not None:
+                _, sid, layer, pidx = k
+                sess = kv.sessions.get(sid)
+                if sess is None:
+                    continue
+                succ = [(layer + 1, pidx), (layer, pidx + 1)]
+                for lyr, p in succ:
+                    if lyr < len(sess.pages) and p < len(sess.pages[lyr]) \
+                            and sess.pages[lyr][p] is None:
+                        out.append(("kv", sid, lyr, p))
+            elif k[0] == "w" and k[1] == "embed" and k[2] >= 0:
+                nk = ("w", "embed", k[2] + 1)
+                if nk in inst.units and nk not in inst.resident:
+                    out.append(nk)
+        return [k for k in dict.fromkeys(out)]
 
     # ------------------------------------------------------------ cache io
     def _dense_cache(self, inst: ModelInstance, sids: List[str],
@@ -319,19 +353,31 @@ class ServingEngine:
             for r in resps:
                 r.prefetched_bytes = wake_stats.prefetched_bytes
 
-        # ---- per-request prefill
-        cfg = inst.cfg
-        sids = []
-        for req, resp in zip(reqs, resps):
-            with self.trace.span("prefill"):
-                self._prefill_one(inst, req, resp)
-            sids.append(req.session_id)
+        # backpressure the wake stream while this request computes: the
+        # tail pauses (it resumes after FINISH) and anything this request
+        # needs arrives via demand-pull on our own thread
+        pipe = inst.wake_pipeline
+        if pipe is not None and pipe.active:
+            pipe.backpressure(+1)
+        else:
+            pipe = None
+        try:
+            # ---- per-request prefill
+            cfg = inst.cfg
+            sids = []
+            for req, resp in zip(reqs, resps):
+                with self.trace.span("prefill"):
+                    self._prefill_one(inst, req, resp)
+                sids.append(req.session_id)
 
-        # ---- joint decode
-        active = [i for i, r in enumerate(reqs) if r.max_new_tokens > 0]
-        if active:
-            with self.trace.span("decode"):
-                self._decode_joint(inst, reqs, resps, sids)
+            # ---- joint decode
+            active = [i for i, r in enumerate(reqs) if r.max_new_tokens > 0]
+            if active:
+                with self.trace.span("decode"):
+                    self._decode_joint(inst, reqs, resps, sids)
+        finally:
+            if pipe is not None:
+                pipe.backpressure(-1)
 
         # ---- finish (③⑧)
         inst.sm.fire(Event.FINISH)
@@ -371,13 +417,18 @@ class ServingEngine:
         embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
         frames = None if req.frames is None else jnp.asarray(req.frames)[None]
 
-        # fixpoint on MoE expert residency
-        for _ in range(4):
+        # fixpoint on MoE expert residency.  The snapshot is taken BEFORE
+        # dispatch: a concurrently streaming wake may install an expert
+        # mid-run, and a post-run residency check would then accept logits
+        # computed with zeroed (or torn) weights.  A key missing from the
+        # pre-dispatch snapshot always forces one more run.
+        for _ in range(8):
+            snapshot = inst.resident.copy()
             params = inst.params_pytree()
             logits, caches, aux = fn(params, jnp.asarray(tokens),
                                      embeds, frames)
             ek = self._expert_keys(inst, aux.get("expert_counts"))
-            missing = [k for k in ek if k not in inst.resident]
+            missing = [k for k in ek if k not in snapshot]
             inst.recorder.record_many(ek)
             if not missing:
                 break
@@ -432,18 +483,23 @@ class ServingEngine:
             ek = self._embed_keys(inst, np.asarray(cur))
             inst.recorder.record_many(ek)
             self._fault(inst, ek, resps[0])
-            params = inst.params_pytree()
-            logits, new_cache, aux = fn(params, cur, cache)
-            counts = aux.get("expert_counts")
-            if counts is not None:
+            # page-fault-and-retry on expert residency: re-run the SAME
+            # step from the pre-step cache until every routed expert was
+            # resident in the PRE-dispatch snapshot (see _prefill_one for
+            # why the snapshot must precede the run)
+            for _ in range(4):
+                snapshot = inst.resident.copy()
+                params = inst.params_pytree()
+                logits, new_cache, aux = fn(params, cur, cache)
+                counts = aux.get("expert_counts")
+                if counts is None:
+                    break
                 ek = self._expert_keys(inst, np.asarray(counts))
-                missing = [k for k in ek if k not in inst.resident]
                 inst.recorder.record_many(ek)
-                if missing:
-                    # re-run the SAME step from the pre-step cache with the
-                    # faulted experts resident (page-fault-and-retry)
-                    self._fault(inst, missing, resps[0])
-                    logits, new_cache, aux = fn(params, cur, cache)
+                missing = [k for k in ek if k not in snapshot]
+                if not missing:
+                    break
+                self._fault(inst, missing, resps[0])
             cache = new_cache
             nxt = np.asarray(jnp.argmax(
                 logits[:, :cfg.vocab_size], axis=-1), np.int32)

@@ -242,25 +242,52 @@ class PagedKVCache:
 
     def apply_prefetch(self, data: Dict[Hashable, np.ndarray]) -> int:
         """Install a batch of swapped-in units (REAP batch read)."""
-        n = 0
-        for key, arr in data.items():
-            if key[0] in ("kv", "kvh") and key[1] in self.sessions:
-                self._install(key, arr)
-                n += arr.nbytes
-        self.dropped = False
-        return n
+        return self.install_batch(
+            [(k, a) for k, a in data.items() if k[0] in ("kv", "kvh")],
+            mark=True)
 
-    def _install(self, key: Tuple, arr: np.ndarray) -> None:
-        s = self.sessions[key[1]]
-        if key[0] == "kv":
-            _, sid, layer, pidx = key
-            if s.pages[layer][pidx] is None:
-                s.pages[layer][pidx] = self.pool.alloc(1, self.instance_id)[0]
-            pid = s.pages[layer][pidx]
-            phys = self.pool._phys([pid])[0]
-            self.pool.data[phys] = arr.reshape(self.pool.data[phys].shape)
-        else:
-            s.host_units[key] = arr.reshape(s.host_shapes[key])
+    def install_batch(self, items: Sequence[Tuple[Tuple, np.ndarray]],
+                      mark: bool = True) -> int:
+        """Install a batch of swapped-in units in ONE pool scatter.
+
+        Pool pages are collected (allocating physical pages for keys whose
+        slots are still Not-Present) and written with a single
+        :meth:`PagePool.scatter` — the ``page_copy.scatter_pages`` path,
+        one scatter per wake-pipeline chunk instead of a per-page
+        ``_set`` copy.  Host units install individually.  Keys of closed/
+        trimmed sessions are skipped (a streamed wake may outlive them),
+        and so are keys that are ALREADY resident: concurrent installers
+        (streamer / demand / lookahead) are idempotent, and a stale
+        background install must never clobber a page the engine has since
+        faulted in and written fresh tokens to.  Returns bytes installed."""
+        pages: List[int] = []
+        rows: List[np.ndarray] = []
+        n = 0
+        for key, arr in items:
+            s = self.sessions.get(key[1])
+            if s is None:
+                continue
+            if key[0] == "kv":
+                _, _sid, layer, pidx = key
+                if layer >= len(s.pages) or pidx >= len(s.pages[layer]):
+                    continue
+                if s.pages[layer][pidx] is not None:
+                    continue                   # resident: never overwrite
+                s.pages[layer][pidx] = \
+                    self.pool.alloc(1, self.instance_id)[0]
+                pages.append(s.pages[layer][pidx])
+                rows.append(np.asarray(arr).reshape(-1))
+                n += arr.nbytes
+            elif key[0] == "kvh" and key in s.host_shapes \
+                    and s.host_units.get(key) is None:
+                s.host_units[key] = np.asarray(arr).reshape(
+                    s.host_shapes[key])
+                n += arr.nbytes
+        if pages:
+            self.pool.scatter(pages, np.stack(rows))
+        if mark and n:
+            self.dropped = False
+        return n
 
     def fault_in(self, keys: Sequence[Tuple], swap_file, reap_file) -> int:
         """Fault path: the key set is coalesced into one vectored batch
@@ -277,9 +304,9 @@ class PagedKVCache:
         for f, ks in ((swap_file, swap_keys), (reap_file, reap_keys)):
             if not ks:
                 continue
-            for key, arr in f.read_units(ks).items():
-                self._install(key, arr)
-                n += arr.nbytes
+            # one vectored read + one pool scatter per file
+            n += self.install_batch(list(f.read_units(ks).items()),
+                                    mark=False)
         return n
 
     # ------------------------------------------------------------- accounting

@@ -152,9 +152,12 @@ class AsyncPlatform:
             self._note_arrival(req.instance_id, now)
             self._cv.notify()
         if self.policy.predictive_wake:
-            # ⑤ request arrival wakes a hibernated tenant off the serve path
+            # ⑤ request arrival wakes a hibernated tenant off the serve
+            # path — the streamed pipeline at low priority; the request
+            # that triggered it is absorbed mid-stream via demand-pull
             if self.engine.manager.ensure_awake(
-                    req.instance_id, trigger="sigcont") is not None:
+                    req.instance_id, trigger="sigcont",
+                    priority="low") is not None:
                 self.log.append((now, "predictive_wake", req.instance_id))
         return fut
 
@@ -262,7 +265,10 @@ class AsyncPlatform:
                 self.policy.memory_target_bytes,
                 try_lock=self.engine.instance_lock)
         # ⑤ anticipatory SIGCONT: wake tenants whose EWMA inter-arrival
-        # model predicts a request within the margin
+        # model predicts a request within the margin.  These run the SAME
+        # streamed wake pipeline as request-driven wakes, at low priority
+        # (no read double-buffering, yields between chunks) — a request
+        # landing mid-stream is absorbed by demand-pulling its chunks
         if self.policy.anticipate_margin_s is not None:
             for iid, inst in list(mgr.instances.items()):
                 if inst.state != S.HIBERNATE:
@@ -272,7 +278,8 @@ class AsyncPlatform:
                     continue
                 due_in = (last + gap) - now
                 if due_in <= self.policy.anticipate_margin_s:
-                    if mgr.ensure_awake(iid, trigger="sigcont") is not None:
+                    if mgr.ensure_awake(iid, trigger="sigcont",
+                                        priority="low") is not None:
                         self.log.append((now, "anticipated_wake", iid))
                         acted.append(iid)
         return acted
