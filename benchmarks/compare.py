@@ -1,7 +1,8 @@
 """Diff two ``benchmarks.run`` result files and fail on regression.
 
-Throughput-like metrics (table columns whose header contains ``/s``) must
-not drop more than ``--max-regress`` relative to the committed baseline;
+Higher-is-better metrics (table columns whose header contains ``/s`` or
+``/GB`` — throughputs and densities) must not drop more than
+``--max-regress`` relative to the committed baseline;
 claim checks that passed in the baseline must still pass.  Only suites
 present in BOTH files are compared, so a quick CI subset can be diffed
 against a full baseline.
@@ -29,6 +30,11 @@ def _to_float(cell) -> float | None:
     return None
 
 
+#: column-header markers for higher-is-better metrics: rates ("ops/s",
+#: "wakes/s") and densities ("tenants/GB")
+_HIGHER_IS_BETTER = ("/s", "/GB")
+
+
 def throughput_metrics(results: dict) -> Dict[Tuple[str, str, str], float]:
     """(suite, row-label, column) -> value for every higher-is-better cell."""
     out = {}
@@ -38,7 +44,7 @@ def throughput_metrics(results: dict) -> Dict[Tuple[str, str, str], float]:
         for row in tab.get("rows", []):
             label = str(row[0]) if row else ""
             for col, cell in zip(cols[1:], row[1:]):
-                if "/s" not in str(col):
+                if not any(m in str(col) for m in _HIGHER_IS_BETTER):
                     continue
                 v = _to_float(cell)
                 if v is not None and v > 0:

@@ -3,6 +3,8 @@
   latency_states   — Fig. 6 (request latency per container state)
   memory_states    — Fig. 7 (PSS per state, 10 instances, sharing on)
   density          — deployment-density conclusion
+  governor_density — memory governor: tenants-per-GB vs p99 TTFT under a
+                     shrinking budget (rung ladder vs warm/hibernate)
   dedup_store      — content-addressed swap store: cross-tenant dedup,
                      zero-page elision, compression tiers
   wake_latency     — streamed wake pipeline: synchronous vs pipelined
@@ -36,8 +38,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (allocator, concurrency, dedup_store, density,
-                            latency_states, memory_states, reap_ablation,
-                            roofline, sharing, swap_throughput, wake_latency)
+                            governor_density, latency_states, memory_states,
+                            reap_ablation, roofline, sharing,
+                            swap_throughput, wake_latency)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
@@ -45,6 +48,7 @@ def main(argv=None):
         ("latency_states", latency_states),
         ("memory_states", memory_states),
         ("density", density),
+        ("governor_density", governor_density),
         ("dedup_store", dedup_store),
         ("sharing", sharing),
         ("reap_ablation", reap_ablation),

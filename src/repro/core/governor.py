@@ -1,0 +1,365 @@
+"""MemoryGovernor: node-wide budget enforcement over the deflation ladder.
+
+The paper's economics are a *spectrum* between Warm and Hibernate; the
+governor is the policy brain that spends the repo's mechanisms (vectored
+swap IO, the content-addressed store, the streamed wake pipeline) against
+a fixed node memory budget:
+
+  * it watches deployment-wide resident bytes against
+    ``ManagerConfig.memory_budget_bytes``;
+  * under pressure it deflates victims *incrementally* down the rung
+    ladder WARM -> MMAP_CLEAN -> PARTIAL -> HIBERNATED -> TERMINATED,
+    freeing only the bytes needed to clear pressure (proportional
+    reclaim), not whole instances;
+  * victim selection is cost/benefit: the bytes a rung descent frees,
+    weighted by how soon the tenant's next request is expected (per-
+    tenant EWMA of inter-arrival times, fed by the AsyncPlatform) and by
+    the *measured* wake cost of climbing back out of that rung
+    (``WakeStats.critical_path_seconds`` EWMA per rung).
+
+The PARTIAL rung swaps only cold units — REAP-miss-ranked MoE experts and
+deep-layer KV pages (``inflate.is_critical_key`` == False) — so the
+prefill-critical prefix stays resident and wake TTFT stays near-warm.
+TERMINATED is last-resort: a hibernated tenant idle past
+``terminate_idle_s`` is evicted, releasing its swap-store segment refs
+(one tenant's termination never touches bytes another still references).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.inflate import is_critical_key
+from repro.core.state import ContainerState, Rung
+
+S = ContainerState
+
+#: states the governor may act on (idle, servable); running states are
+#: skipped via the engine's per-instance try-lock anyway
+_IDLE_STATES = frozenset({S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL,
+                          S.HIBERNATE})
+
+#: states a scored descent is still applicable from — revalidated under
+#: the victim's serve lock, because the instance may have served (or been
+#: deflated by keep-alive) between scoring and apply
+_APPLICABLE_FROM = {
+    Rung.MMAP_CLEAN: frozenset({S.WARM}),
+    Rung.PARTIAL: frozenset({S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL}),
+    Rung.HIBERNATED: frozenset({S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL}),
+    Rung.TERMINATED: frozenset({S.HIBERNATE}),
+}
+
+
+@dataclass
+class GovernorConfig:
+    """Rung-ladder policy knobs."""
+    #: after a breach, reclaim down to ``budget * (1 - headroom)`` so the
+    #: governor does not thrash at the budget edge
+    headroom: float = 0.05
+    #: EWMA smoothing for per-tenant inter-arrival gaps
+    ewma_alpha: float = 0.3
+    #: EWMA smoothing for measured per-rung wake costs
+    cost_alpha: float = 0.3
+    #: hibernated tenants idle longer than this become TERMINATED victims
+    #: (None disables the terminate rung entirely)
+    terminate_idle_s: Optional[float] = 3600.0
+    #: smallest partial bite worth a swap pass — below this a partial
+    #: deflate's syscall overhead beats its benefit
+    min_partial_bytes: int = 64 << 10
+    #: wake-cost priors (seconds to climb back out of each rung) used
+    #: until real wakes are measured; TERMINATED's prior is a cold start
+    cost_priors: Tuple[Tuple[Rung, float], ...] = (
+        (Rung.WARM, 0.0),
+        (Rung.MMAP_CLEAN, 0.0005),
+        (Rung.PARTIAL, 0.002),
+        (Rung.HIBERNATED, 0.05),
+        (Rung.TERMINATED, 2.0),
+    )
+    #: safety valve: max ladder actions per ``step`` call
+    max_actions_per_step: int = 64
+
+
+@dataclass
+class GovernorAction:
+    """One applied ladder descent."""
+    instance_id: str
+    rung_from: Rung
+    rung_to: Rung
+    freed_bytes: int
+    score: float
+    seconds: float = 0.0
+
+
+class MemoryGovernor:
+    """One per :class:`~repro.core.manager.InstanceManager`."""
+
+    def __init__(self, manager, budget_bytes: Optional[int] = None,
+                 cfg: Optional[GovernorConfig] = None):
+        self.manager = manager
+        self.budget_bytes = budget_bytes
+        self.cfg = cfg or GovernorConfig()
+        #: per-tenant arrival model: iid -> (last_arrival_ts, ewma_gap_s)
+        self.arrivals: Dict[str, Tuple[float, Optional[float]]] = {}
+        #: measured wake cost per rung name ("mmap_clean"/"partial"/...)
+        self.wake_cost_ewma: Dict[str, float] = {}
+        self.actions: List[GovernorAction] = []
+        self.steps = 0
+
+    # ------------------------------------------------------------- signals
+    def observe_arrival(self, instance_id: str, now: Optional[float] = None
+                        ) -> None:
+        """Fed by the AsyncPlatform on every request submission."""
+        now = time.monotonic() if now is None else now
+        last, gap = self.arrivals.get(instance_id, (None, None))
+        if last is not None:
+            a = self.cfg.ewma_alpha
+            gap = (now - last) if gap is None else \
+                a * (now - last) + (1 - a) * gap
+        self.arrivals[instance_id] = (now, gap)
+
+    def observe_wake(self, instance_id: str, stats) -> None:
+        """Fed by ``InstanceManager.ensure_awake`` after every wake."""
+        a = self.cfg.cost_alpha
+        prev = self.wake_cost_ewma.get(stats.rung)
+        cost = stats.critical_path_seconds
+        self.wake_cost_ewma[stats.rung] = cost if prev is None else \
+            a * cost + (1 - a) * prev
+
+    def forget(self, instance_id: str) -> None:
+        self.arrivals.pop(instance_id, None)
+
+    # ------------------------------------------------------------- models
+    def predicted_gap(self, instance_id: str, now: float, *,
+                      last_used: float = 0.0) -> float:
+        """Expected seconds until the tenant's next request.
+
+        With an EWMA gap: the memoryless residual is the gap itself —
+        Poisson arrivals have no deadline, so an overdue tenant is *not*
+        imminent and a recently-served one gets no extra protection.
+        With a single observed arrival: the silence since it.  With
+        none: idle time — the LRU fallback."""
+        last, gap = self.arrivals.get(instance_id, (None, None))
+        if last is None:
+            return max(1e-3, now - last_used)
+        if gap is None:
+            return max(1e-3, now - last)
+        return max(1e-3, gap)
+
+    def wake_cost(self, rung: Rung) -> float:
+        """Measured (EWMA) seconds to climb back out of a rung, falling
+        back to the configured prior."""
+        name = {Rung.MMAP_CLEAN: "mmap_clean", Rung.PARTIAL: "partial",
+                Rung.HIBERNATED: "hibernated"}.get(rung)
+        if name is not None and name in self.wake_cost_ewma:
+            return self.wake_cost_ewma[name]
+        return dict(self.cfg.cost_priors).get(rung, 1.0)
+
+    # ------------------------------------------------------------- benefit
+    def _mmap_benefit(self, inst) -> int:
+        """Bytes a file-backed mmap cleanup frees *node-wide*: the shared
+        base weights only drop when this tenant is the last sharer."""
+        hib = self.manager.hib
+        if not hib._has_mmap(inst) or inst.mmap_dropped:
+            return 0
+        if self.manager.shared.refcount(inst.base_id) != 1:
+            return 0
+        return inst.shared_weight_bytes()
+
+    def _partial_candidates(self, inst) -> List[Tuple[int, int, Tuple]]:
+        """Cold resident units a partial deflate may swap, coldest first:
+        (miss_count, nbytes, key), non-critical only — the prefill-
+        critical prefix is never a victim."""
+        miss = inst.recorder.miss_count
+        cands: List[Tuple[int, int, Tuple]] = []
+        for u in inst.swappable_units():
+            if u.key in inst.resident and not is_critical_key(u.key):
+                cands.append((miss(u.key), u.nbytes, u.key))
+        if inst.kv is not None:
+            for k in inst.kv.resident_keys():
+                if k[0] == "kv" and not is_critical_key(k):
+                    cands.append((miss(k), inst.kv.key_nbytes(k), k))
+        # coldest first (most working-set misses), big units break ties
+        cands.sort(key=lambda t: (-t[0], -t[1]))
+        return cands
+
+    def _anon_resident_bytes(self, inst) -> int:
+        return (inst.weight_bytes(resident_only=True, include_shared=False)
+                + (inst.pool.rss_bytes(inst.instance_id) if inst.pool else 0))
+
+    # ------------------------------------------------------------- step
+    def governed_bytes(self) -> int:
+        """What the budget is charged for: resident application memory
+        plus every live instance's kept-alive metadata (page tables,
+        compiled handles) — hibernation shrinks a tenant to its metadata,
+        only TERMINATED frees that too (the density ceiling the paper's
+        'deflated but alive' containers eventually hit)."""
+        with self.manager._lock:
+            meta = sum(i.metadata_bytes()
+                       for i in self.manager.instances.values())
+        return self.manager.resident_bytes() + meta
+
+    def pressure_bytes(self, budget_bytes: Optional[int] = None) -> int:
+        """Bytes over budget right now (<= 0 means no pressure)."""
+        budget = self.budget_bytes if budget_bytes is None else budget_bytes
+        if budget is None:
+            return 0
+        return self.governed_bytes() - budget
+
+    def step(self, now: Optional[float] = None,
+             try_lock: Optional[Callable] = None,
+             budget_bytes: Optional[int] = None) -> List[GovernorAction]:
+        """One governor pass: on a breach, run scoring *rounds* until
+        pressure clears.  Each round scores every (instance, rung)
+        descent once and applies them best-first — at most one action per
+        instance per round (a tenant needing several rungs descends
+        across rounds).  Rounds repeat only while the previous one made
+        progress, so a pass is O(rounds x instances x units) with small
+        round counts (one per ladder depth), not O(actions x instances x
+        units).  Returns the actions applied."""
+        budget = self.budget_bytes if budget_bytes is None else budget_bytes
+        if budget is None:
+            return []
+        now = time.monotonic() if now is None else now
+        self.steps += 1
+        applied: List[GovernorAction] = []
+        if self.governed_bytes() <= budget:
+            return applied
+        # breached: reclaim down past the headroom so the next few
+        # allocations do not immediately re-breach
+        target = int(budget * (1.0 - self.cfg.headroom))
+        need = self.governed_bytes() - target
+        while need > 0 and len(applied) < self.cfg.max_actions_per_step:
+            progress = False
+            with self.manager._lock:
+                insts = list(self.manager.instances.values())
+            scored = []
+            for inst in insts:
+                if inst.state not in _IDLE_STATES:
+                    continue
+                gap = self.predicted_gap(inst.instance_id, now,
+                                         last_used=inst.last_used)
+                for rung_to, benefit in self._candidates(inst, now, need):
+                    if benefit <= 0:
+                        continue
+                    score = benefit * gap / (self.wake_cost(rung_to) + 1e-6)
+                    scored.append((score, inst, rung_to))
+            # best first; a victim busy serving (try-lock miss) falls
+            # through to the next-best candidate instead of stalling
+            scored.sort(key=lambda t: -t[0])
+            acted = set()
+            for score, inst, rung_to in scored:
+                if len(applied) >= self.cfg.max_actions_per_step \
+                        or need <= 0:
+                    break
+                if inst.instance_id in acted:
+                    continue
+                act = self._apply(inst, rung_to, need, now, score, try_lock)
+                acted.add(inst.instance_id)
+                if act is not None:
+                    applied.append(act)
+                    progress = True
+                    # within a round, track need by the action's own
+                    # freed estimate — the fleet-wide re-measure runs
+                    # once per round, not once per action
+                    need -= max(act.freed_bytes, 1)
+            if not progress:
+                break
+            need = self.governed_bytes() - target
+        self.actions += applied
+        return applied
+
+    def _candidates(self, inst, now: float, need: int
+                    ) -> List[Tuple[Rung, int]]:
+        """(target rung, benefit bytes) descents available to ``inst``.
+
+        Benefits are capped at ``need``: bytes beyond the remaining
+        pressure have no value, so equally-sufficient rungs compete on
+        wake cost alone — the governor takes the *cheapest* rung that
+        clears the breach (proportional reclaim), not the biggest."""
+        out: List[Tuple[Rung, int]] = []
+        state = inst.state
+        if state in (S.WARM, S.WOKEN, S.MMAP_CLEAN):
+            # compute the expensive per-instance quantities once: the
+            # unit scan (_partial_candidates) and registry lookup feed
+            # every rung's benefit below
+            mmap_b = self._mmap_benefit(inst)
+            cold_bytes = sum(nb for _, nb, _ in
+                             self._partial_candidates(inst))
+            if state == S.WARM:
+                # only WARM lands on MMAP_CLEAN; a WOKEN instance's
+                # MMAP_DROP transitions to PARTIAL (its tail is already
+                # swapped), so for WOKEN the mmap benefit is priced into
+                # the PARTIAL candidate below instead
+                out.append((Rung.MMAP_CLEAN, min(mmap_b, need)))
+            if cold_bytes + mmap_b > 0:
+                out.append((Rung.PARTIAL,
+                            min(cold_bytes + mmap_b, need)))
+            out.append((Rung.HIBERNATED,
+                        min(self._anon_resident_bytes(inst) + mmap_b,
+                            need)))
+        elif state == S.PARTIAL:
+            cold_bytes = sum(nb for _, nb, _ in
+                             self._partial_candidates(inst))
+            if cold_bytes > 0:
+                out.append((Rung.PARTIAL, min(cold_bytes, need)))
+            out.append((Rung.HIBERNATED,
+                        min(self._anon_resident_bytes(inst), need)))
+        elif state == S.HIBERNATE:
+            tidle = self.cfg.terminate_idle_s
+            if tidle is not None and (now - inst.last_used) > tidle:
+                # last resort: frees the kept-alive metadata and releases
+                # the tenant's swap-store segment refs (disk GC)
+                out.append((Rung.TERMINATED,
+                            min(inst.metadata_bytes(), need)))
+        return out
+
+    def _apply(self, inst, rung_to: Rung, need: int, now: float,
+               score: float,
+               try_lock: Optional[Callable]) -> Optional[GovernorAction]:
+        iid = inst.instance_id
+        lock = try_lock(iid) if try_lock else None
+        if lock is not None and not lock.acquire(blocking=False):
+            return None                  # busy serving: not idle after all
+        t0 = time.monotonic()
+        try:
+            # revalidate under the lock: the instance may have served or
+            # been deflated between scoring and apply — a stale descent
+            # must neither evict a live tenant nor fire an illegal event
+            if inst.state not in _APPLICABLE_FROM[rung_to]:
+                return None
+            if rung_to == Rung.TERMINATED and (
+                    self.cfg.terminate_idle_s is None
+                    or (now - inst.last_used) <= self.cfg.terminate_idle_s):
+                return None
+            before = self._anon_resident_bytes(inst) \
+                + self._mmap_benefit(inst)
+            rung_from = inst.rung
+            hib = self.manager.hib
+            if rung_to == Rung.MMAP_CLEAN:
+                st = hib.deflate_mmap(inst)
+                freed = st.shared_bytes_released
+            elif rung_to == Rung.PARTIAL:
+                # a bite never goes below min_partial_bytes: for a tiny
+                # breach the per-pass overhead would beat the benefit
+                bite = max(need, self.cfg.min_partial_bytes)
+                victims, tot = [], 0
+                for _, nb, key in self._partial_candidates(inst):
+                    if tot >= bite:
+                        break
+                    victims.append(key)
+                    tot += nb
+                st = hib.deflate_partial(inst, victims)
+                freed = st.swap_bytes + st.shared_bytes_released
+            elif rung_to == Rung.HIBERNATED:
+                st = hib.deflate(inst)
+                freed = before
+            else:                        # TERMINATED
+                freed = inst.metadata_bytes()
+                self.manager.evict(iid)  # also forgets our arrival model
+            act = GovernorAction(iid, rung_from, rung_to, freed, score,
+                                 time.monotonic() - t0)
+            return act
+        finally:
+            if lock is not None:
+                lock.release()

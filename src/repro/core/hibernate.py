@@ -1,6 +1,7 @@
-"""HibernationManager — the 4-step deflation of §3.2 and all inflate paths.
+"""HibernationManager — the 4-step deflation of §3.2, the deflation-ladder
+rungs, and all inflate paths.
 
-Deflate (Warm/Woken -> Hibernate):
+Full deflate (Warm/Woken/MmapClean/Partial -> Hibernate):
   1. *Pause*: SIGSTOP transition; the engine stops scheduling the instance
      (its compiled executables — the "blocked runtime threads" — stay alive).
      An in-flight wake stream is cancelled and drained first, and any
@@ -29,6 +30,26 @@ Wake — three inflate paths:
     the whole working set before ``wake()`` returns.
   * ``mode="pagefault"`` — nothing restored upfront; each unit is a random
     read on first access.
+
+Ladder rungs (the governor's incremental deflate, between Warm and the
+full Hibernate above):
+
+  * :meth:`HibernationManager.deflate_mmap` — step 4 alone: the §3.5
+    file-backed mmap cleanup.  Shared base-weight units are decref'd
+    (dropped at refcount zero, re-read from the checkpoint on wake);
+    anonymous memory stays resident, so wake is a re-map.
+  * :meth:`HibernationManager.deflate_partial` — steps 1+3 on a *victim
+    subset*: the given cold unit keys (REAP-miss-ranked experts /
+    deep-layer KV pages) are written to the page-fault tier and dropped,
+    while the prefill-critical prefix stays resident.  Reuses the wake-
+    stream drain logic, so a partial deflate racing a streamed wake never
+    loses bytes.  Callable repeatedly for proportional reclaim.
+
+Wakes are rung-aware: a PARTIAL wake has no REAP batch to stream — it
+re-maps and restores the swapped units in the background
+(:func:`repro.core.inflate.partial_restore_keys`); an MMAP_CLEAN wake is
+a pure re-map.  ``WakeStats.rung`` records which rung a wake climbed
+from, which is how the governor learns measured per-rung wake costs.
 """
 from __future__ import annotations
 
@@ -36,9 +57,10 @@ import time
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.inflate import InflatePipeline, InflatorPool
+from repro.core.inflate import (InflatePipeline, InflatorPool,
+                                partial_restore_keys)
 from repro.core.instance import ModelInstance
-from repro.core.state import Event
+from repro.core.state import ContainerState, Event
 
 
 @dataclass
@@ -54,6 +76,8 @@ class DeflateStats:
     swap_dedup_bytes: int = 0        # satisfied by existing shared segments
     swap_elided_bytes: int = 0       # constant-fill units, metadata only
     seconds: float = 0.0
+    #: ladder rung this deflate landed on ("mmap_clean"/"partial"/"hibernated")
+    rung: str = "hibernated"
 
 
 @dataclass
@@ -77,6 +101,9 @@ class WakeStats:
     critical_path_seconds: float = 0.0
     #: stream was pipelined (the tail may still be inflating)
     pipelined: bool = False
+    #: ladder rung this wake climbed from ("mmap_clean"/"partial"/
+    #: "hibernated") — the governor's measured per-rung cost signal
+    rung: str = "hibernated"
 
 
 class HibernationManager:
@@ -155,10 +182,104 @@ class HibernationManager:
         st.swap_bytes = sum(a.nbytes for _, a in w_swap + kv_swap)
         st.kv_pages_swapped = n_pages
 
-        # step 4: clean up file-backed (shared) memory
-        if self.shared_registry is not None and inst.base_id:
-            st.shared_bytes_released = self.shared_registry.release(
-                inst.base_id)
+        # step 4: clean up file-backed (shared) memory.  Guarded by the
+        # mmap_dropped flag so a ladder path through MMAP_CLEAN/PARTIAL
+        # (which already released) stays refcount-balanced.
+        st.shared_bytes_released = self._release_mmap(inst)
+
+        inst.inflated = False
+        st.seconds = time.monotonic() - t0
+        self.log.append(("deflate", inst.instance_id, st))
+        return st
+
+    def _has_mmap(self, inst: ModelInstance) -> bool:
+        return (self.shared_registry is not None and bool(inst.base_id)
+                and bool(inst.shared_paths))
+
+    def _release_mmap(self, inst: ModelInstance) -> int:
+        """Mark the mmap rung descended and release the registry ref if
+        one is actually held.  The flag is set even for instances with no
+        shared mmap: it also tells ``ensure_awake`` that an MMAP_CLEAN
+        instance still needs its (no-op) re-map wake."""
+        held = self._has_mmap(inst) and not inst.mmap_dropped
+        inst.mmap_dropped = True
+        return self.shared_registry.release(inst.base_id) if held else 0
+
+    def remap(self, inst: ModelInstance) -> None:
+        """Re-acquire the shared base-weight mmap dropped by a ladder
+        descent (clean file-backed pages: re-read from the checkpoint at
+        refcount 0->1, free otherwise)."""
+        if self._has_mmap(inst) and inst.mmap_dropped:
+            self.shared_registry.acquire(inst.base_id, inst)
+        inst.mmap_dropped = False
+
+    # --------------------------------------------------------- ladder rungs
+    def deflate_mmap(self, inst: ModelInstance) -> DeflateStats:
+        """Rung 1 (MMAP_CLEAN): the §3.5 file-backed mmap cleanup alone.
+
+        Shared base-weight units are decref'd in the registry; anonymous
+        memory stays resident and the instance remains schedulable, so
+        the wake cost is a re-map (plus one checkpoint re-read when this
+        tenant was the last sharer).  An in-flight wake stream is left
+        alone — it only installs anonymous units."""
+        t0 = time.monotonic()
+        st = DeflateStats(rung="mmap_clean")
+        inst.sm.fire(Event.MMAP_DROP)
+        st.shared_bytes_released = self._release_mmap(inst)
+        if inst.state == ContainerState.PARTIAL:
+            # a WOKEN instance lands in PARTIAL (4a'): its next request
+            # must run the re-map wake, so clear the wake-storm guard's
+            # "already inflated this cycle" flag
+            inst.inflated = False
+            st.rung = "partial"
+        st.seconds = time.monotonic() - t0
+        self.log.append(("deflate", inst.instance_id, st))
+        return st
+
+    def deflate_partial(self, inst: ModelInstance, keys) -> DeflateStats:
+        """Rung 2 (PARTIAL): swap out only the given *cold* unit keys.
+
+        The prefill-critical prefix stays resident, so a later wake is
+        near-warm; the victims (REAP-miss-ranked MoE experts, deep-layer
+        KV pages — chosen by the governor) go to the page-fault tier and
+        demand-fault back on first touch.  Reuses the full-deflate drain
+        logic: an in-flight wake stream is cancelled and drained first so
+        a stale background install cannot resurrect a dropped unit.
+        Callable repeatedly on an already-PARTIAL instance — proportional
+        reclaim takes several small bites instead of one full deflate."""
+        t0 = time.monotonic()
+        st = DeflateStats(rung="partial")
+
+        pipe = inst.wake_pipeline
+        if pipe is not None:
+            pipe.cancel(drain=True)
+            inst.wake_pipeline = None
+        inst.quiesce_bg()
+
+        inst.sm.fire(Event.PARTIAL_STOP)
+        # mmap cleanup rides along: PARTIAL is below MMAP_CLEAN on the
+        # ladder, and the flag keeps the refcount balanced if it already ran
+        st.shared_bytes_released = self._release_mmap(inst)
+
+        keys = list(dict.fromkeys(keys))
+        w_items = inst.collect_weight_items_for(
+            [k for k in keys if k and k[0] == "w"])
+        kv_items = (inst.kv.export_keys(
+            [k for k in keys if k and k[0] in ("kv", "kvh")])
+            if inst.kv is not None else [])
+        items = w_items + kv_items
+        # victims are cold by construction: bump their coldness counters
+        # so the store's compression tiers can sink them
+        inst.recorder.note_misses(k for k, _ in items)
+        receipt = inst.swap_file.write_units(items)
+        if receipt is not None:
+            st.swap_stored_bytes = receipt.stored_bytes
+            st.swap_dedup_bytes = receipt.dedup_bytes
+            st.swap_elided_bytes = receipt.elided_bytes
+        inst.drop_units([k for k, _ in w_items])
+        if kv_items and inst.kv is not None:
+            st.kv_pages_swapped = inst.kv.drop_keys([k for k, _ in kv_items])
+        st.swap_bytes = sum(a.nbytes for _, a in items)
 
         inst.inflated = False
         st.seconds = time.monotonic() - t0
@@ -196,13 +317,20 @@ class HibernationManager:
         critical prefix is resident (``critical_path_seconds``); the tail
         keeps inflating on ``inst.wake_pipeline``.  Anticipatory wakes
         (``priority="low"``) run the same pipeline without read
-        double-buffering and yield between chunks."""
+        double-buffering and yield between chunks.
+
+        The wake is *rung-aware*: MMAP_CLEAN and PARTIAL instances take
+        their cheap paths (:meth:`_wake_mmap` / :meth:`_wake_partial`)
+        instead of the full REAP restore."""
+        if inst.state == ContainerState.MMAP_CLEAN:
+            return self._wake_mmap(inst, trigger)
+        if inst.state == ContainerState.PARTIAL:
+            return self._wake_partial(inst, trigger, pipelined)
         t0 = time.monotonic()
         st = WakeStats(mode=mode)
 
         # re-acquire shared base weights (file-backed: from checkpoint)
-        if self.shared_registry is not None and inst.base_id:
-            self.shared_registry.acquire(inst.base_id, inst)
+        self.remap(inst)
 
         if mode == "reap" and inst.reap_file.extents:
             if pipelined:
@@ -228,6 +356,52 @@ class HibernationManager:
         inst.inflated = True
         if trigger == "sigcont":
             inst.sm.fire(Event.SIGCONT)
+        st.seconds = time.monotonic() - t0
+        if not st.pipelined:
+            st.critical_path_seconds = st.seconds
+        self.log.append(("wake", inst.instance_id, st))
+        return st
+
+    def _wake_mmap(self, inst: ModelInstance, trigger: str) -> WakeStats:
+        """MMAP_CLEAN wake: pure re-map — anonymous memory never left."""
+        t0 = time.monotonic()
+        st = WakeStats(mode="remap", rung="mmap_clean")
+        self.remap(inst)
+        inst.inflated = True
+        if trigger == "sigcont":
+            inst.sm.fire(Event.SIGCONT)          # -> WARM
+        st.seconds = st.critical_path_seconds = time.monotonic() - t0
+        self.log.append(("wake", inst.instance_id, st))
+        return st
+
+    def _wake_partial(self, inst: ModelInstance, trigger: str,
+                      pipelined: bool) -> WakeStats:
+        """PARTIAL wake: the critical prefix is already resident, so the
+        caller is schedulable immediately — the swapped cold tail restores
+        in the background (demand faults cover anything touched sooner).
+        Without an inflator pool (or with ``pipelined=False``) the restore
+        runs synchronously instead."""
+        t0 = time.monotonic()
+        st = WakeStats(mode="partial", rung="partial",
+                       pipelined=pipelined and self.inflator is not None)
+        self.remap(inst)
+        inst.inflated = True
+        keys = partial_restore_keys(inst)
+        if trigger == "sigcont":
+            inst.sm.fire(Event.SIGCONT)          # -> WOKEN
+        if st.pipelined:
+            st.critical_path_seconds = time.monotonic() - t0
+            self.prefetch_async(inst, keys)
+        elif keys:
+            t_io = time.monotonic()
+            wkeys = [k for k in keys if k[0] == "w"]
+            st.prefetched_bytes += inst.fault_in(wkeys)
+            kvkeys = [k for k in keys if k[0] in ("kv", "kvh")]
+            if kvkeys and inst.kv is not None:
+                with inst.install_lock:
+                    st.prefetched_bytes += inst.kv.fault_in(
+                        kvkeys, inst.swap_file, inst.reap_file)
+            st.io_seconds = time.monotonic() - t_io
         st.seconds = time.monotonic() - t0
         if not st.pipelined:
             st.critical_path_seconds = st.seconds

@@ -72,6 +72,33 @@ def critical_wake_keys(inst) -> List[Hashable]:
     return [k for k in inst.reap_file.extents if is_critical_key(k)]
 
 
+def partial_restore_keys(inst) -> List[Hashable]:
+    """Rung-aware wake plan for a PARTIAL-rung instance.
+
+    A partial deflate swaps *cold* units into the page-fault tier while
+    the prefill-critical prefix stays resident, so a PARTIAL wake has no
+    REAP batch to stream — it restores exactly the swapped-out units.
+    Ordered for the background restorer: any critical key first (the
+    governor never swaps them, but a wake must not starve prefill if one
+    slipped through), then hottest-first (lowest REAP-miss count) so the
+    units most likely to be touched next arrive before the truly cold
+    tail."""
+    def swapped(k):
+        # a unit may live in the REAP file instead of the page-fault
+        # tier: a cancelled mid-stream wake leaves undelivered working-
+        # set units there, and a partial deflate does not rewrite it —
+        # those are hot, so the restore must cover them too
+        return k in inst.swap_file or k in inst.reap_file.extents
+
+    keys: List[Hashable] = [k for k in inst.nonresident_keys()
+                            if swapped(k)]
+    if inst.kv is not None:
+        keys += [k for k in inst.kv.nonresident_logical_keys()
+                 if swapped(k)]
+    miss = inst.recorder.miss_count
+    return sorted(keys, key=lambda k: (not is_critical_key(k), miss(k)))
+
+
 class InflatorPool:
     """Per-deployment pool of inflator worker threads.
 

@@ -26,7 +26,8 @@ import numpy as np
 import jax
 
 from repro.core.reap import ReapRecorder
-from repro.core.state import ContainerState, Event, StateMachine
+from repro.core.state import (RUNG_OF, ContainerState, Event, Rung,
+                              StateMachine)
 from repro.core.swap import ReapFile, SwapFile
 
 EMBED_BLOCK = 4096          # embedding rows per swappable unit
@@ -99,6 +100,10 @@ class ModelInstance:
         #: True once the current hibernation cycle's upfront inflate ran
         #: (cleared by deflate; the manager's wake-storm guard keys off it)
         self.inflated = True
+        #: True while the shared base-weight mmap has been cleaned (rung
+        #: MMAP_CLEAN or below).  Guards the registry acquire/release pair
+        #: so ladder paths that skip rungs stay refcount-balanced.
+        self.mmap_dropped = False
         #: in-flight streamed wake (``repro.core.inflate.InflatePipeline``)
         #: — the wake-storm guard hands this handle to late arrivals and
         #: the fault path demand-pulls from it
@@ -185,6 +190,32 @@ class ModelInstance:
             data = np.ascontiguousarray(self._get_unit(u))
             (reap_items if u.key in ws else swap_items).append((u.key, data))
         return reap_items, swap_items
+
+    def collect_weight_items_for(self, keys) -> List[Tuple[Tuple, "np.ndarray"]]:
+        """Materialize the given *resident anonymous* weight unit keys as
+        (key, data) items — the partial-deflate victim export."""
+        items = []
+        for key in keys:
+            u = self.units.get(key)
+            if u is None or u.path in self.shared_paths or \
+                    key not in self.resident:
+                continue
+            items.append((key, np.ascontiguousarray(self._get_unit(u))))
+        return items
+
+    def drop_units(self, keys) -> int:
+        """Zero + mark non-resident a specific unit set (partial deflate's
+        post-swap-out madvise).  Returns bytes dropped."""
+        n = 0
+        for key in keys:
+            u = self.units.get(key)
+            if u is None or u.path in self.shared_paths or \
+                    key not in self.resident:
+                continue
+            self._zero_unit(u)
+            self.resident.discard(key)
+            n += u.nbytes
+        return n
 
     def drop_weights(self) -> int:
         """Zero every swappable resident unit (post swap-out madvise)."""
@@ -359,3 +390,9 @@ class ModelInstance:
     @property
     def state(self) -> ContainerState:
         return self.sm.state
+
+    @property
+    def rung(self) -> Rung:
+        """Position on the deflation ladder (running states keep the rung
+        they will FINISH back into)."""
+        return RUNG_OF[self.sm.state]

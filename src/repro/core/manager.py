@@ -21,12 +21,17 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.governor import GovernorConfig, MemoryGovernor
 from repro.core.hibernate import HibernationManager
 from repro.core.inflate import InflatorPool
 from repro.core.instance import ModelInstance
 from repro.core.pool import PagePool
 from repro.core.state import ContainerState, Event
 from repro.core.store import StorePolicy, SwapStore
+
+#: ladder states a wake (request-driven or predictive) climbs out of
+WAKEABLE_STATES = (ContainerState.HIBERNATE, ContainerState.PARTIAL,
+                   ContainerState.MMAP_CLEAN)
 
 
 class SharedWeightsRegistry:
@@ -98,6 +103,13 @@ class ManagerConfig:
     inflate_workers: int = 3
     #: turn serviced faults into asynchronous next-layer prefetch
     lookahead: bool = True
+    #: node-wide memory budget the :class:`~repro.core.governor.
+    #: MemoryGovernor` enforces over ALL tenants (None = no budget: the
+    #: governor only acts when a pressure target is passed explicitly)
+    memory_budget_bytes: Optional[int] = None
+    #: governor knobs (headroom, rung thresholds, terminate policy);
+    #: None uses :class:`~repro.core.governor.GovernorConfig` defaults
+    governor_policy: Optional[GovernorConfig] = None
 
 
 class InstanceManager:
@@ -120,6 +132,9 @@ class InstanceManager:
         self.hib = HibernationManager(self.shared, inflator=self.inflator,
                                       wake_chunk_bytes=cfg.wake_chunk_bytes)
         self.instances: Dict[str, ModelInstance] = {}
+        self.governor = MemoryGovernor(
+            self, budget_bytes=cfg.memory_budget_bytes,
+            cfg=cfg.governor_policy)
         self.events: List[tuple] = []
         self._lock = threading.RLock()                 # instance table
         self._wake_locks: Dict[str, threading.Lock] = {}
@@ -127,6 +142,11 @@ class InstanceManager:
         #: that arrived wanting one and found it already done/in flight
         self.wakes_performed = 0
         self.wakes_deduped = 0
+        #: eviction hook the platform layer registers so governor-driven
+        #: TERMINATED descents also drop its per-tenant state (request
+        #: queue entry, engine serve lock) — without it, tenant churn
+        #: under terminate_idle_s grows those tables unboundedly
+        self.on_evict: Optional[Callable[[str], None]] = None
 
     def _wake_lock(self, instance_id: str) -> threading.Lock:
         with self._lock:
@@ -156,6 +176,14 @@ class InstanceManager:
     def deflate(self, instance_id: str):
         return self.hib.deflate(self.instances[instance_id])
 
+    def deflate_mmap(self, instance_id: str):
+        """Ladder rung 1: clean the instance's file-backed mmap only."""
+        return self.hib.deflate_mmap(self.instances[instance_id])
+
+    def deflate_partial(self, instance_id: str, keys):
+        """Ladder rung 2: swap out the given cold unit keys only."""
+        return self.hib.deflate_partial(self.instances[instance_id], keys)
+
     def ensure_awake(self, instance_id: str, trigger: str = "request",
                      priority: Optional[str] = None):
         """Inflate a hibernating instance exactly once per storm.
@@ -175,25 +203,37 @@ class InstanceManager:
         the same pipeline at low priority unless overridden.
         """
         inst = self.instances.get(instance_id)
-        if inst is None or inst.state != ContainerState.HIBERNATE:
+        if inst is None or inst.state not in WAKEABLE_STATES:
             return None
         if priority is None:
             priority = "low" if trigger == "sigcont" else "high"
         with self._wake_lock(instance_id):
-            if inst.state != ContainerState.HIBERNATE or inst.inflated:
+            state = inst.state
+            if state not in WAKEABLE_STATES:
+                self.wakes_deduped += 1        # someone else woke it first
+                return None
+            if state in (ContainerState.HIBERNATE, ContainerState.PARTIAL) \
+                    and inst.inflated:
                 self.wakes_deduped += 1        # someone else inflated first
                 return None
-            if trigger == "request" and self.cfg.wake_mode != "reap":
+            if state == ContainerState.MMAP_CLEAN and not inst.mmap_dropped:
+                self.wakes_deduped += 1        # someone else re-mapped first
+                return None
+            if trigger == "request" and state == ContainerState.HIBERNATE \
+                    and self.cfg.wake_mode != "reap":
                 # pagefault mode: units fault in lazily.  Still mark the
                 # cycle as woken under the wake lock, or a racing sigcont
                 # wake could fire after the engine's REQUEST transition.
                 inst.inflated = True
                 return None
             self.wakes_performed += 1
-            return self.hib.wake(inst, mode=self.cfg.wake_mode,
-                                 trigger=trigger,
-                                 pipelined=self.cfg.pipelined_wake,
-                                 priority=priority)
+            st = self.hib.wake(inst, mode=self.cfg.wake_mode,
+                               trigger=trigger,
+                               pipelined=self.cfg.pipelined_wake,
+                               priority=priority)
+            # the governor learns measured per-rung wake costs from here
+            self.governor.observe_wake(instance_id, st)
+            return st
 
     def predictive_wake(self, instance_id: str, priority: str = "low"):
         """⑤ control-plane wake in anticipation of a request — the
@@ -207,11 +247,14 @@ class InstanceManager:
         with self._lock:
             inst = self.instances.pop(instance_id)
             self._wake_locks.pop(instance_id, None)
-        if self.shared and inst.base_id and inst.shared_paths and \
-                inst.state not in (ContainerState.HIBERNATE,):
-            self.shared.release(inst.base_id)
+        # refcount-balanced: a ladder descent (mmap_clean/partial/full
+        # deflate) already released the shared mmap; the flag knows
+        self.hib._release_mmap(inst)
         inst.sm.fire(Event.EVICT)
         inst.terminate()                       # swap files deleted (§3.4)
+        self.governor.forget(instance_id)
+        if self.on_evict is not None:
+            self.on_evict(instance_id)
         self.events.append((time.monotonic(), "evict", instance_id))
 
     # ------------------------------------------------------------- policy
@@ -230,37 +273,25 @@ class InstanceManager:
                 seen_shared.add(inst.base_id)
         return tot
 
-    def handle_memory_pressure(self, target_bytes: int,
-                               try_lock: Optional[Callable] = None
-                               ) -> List[str]:
-        """Deflate idle warm/woken instances (LRU) instead of evicting —
-        the paper's density mechanism.  Returns the ids deflated.
+    def handle_memory_pressure(self, target_bytes: Optional[int] = None,
+                               try_lock: Optional[Callable] = None,
+                               now: Optional[float] = None) -> List[str]:
+        """Reclaim memory down to a target by walking victims down the
+        deflation ladder — delegates to the :class:`MemoryGovernor`
+        (cost/benefit victim selection, proportional reclaim).
 
-        ``try_lock(instance_id)`` (optional) must return a lock to acquire
-        non-blocking around each deflate; instances currently being served
-        are skipped instead of racing the engine's state machine.
+        ``target_bytes=None`` uses the configured node budget
+        (``ManagerConfig.memory_budget_bytes``); passing a value enforces
+        a one-off target.  ``try_lock(instance_id)`` (optional) must
+        return a lock to acquire non-blocking around each deflate;
+        instances currently being served are skipped instead of racing
+        the engine's state machine.  Returns the ids acted on.
         """
-        deflated = []
-        with self._lock:
-            idle = sorted(
-                (i for i in self.instances.values()
-                 if i.state in (ContainerState.WARM, ContainerState.WOKEN)),
-                key=lambda i: i.last_used)
-        for inst in idle:
-            if self.resident_bytes() <= target_bytes:
-                break
-            lock = try_lock(inst.instance_id) if try_lock else None
-            if lock is not None and not lock.acquire(blocking=False):
-                continue                   # busy serving: not idle after all
-            try:
-                if inst.state in (ContainerState.WARM, ContainerState.WOKEN):
-                    self.hib.deflate(inst)
-                    deflated.append(inst.instance_id)
-            finally:
-                if lock is not None:
-                    lock.release()
-        self.events.append((time.monotonic(), "pressure", tuple(deflated)))
-        return deflated
+        actions = self.governor.step(now=now, try_lock=try_lock,
+                                     budget_bytes=target_bytes)
+        acted = list(dict.fromkeys(a.instance_id for a in actions))
+        self.events.append((time.monotonic(), "pressure", tuple(acted)))
+        return acted
 
     def states(self) -> Dict[str, str]:
         with self._lock:

@@ -26,11 +26,12 @@ def percentile(xs: Sequence[float], q: float) -> float:
 class MemoryReport:
     instance_id: str
     state: str
-    weight_private: int          # resident anonymous weight bytes
-    weight_shared_pss: float     # shared base weights / num sharers
-    kv_rss: int                  # pool pages held (RSS)
-    kv_pss: float                # pool pages / refcount (prefix sharing)
-    metadata: int                # kept-alive host objects
+    rung: str = ""               # deflation-ladder rung (warm/mmap_clean/...)
+    weight_private: int = 0      # resident anonymous weight bytes
+    weight_shared_pss: float = 0.0   # shared base weights / num sharers
+    kv_rss: int = 0              # pool pages held (RSS)
+    kv_pss: float = 0.0          # pool pages / refcount (prefix sharing)
+    metadata: int = 0            # kept-alive host objects
     # disk tier (swap + REAP files) — the SwapStore's resident-vs-unique-
     # vs-compressed view.  logical: what verbatim per-sandbox files would
     # hold; stored_pss: fair-share on-disk bytes (dedup'd segments split
@@ -64,6 +65,7 @@ def memory_report(inst, shared_registry=None) -> MemoryReport:
     return MemoryReport(
         instance_id=inst.instance_id,
         state=inst.state.value,
+        rung=inst.rung.name.lower(),
         weight_private=inst.weight_bytes(resident_only=True,
                                          include_shared=False),
         weight_shared_pss=shared_bytes / nshare,
@@ -74,6 +76,33 @@ def memory_report(inst, shared_registry=None) -> MemoryReport:
         disk_logical=disk_logical,
         disk_stored_pss=sf.file_bytes + inst.reap_file.file_bytes,
     )
+
+
+def per_rung_report(manager) -> Dict[str, Dict[str, float]]:
+    """Deployment-wide per-rung accounting: how many tenants sit on each
+    deflation-ladder rung and what they cost in memory and disk.
+
+    Returns ``{rung: {instances, weight_private, weight_shared_pss,
+    kv_rss, pss_total, disk_logical, disk_stored_pss}}`` — the
+    ``MemoryReport`` columns aggregated by rung (see the README's
+    "Memory governor" section for how to read them)."""
+    with manager._lock:
+        insts = list(manager.instances.values())
+    out: Dict[str, Dict[str, float]] = {}
+    for inst in insts:
+        rep = memory_report(inst, manager.shared)
+        row = out.setdefault(rep.rung, {
+            "instances": 0, "weight_private": 0, "weight_shared_pss": 0.0,
+            "kv_rss": 0, "pss_total": 0.0, "disk_logical": 0,
+            "disk_stored_pss": 0.0})
+        row["instances"] += 1
+        row["weight_private"] += rep.weight_private
+        row["weight_shared_pss"] += rep.weight_shared_pss
+        row["kv_rss"] += rep.kv_rss
+        row["pss_total"] += rep.pss_total
+        row["disk_logical"] += rep.disk_logical
+        row["disk_stored_pss"] += rep.disk_stored_pss
+    return out
 
 
 class LatencyTrace:

@@ -1,10 +1,27 @@
-"""Container state machine — Figure 3 of the paper, exactly.
+"""Container state machine — Figure 3 of the paper, extended to a
+multi-rung *deflation ladder*.
 
-States: the three conventional ones (COLD start pseudo-state, WARM, RUNNING)
-plus the paper's three new states (HIBERNATE, HIBERNATE_RUNNING, WOKEN).
-Transitions carry the paper's circled numbers.  Every transition is guarded;
-invalid events raise ``InvalidTransition`` so the property tests can assert
-the machine never leaves the paper's graph.
+The paper's spectrum between Warm and Hibernate is a ladder of rungs,
+each releasing more memory and costing more to wake:
+
+    WARM -> MMAP_CLEAN -> PARTIAL -> HIBERNATED -> TERMINATED
+
+  * ``MMAP_CLEAN`` — file-backed mmap cleanup (§3.5): re-mappable shared
+    base-weight units are decref'd; anonymous memory stays resident, so a
+    request only pays a checkpoint re-read when this tenant was the last
+    sharer.
+  * ``PARTIAL``    — partial deflate: *cold* anonymous units (REAP-miss-
+    ranked MoE experts, deep-layer KV pages) are swapped out while the
+    prefill-critical prefix stays resident — wake TTFT stays near-warm.
+  * ``HIBERNATE``  — the paper's full deflate (Fig. 3): everything
+    anonymous on disk, zero CPU.
+  * ``DEAD``       — terminated: swap refs released, metadata gone.
+
+The classic Fig. 3 graph (COLD/WARM/RUNNING/HIBERNATE/HIBERNATE_RUNNING/
+WOKEN, circled transition numbers) is preserved verbatim; the ladder adds
+the two intermediate rungs plus their entry/exit events.  Every
+transition is guarded; invalid events raise ``InvalidTransition`` so the
+property tests can assert the machine never leaves the graph.
 """
 from __future__ import annotations
 
@@ -18,24 +35,38 @@ class ContainerState(enum.Enum):
     COLD = "cold"                        # not yet created / evicted
     WARM = "warm"                        # fully initialized, idle, inflated
     RUNNING = "running"                  # processing a request (inflated)
+    MMAP_CLEAN = "mmap_clean"            # shared mmap units dropped, anon resident
+    PARTIAL = "partial"                  # cold anon units swapped, prefix resident
     HIBERNATE = "hibernate"              # deflated, paused, zero CPU
     HIBERNATE_RUNNING = "hib_running"    # woken by a request, processing
     WOKEN = "woken"                      # request finished, partially inflated
     DEAD = "dead"                        # evicted / terminated
 
 
+class Rung(enum.IntEnum):
+    """Position on the deflation ladder — ordered: deflating an instance
+    moves it to a strictly higher rung, waking moves it lower."""
+    WARM = 0
+    MMAP_CLEAN = 1
+    PARTIAL = 2
+    HIBERNATED = 3
+    TERMINATED = 4
+
+
 class Event(enum.Enum):
     COLD_START = "cold_start"            # ① platform spawns a new container
     REQUEST = "request"                  # ②⑥⑦ user request arrives
     FINISH = "finish"                    # ③⑧ request processing done
-    SIGSTOP = "sigstop"                  # ④⑨ platform deflates
+    MMAP_DROP = "mmap_drop"              # ladder rung 1: clean file-backed mmap
+    PARTIAL_STOP = "partial_stop"        # ladder rung 2: swap out cold units
+    SIGSTOP = "sigstop"                  # ④⑨ platform deflates (full)
     SIGCONT = "sigcont"                  # ⑤ predictive wake-up
     EVICT = "evict"                      # terminate, delete swap files
 
 
 S, E = ContainerState, Event
 
-#: (state, event) -> (next_state, paper transition number)
+#: (state, event) -> (next_state, paper transition number / ladder tag)
 TRANSITIONS: Dict[Tuple[ContainerState, Event], Tuple[ContainerState, str]] = {
     (S.COLD, E.COLD_START):            (S.WARM, "(1)"),
     (S.WARM, E.REQUEST):               (S.RUNNING, "(2)"),
@@ -46,8 +77,32 @@ TRANSITIONS: Dict[Tuple[ContainerState, Event], Tuple[ContainerState, str]] = {
     (S.HIBERNATE, E.REQUEST):          (S.HIBERNATE_RUNNING, "(7)"),
     (S.HIBERNATE_RUNNING, E.FINISH):   (S.WOKEN, "(8)"),
     (S.WOKEN, E.SIGSTOP):              (S.HIBERNATE, "(9)"),
-    # eviction is legal from any idle state
+    # --- deflation ladder: each rung is reachable from every rung above
+    # it (the governor may skip an empty rung), never from below
+    (S.WARM, E.MMAP_DROP):             (S.MMAP_CLEAN, "(4a)"),
+    # a WOKEN instance already has tail units swapped out: cleaning its
+    # mmap leaves it *partially* resident, not MMAP_CLEAN-fully-resident
+    (S.WOKEN, E.MMAP_DROP):            (S.PARTIAL, "(4a')"),
+    (S.WARM, E.PARTIAL_STOP):          (S.PARTIAL, "(4b)"),
+    (S.WOKEN, E.PARTIAL_STOP):         (S.PARTIAL, "(4b)"),
+    (S.MMAP_CLEAN, E.PARTIAL_STOP):    (S.PARTIAL, "(4b)"),
+    # proportional reclaim: the governor may take further bites out of an
+    # already-PARTIAL instance (swap more cold units) without changing rung
+    (S.PARTIAL, E.PARTIAL_STOP):       (S.PARTIAL, "(4b)"),
+    (S.MMAP_CLEAN, E.SIGSTOP):         (S.HIBERNATE, "(4)"),
+    (S.PARTIAL, E.SIGSTOP):            (S.HIBERNATE, "(4)"),
+    # --- ladder wakes: one SIGCONT climbs back to the servable rung the
+    # memory supports (MMAP_CLEAN re-maps -> fully warm; PARTIAL restores
+    # in the background -> woken)
+    (S.MMAP_CLEAN, E.SIGCONT):         (S.WARM, "(5a)"),
+    (S.PARTIAL, E.SIGCONT):            (S.WOKEN, "(5b)"),
+    # --- requests on intermediate rungs
+    (S.MMAP_CLEAN, E.REQUEST):         (S.RUNNING, "(2a)"),
+    (S.PARTIAL, E.REQUEST):            (S.HIBERNATE_RUNNING, "(7b)"),
+    # eviction (the TERMINATED rung) is legal from any idle state
     (S.WARM, E.EVICT):                 (S.DEAD, "evict"),
+    (S.MMAP_CLEAN, E.EVICT):           (S.DEAD, "evict"),
+    (S.PARTIAL, E.EVICT):              (S.DEAD, "evict"),
     (S.HIBERNATE, E.EVICT):            (S.DEAD, "evict"),
     (S.WOKEN, E.EVICT):                (S.DEAD, "evict"),
 }
@@ -57,7 +112,30 @@ DEFLATED_STATES = frozenset({S.HIBERNATE})
 #: states in which the instance consumes zero scheduler slots ("zero CPU")
 PAUSED_STATES = frozenset({S.HIBERNATE, S.DEAD})
 #: states from which a request can be served without a cold start
-SERVABLE_STATES = frozenset({S.WARM, S.HIBERNATE, S.WOKEN})
+SERVABLE_STATES = frozenset({S.WARM, S.MMAP_CLEAN, S.PARTIAL,
+                             S.HIBERNATE, S.WOKEN})
+
+#: ladder position of every non-running state (running states keep the
+#: rung of the state they will FINISH back into)
+RUNG_OF: Dict[ContainerState, Rung] = {
+    S.WARM: Rung.WARM,
+    S.RUNNING: Rung.WARM,
+    S.WOKEN: Rung.WARM,            # servable without any wake work
+    S.HIBERNATE_RUNNING: Rung.WARM,
+    S.MMAP_CLEAN: Rung.MMAP_CLEAN,
+    S.PARTIAL: Rung.PARTIAL,
+    S.HIBERNATE: Rung.HIBERNATED,
+    S.DEAD: Rung.TERMINATED,
+    S.COLD: Rung.TERMINATED,
+}
+
+#: the deflate event that takes an (idle, servable) state to a given rung
+DEFLATE_EVENT_FOR: Dict[Rung, Event] = {
+    Rung.MMAP_CLEAN: E.MMAP_DROP,
+    Rung.PARTIAL: E.PARTIAL_STOP,
+    Rung.HIBERNATED: E.SIGSTOP,
+    Rung.TERMINATED: E.EVICT,
+}
 
 
 class InvalidTransition(RuntimeError):

@@ -335,16 +335,22 @@ class ServingEngine:
         resps = [Response(r, state_before=inst.state.value) for r in reqs]
         t0 = time.monotonic()
 
-        # ---- state machine: the request trigger (②⑥⑦)
+        # ---- state machine: the request trigger (②⑥⑦ + ladder rungs)
         wake_stats = None
-        if inst.state in (S.HIBERNATE, S.WOKEN):
-            if inst.state == S.HIBERNATE:
-                # wake-storm guard: at most one batched inflate per cycle
+        if inst.state in (S.HIBERNATE, S.PARTIAL, S.WOKEN):
+            if inst.state in (S.HIBERNATE, S.PARTIAL):
+                # wake-storm guard: at most one batched inflate per cycle.
+                # A PARTIAL wake is rung-aware: the critical prefix is
+                # already resident, the cold tail restores behind us.
                 wake_stats = self.manager.ensure_awake(instance_id,
                                                        trigger="request")
             inst.sm.fire(Event.REQUEST)       # -> HIBERNATE_RUNNING
             finish_to = S.WOKEN
-        elif inst.state == S.WARM:
+        elif inst.state in (S.WARM, S.MMAP_CLEAN):
+            if inst.state == S.MMAP_CLEAN:
+                # re-map the shared base weights before compute touches them
+                wake_stats = self.manager.ensure_awake(instance_id,
+                                                       trigger="request")
             inst.sm.fire(Event.REQUEST)       # -> RUNNING
             finish_to = S.WARM
         else:

@@ -195,16 +195,24 @@ class PagedKVCache:
             self.pool.free(pages, self.instance_id)
         return n
 
+    def _export_page(self, s: KVSession, pid: int, pidx: int) -> np.ndarray:
+        """One page's swap-out copy.  The region beyond its written
+        tokens is allocator garbage; it is zeroed so identical-content
+        pages hash identically across sessions and tenants — this is
+        what lets KV pages dedup (and half-empty tail pages
+        constant-elide) in the content-addressed SwapStore."""
+        phys = self.pool._phys([pid])[0]
+        data = self.pool.data[phys].copy()
+        used = min(max(s.num_tokens - pidx * self.page_tokens, 0),
+                   self.page_tokens) * self.token_elems
+        data[used:] = 0
+        return data
+
     def export_items(self, working_set: frozenset
                      ) -> Tuple[List[Tuple[Tuple, np.ndarray]],
                                 List[Tuple[Tuple, np.ndarray]]]:
-        """Partition resident cache units into (reap, swap) item lists.
-
-        The region of a page beyond its written tokens is allocator
-        garbage; it is zeroed in the exported copy so identical-content
-        pages hash identically across sessions and tenants — this is what
-        lets KV pages dedup (and half-empty tail pages constant-elide) in
-        the content-addressed SwapStore."""
+        """Partition resident cache units into (reap, swap) item lists
+        (pages exported via :meth:`_export_page`'s zero-tail contract)."""
         reap, swap = [], []
         for sid, s in self.sessions.items():
             for layer in range(len(s.pages)):
@@ -212,17 +220,98 @@ class PagedKVCache:
                     if pid is None:
                         continue
                     key = ("kv", sid, layer, pidx)
-                    phys = self.pool._phys([pid])[0]
-                    data = self.pool.data[phys].copy()
-                    used = min(max(s.num_tokens - pidx * self.page_tokens, 0),
-                               self.page_tokens) * self.token_elems
-                    data[used:] = 0
+                    data = self._export_page(s, pid, pidx)
                     (reap if key in working_set else swap).append((key, data))
             for key, arr in s.host_units.items():
                 if arr is None:
                     continue
                 (reap if key in working_set else swap).append((key, arr))
         return reap, swap
+
+    def resident_keys(self) -> List[Tuple]:
+        """Every logical key currently backed by memory (pool pages with a
+        physical id + host units holding an array) — the partial-deflate
+        victim candidate set."""
+        keys: List[Tuple] = []
+        for sid, s in self.sessions.items():
+            for layer in range(len(s.pages)):
+                for pidx, pid in enumerate(s.pages[layer]):
+                    if pid is not None:
+                        keys.append(("kv", sid, layer, pidx))
+            keys += [k for k, a in s.host_units.items() if a is not None]
+        return keys
+
+    def key_nbytes(self, key: Tuple) -> int:
+        """Bytes one logical key pins in memory."""
+        if key[0] == "kv":
+            return self.pool.page_elems * np.dtype(self.pool.dtype).itemsize
+        s = self.sessions.get(key[1])
+        if s is None:
+            return 0
+        arr = s.host_units.get(key)
+        if arr is not None:
+            return arr.nbytes
+        shape = s.host_shapes.get(key)
+        return int(np.prod(shape)) * 4 if shape else 0
+
+    def export_keys(self, keys: Sequence[Tuple]
+                    ) -> List[Tuple[Tuple, np.ndarray]]:
+        """Materialize specific resident keys as (key, data) items via
+        :meth:`_export_page` (zero-tail dedup contract) — the
+        partial-deflate victim export."""
+        items: List[Tuple[Tuple, np.ndarray]] = []
+        for key in keys:
+            s = self.sessions.get(key[1])
+            if s is None:
+                continue
+            if key[0] == "kv":
+                _, sid, layer, pidx = key
+                if layer >= len(s.pages) or pidx >= len(s.pages[layer]):
+                    continue
+                pid = s.pages[layer][pidx]
+                if pid is None:
+                    continue
+                items.append((key, self._export_page(s, pid, pidx)))
+            elif key[0] == "kvh":
+                arr = s.host_units.get(key)
+                if arr is not None:
+                    items.append((key, arr))
+        return items
+
+    def nonresident_logical_keys(self) -> List[Tuple]:
+        """Inverse of :meth:`resident_keys`: logical keys whose backing
+        is swapped out (Not-Present page-table slots, host units holding
+        None) — what a rung-aware wake must consider restoring."""
+        keys: List[Tuple] = []
+        for sid, s in self.sessions.items():
+            for layer in range(len(s.pages)):
+                for pidx, pid in enumerate(s.pages[layer]):
+                    if pid is None:
+                        keys.append(("kv", sid, layer, pidx))
+            keys += [k for k, a in s.host_units.items() if a is None]
+        return keys
+
+    def drop_keys(self, keys: Sequence[Tuple]) -> int:
+        """Free the physical backing of specific keys (partial deflate's
+        madvise): pool pages return to the allocator, page-table slots go
+        Not-Present, host units drop their arrays.  Returns pages freed."""
+        n = 0
+        for key in keys:
+            s = self.sessions.get(key[1])
+            if s is None:
+                continue
+            if key[0] == "kv":
+                _, sid, layer, pidx = key
+                if layer >= len(s.pages) or pidx >= len(s.pages[layer]):
+                    continue
+                pid = s.pages[layer][pidx]
+                if pid is not None:
+                    self.pool.free([pid], self.instance_id)
+                    s.pages[layer][pidx] = None
+                    n += 1
+            elif key[0] == "kvh" and s.host_units.get(key) is not None:
+                s.host_units[key] = None
+        return n
 
     def drop_pages(self) -> int:
         """Deflation step 3 tail: free every physical page (madvise) but keep

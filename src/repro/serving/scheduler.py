@@ -84,9 +84,23 @@ class AsyncPlatform:
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self.log: List[tuple] = []
-        #: per-tenant arrival model: (last_arrival_ts, ewma_gap_s)
-        self.arrivals: Dict[str, tuple] = {}
+        # ONE arrival model for the whole node: the governor owns the
+        # per-tenant EWMA; anticipatory wakes and victim selection read
+        # the same prediction.  The platform policy's alpha applies only
+        # when the user did not configure the governor explicitly — an
+        # explicit GovernorConfig wins.
+        if engine.manager.cfg.governor_policy is None:
+            engine.manager.governor.cfg.ewma_alpha = policy.ewma_alpha
+        # every eviction (keep-alive OR governor TERMINATED) must drop
+        # this platform's per-tenant queue entry and serve lock
+        engine.manager.on_evict = self._forget_tenant
         self.rejected = 0
+
+    @property
+    def arrivals(self) -> Dict[str, tuple]:
+        """Per-tenant arrival model (last_arrival_ts, ewma_gap_s) —
+        owned by the manager's MemoryGovernor."""
+        return self.engine.manager.governor.arrivals
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> "AsyncPlatform":
@@ -171,12 +185,7 @@ class AsyncPlatform:
         self.engine.drop_instance_lock(iid)
 
     def _note_arrival(self, iid: str, now: float) -> None:
-        last, gap = self.arrivals.get(iid, (None, None))
-        if last is not None:
-            a = self.policy.ewma_alpha
-            gap = (now - last) if gap is None else \
-                a * (now - last) + (1 - a) * gap
-        self.arrivals[iid] = (now, gap)
+        self.engine.manager.governor.observe_arrival(iid, now)
 
     # ------------------------------------------------------------- serving
     def _claim(self):
@@ -239,31 +248,38 @@ class AsyncPlatform:
         now = now if now is not None else time.monotonic()
         mgr = self.engine.manager
         acted = []
+        # every rung above HIBERNATE ages out: a tenant the governor
+        # parked at MMAP_CLEAN/PARTIAL during a transient breach must not
+        # pin its resident prefix forever once pressure clears
+        idle_states = (S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL)
         for iid, inst in list(mgr.instances.items()):
             idle = now - inst.last_used
-            if inst.state not in (S.WARM, S.WOKEN) or \
+            if inst.state not in idle_states or \
                     idle <= self.policy.keep_warm_s:
                 continue
             lock = self.engine.instance_lock(iid)
             if not lock.acquire(blocking=False):
                 continue                       # in-flight request: not idle
             try:
-                if inst.state not in (S.WARM, S.WOKEN):
+                if inst.state not in idle_states:
                     continue
                 if self.policy.deflate_instead_of_evict:
                     mgr.deflate(iid)
                     self.log.append((now, "deflate", iid))
                 else:
-                    mgr.evict(iid)
+                    mgr.evict(iid)         # on_evict hook forgets the tenant
                     self.log.append((now, "evict", iid))
-                    self._forget_tenant(iid)
                 acted.append(iid)
             finally:
                 lock.release()
-        if self.policy.memory_target_bytes is not None:
+        # memory pressure: the governor walks victims down the deflation
+        # ladder (cost/benefit, proportional reclaim).  The platform-level
+        # target (if set) overrides the manager's configured node budget.
+        if self.policy.memory_target_bytes is not None or \
+                mgr.cfg.memory_budget_bytes is not None:
             acted += mgr.handle_memory_pressure(
                 self.policy.memory_target_bytes,
-                try_lock=self.engine.instance_lock)
+                try_lock=self.engine.instance_lock, now=now)
         # ⑤ anticipatory SIGCONT: wake tenants whose EWMA inter-arrival
         # model predicts a request within the margin.  These run the SAME
         # streamed wake pipeline as request-driven wakes, at low priority
@@ -271,7 +287,7 @@ class AsyncPlatform:
         # landing mid-stream is absorbed by demand-pulling its chunks
         if self.policy.anticipate_margin_s is not None:
             for iid, inst in list(mgr.instances.items()):
-                if inst.state != S.HIBERNATE:
+                if inst.state not in (S.HIBERNATE, S.PARTIAL, S.MMAP_CLEAN):
                     continue
                 last, gap = self.arrivals.get(iid, (None, None))
                 if last is None or gap is None:
