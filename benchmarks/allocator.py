@@ -38,7 +38,7 @@ class FreeListAllocator:
 def bench(alloc_fn, free_fn, rng) -> float:
     live = []
     t0 = time.monotonic()
-    for i in range(N_OPS):
+    for _ in range(N_OPS):
         if not live or rng.random() < 0.55:
             live.append(alloc_fn())
         else:

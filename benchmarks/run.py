@@ -14,6 +14,8 @@
   allocator        — §3.3 bitmap allocator vs free-list baseline
   concurrency      — AsyncPlatform: tenants x workers, wake storms,
                      vectored fault IO
+  cluster_density  — cluster fabric: 4 nodes, skewed tenant pile,
+                     migration-on vs migration-off tenants-per-GB
   roofline         — brief: per-(arch x shape x mesh) roofline table
 
 `python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`
@@ -37,10 +39,11 @@ def main(argv=None):
     ap.add_argument("--out", default="bench_out.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import (allocator, concurrency, dedup_store, density,
-                            governor_density, latency_states, memory_states,
-                            reap_ablation, roofline, sharing,
-                            swap_throughput, wake_latency)
+    from benchmarks import (allocator, cluster_density, concurrency,
+                            dedup_store, density, governor_density,
+                            latency_states, memory_states, reap_ablation,
+                            roofline, sharing, swap_throughput,
+                            wake_latency)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
@@ -49,6 +52,7 @@ def main(argv=None):
         ("memory_states", memory_states),
         ("density", density),
         ("governor_density", governor_density),
+        ("cluster_density", cluster_density),
         ("dedup_store", dedup_store),
         ("sharing", sharing),
         ("reap_ablation", reap_ablation),

@@ -1,0 +1,27 @@
+"""Cluster fabric: multi-node placement and snapshot migration.
+
+A hibernated tenant is a portable artifact — REAP metadata plus
+content-addressed digests in the dedup store — so moving it between
+nodes is a digest-transfer problem, not a memory-copy problem.  This
+package adds the cluster tier over the single-node stack:
+
+  * :class:`~repro.cluster.node.Node` — one simulated node: an
+    ``InstanceManager`` (+ ``MemoryGovernor`` + ``SwapStore``), a
+    ``ServingEngine``, and optionally an ``AsyncPlatform``;
+  * :class:`~repro.cluster.migrate.StorePeer` /
+    :func:`~repro.cluster.migrate.migrate_instance` — the dedup-aware
+    transfer channel and the MIGRATING-state protocol;
+  * :class:`~repro.cluster.router.ClusterRouter` — hibernate-aware
+    placement and the cluster-escalated governor (migrate before
+    TERMINATED).
+"""
+from repro.cluster.migrate import (MigrationError, MigrationHandle,
+                                   StorePeer, TransferStats,
+                                   migrate_instance)
+from repro.cluster.node import Node
+from repro.cluster.router import ClusterPolicy, ClusterRouter
+
+__all__ = [
+    "ClusterPolicy", "ClusterRouter", "MigrationError", "MigrationHandle",
+    "Node", "StorePeer", "TransferStats", "migrate_instance",
+]

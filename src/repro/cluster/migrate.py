@@ -1,0 +1,398 @@
+"""Snapshot migration over the content-addressed store.
+
+A migratable tenant (MMAP_CLEAN / PARTIAL / HIBERNATED) is, or can
+cheaply become, a pile of disk state: a private REAP file holding the
+working set in first-touch order, plus per-unit digests into the
+deployment's refcounted CAS segment file.  Migration therefore ships
+*metadata plus missing digests*, never a full snapshot:
+
+  1. **Fence** — under the source engine's serve lock the instance fires
+     ``MIGRATE`` and lands in the MIGRATING state: the governor can no
+     longer deflate or TERMINATE it (the transitions are illegal), and
+     requests/wakes block on the :class:`MigrationHandle` exactly like
+     late arrivals block on a shared wake pipeline.
+  2. **Flush** — a not-yet-hibernated source runs the normal full-deflate
+     body (same code path, different state-machine event), then the REAP
+     file's units are hashed into the source store so *everything* the
+     tenant owns is content-addressed.  The REAP file itself is not
+     shipped — only its key order is, so the target can rebuild it with
+     identical streaming layout.
+  3. **Ship** — the :class:`StorePeer` asks the target store which
+     digests it lacks and transfers only those, at their stored
+     compression level.  Base weights a same-deployment tenant already
+     parked on the target cost zero bytes; per-session KV deltas are the
+     usual payload.
+  4. **Rebuild** — the target constructs a hibernated husk: factory
+     shapes, adopted extent table (refcounts taken), REAP file rewritten
+     from the local store in first-touch order, recorder + arrival-EWMA
+     state installed, KV session page tables recreated Not-Present.
+     The first wake on the target is byte-identical to an in-place wake.
+  5. **Commit** — the source fires ``MIGRATE_DONE``, releases its store
+     refs (segment GC: bytes another local tenant still references
+     survive), deletes its REAP file, and records the forwarding address
+     so stragglers raise ``TenantMigrated`` and get rerouted.
+
+On any transfer/rebuild error the source fires ``MIGRATE_ABORT`` back to
+HIBERNATE — its disk state was never touched, so it keeps serving
+locally.  The channel is in-process (two stores on one host); a real
+network transport behind the same ``StorePeer`` interface is an open
+item (see ROADMAP).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.governor import MIGRATABLE_STATES
+from repro.core.instance import ModelInstance
+from repro.core.state import ContainerState, Event
+from repro.serving.paged_kv import KVSession, PagedKVCache
+
+S = ContainerState
+
+#: rough per-key wire cost of the metadata half of a migration (extent
+#: records, recorder entries, KV page-table slots) — accounting only
+_META_BYTES_PER_KEY = 64
+
+
+class MigrationError(RuntimeError):
+    pass
+
+
+@dataclass
+class TransferStats:
+    """What one migration actually moved."""
+    digests_total: int = 0
+    digests_shipped: int = 0          # absent on the target: crossed the link
+    bytes_shipped: int = 0            # stored (compressed) payload bytes sent
+    bytes_dedup: int = 0              # stored bytes the target already held
+    meta_bytes: int = 0               # extent/recorder/page-table metadata
+    full_snapshot_bytes: int = 0      # naive verbatim snapshot (raw units)
+    link_seconds: float = 0.0         # bytes over the modelled link bw
+    seconds: float = 0.0              # wall time of the whole migration
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.bytes_shipped + self.meta_bytes
+
+
+class StorePeer:
+    """Transfer channel between two nodes' CAS stores.
+
+    Both stores must share the deployment salt — the digest *is* the
+    cluster-wide content address, so an unsalted-compatible peer would be
+    a different deployment and shipping to it is refused."""
+
+    def __init__(self, src_store, dst_store,
+                 link_bw_bytes_s: float = 4 << 30):
+        if src_store is None or dst_store is None:
+            raise MigrationError("migration requires the dedup store on "
+                                 "both nodes (ManagerConfig.dedup_store)")
+        if src_store.salt != dst_store.salt:
+            raise MigrationError("peer stores use different deployment "
+                                 "salts: digests are not comparable")
+        self.src = src_store
+        self.dst = dst_store
+        self.link_bw_bytes_s = link_bw_bytes_s
+
+    def missing(self, digests) -> List[bytes]:
+        return self.dst.missing_digests(digests)
+
+    def ship(self, digests, stats: TransferStats) -> None:
+        """Move the given digests' segments src -> dst, dedup-aware:
+        only segments absent on the target cross the link."""
+        digests = list(digests)
+        stats.digests_total += len(digests)
+        missing = self.missing(digests)
+        stats.digests_shipped += len(missing)
+        stats.bytes_dedup += self.src.stored_bytes_of(
+            [d for d in digests if d not in set(missing)])
+        if missing:
+            wire = self.src.export_segments(missing)
+            stats.bytes_shipped += sum(len(p) for _, _, _, p in wire)
+            self.dst.import_segments(wire)
+        stats.link_seconds += (stats.bytes_shipped
+                               / max(self.link_bw_bytes_s, 1.0))
+
+
+class MigrationHandle:
+    """Shared handle for one in-flight migration — ``inst.migration``.
+
+    Requests and wakes landing on the MIGRATING tenant :meth:`wait` on
+    it (the in-flight-request handoff), mirroring how late wake arrivals
+    share the wake pipeline handle."""
+
+    def __init__(self, instance_id: str, source: str, target: str):
+        self.instance_id = instance_id
+        self.source_node_id = source
+        self.target_node_id = target
+        self.stats = TransferStats()
+        self.error: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def ok(self) -> bool:
+        return self._done.is_set() and self.error is None
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def _finish(self, error: Optional[BaseException] = None) -> None:
+        self.error = error
+        self._done.set()
+
+
+@dataclass
+class _Bundle:
+    """The metadata half of a migration (in-process wire format)."""
+    instance_id: str
+    arch_key: str
+    base_id: Optional[str]
+    shared_paths: frozenset
+    extents: Dict                      # key -> UnitMeta (digests)
+    reap_order: List                   # REAP file keys, first-touch order
+    stable: List                       # recorder stable set, ordered
+    misses: Dict                       # recorder coldness counters (pruned)
+    kv_sessions: List[Dict]
+    last_used: float
+    created_at: float
+    #: the kept-alive compiled executables ride along — in this
+    #: in-process simulation they transfer by reference, standing in for
+    #: a node-shared persistent compilation cache; without them the
+    #: migrant's first request would pay a cold-start-sized re-JIT,
+    #: which is exactly the cost hibernation exists to avoid
+    compiled: Dict = field(default_factory=dict)
+    arrival: Optional[Tuple] = None    # governor EWMA (last_ts, gap)
+    wire_keys: int = 0
+
+    def meta_bytes(self) -> int:
+        return self.wire_keys * _META_BYTES_PER_KEY
+
+
+def _export_bundle(src_node, inst: ModelInstance,
+                   arch_key: str) -> _Bundle:
+    """Steps 1½–2: flush the REAP file into the CAS store and snapshot
+    every piece of metadata the target needs.  Runs with the instance
+    fenced in MIGRATING."""
+    # the coldness counters ship with the tenant; prune dead keys (closed
+    # sessions' KV pages) FIRST or they would leak onto the target forever
+    live = set(inst.units) | set(inst.reap_file.extents) \
+        | set(inst.swap_file.extents)
+    inst.recorder.prune_misses(live)
+
+    reap_order = list(inst.reap_file.extents)
+    # the full-deflate body already content-addressed the working set
+    # (write-through); this is only the safety net for keys that missed
+    # it, so an already-inventoried tenant pays zero re-hashing here
+    missing_ws = [k for k in reap_order if k not in inst.swap_file]
+    if missing_ws:
+        data = inst.reap_file.read_batch()
+        inst.swap_file.write_units([(k, data[k]) for k in missing_ws])
+
+    kv_sessions: List[Dict] = []
+    if inst.kv is not None:
+        for sid, s in inst.kv.sessions.items():
+            kv_sessions.append({
+                "session_id": sid,
+                "num_tokens": s.num_tokens,
+                "token_ids": list(s.token_ids),
+                "closed": s.closed,
+                "last_page_fill": s.last_page_fill,
+                "page_counts": [len(layer) for layer in s.pages],
+                "host_shapes": dict(s.host_shapes),
+                "host_keys": list(s.host_units),
+            })
+
+    store = src_node.manager.store
+    extents = store.export_meta(inst.swap_file)
+    gov = src_node.manager.governor
+    bundle = _Bundle(
+        instance_id=inst.instance_id,
+        arch_key=arch_key,
+        base_id=inst.base_id,
+        shared_paths=frozenset(inst.shared_paths),
+        extents=extents,
+        reap_order=reap_order,
+        stable=list(inst.recorder.stable),
+        misses=dict(inst.recorder.misses),
+        kv_sessions=kv_sessions,
+        last_used=inst.last_used,
+        created_at=inst.created_at,
+        compiled=dict(inst.compiled),
+        arrival=gov.arrivals.get(inst.instance_id),
+    )
+    bundle.wire_keys = (len(extents) + len(bundle.stable)
+                        + len(bundle.misses)
+                        + sum(sum(sd["page_counts"]) + len(sd["host_keys"])
+                              for sd in kv_sessions))
+    return bundle
+
+
+def _rebuild_on_target(dst_node, bundle: _Bundle) -> ModelInstance:
+    """Step 4: construct the hibernated husk on the target node."""
+    mgr = dst_node.manager
+    model_cfg, params = dst_node.factory(bundle.arch_key)
+    shared_on = mgr.shared is not None and bundle.base_id is not None
+    inst = ModelInstance(
+        bundle.instance_id, model_cfg, params, pool=mgr.pool,
+        spool_dir=mgr.cfg.spool_dir,
+        shared_paths=bundle.shared_paths if shared_on else None,
+        base_id=bundle.base_id if shared_on else None,
+        store=mgr.store,
+        metadata_bytes=mgr.cfg.husk_metadata_bytes)
+    try:
+        return _populate_target(mgr, inst, bundle)
+    except BaseException:
+        # abort mid-rebuild (store read error, disk full): the adopted
+        # segment refs and half-built spool files must not leak on the
+        # target — terminate releases the client (refcount GC) and
+        # deletes the files
+        inst.terminate()
+        raise
+
+
+def _populate_target(mgr, inst: ModelInstance,
+                     bundle: _Bundle) -> ModelInstance:
+    # adopt the shipped extent table (takes segment refs) BEFORE touching
+    # the instance's own client — ModelInstance.__init__ created it empty
+    mgr.store.adopt_extents(bundle.instance_id, bundle.extents)
+
+    # the factory params are placeholder shapes: drop them so every unit
+    # is Not-Present and the first wake restores the *migrated* bytes
+    inst.sm.fire(Event.COLD_START)
+    inst.sm.fire(Event.SIGSTOP)
+    inst.drop_weights()
+    inst.inflated = False
+    inst.mmap_dropped = True          # wake re-maps via the registry
+
+    inst.recorder.stable = {k: None for k in bundle.stable}
+    inst.recorder.misses = dict(bundle.misses)
+    inst.compiled.update(bundle.compiled)
+    inst.last_used = bundle.last_used
+    inst.created_at = bundle.created_at
+
+    # rebuild the private REAP file from the local store, preserving the
+    # first-touch order — the streamed wake pipeline depends on it
+    if bundle.reap_order:
+        data = inst.swap_file.read_units(bundle.reap_order)
+        inst.reap_file.write_batch([(k, data[k]) for k in bundle.reap_order])
+
+    inst.kv = PagedKVCache(bundle.instance_id, inst.cfg, mgr.pool)
+    for sd in bundle.kv_sessions:
+        s = KVSession(
+            sd["session_id"],
+            num_tokens=sd["num_tokens"],
+            token_ids=list(sd["token_ids"]),
+            pages=[[None] * c for c in sd["page_counts"]],
+            host_units={k: None for k in sd["host_keys"]},
+            host_shapes=dict(sd["host_shapes"]),
+            closed=sd["closed"],
+            last_page_fill=sd["last_page_fill"])
+        inst.kv.sessions[sd["session_id"]] = s
+    if bundle.kv_sessions:
+        inst.kv.dropped = True
+
+    if bundle.arrival is not None:
+        mgr.governor.arrivals[bundle.instance_id] = bundle.arrival
+    return inst
+
+
+def migrate_instance(src_node, dst_node, instance_id: str, arch_key: str,
+                     *, link_bw_bytes_s: float = 4 << 30,
+                     on_commit: Optional[Callable[[], None]] = None,
+                     block: bool = True,
+                     threaded: bool = True) -> MigrationHandle:
+    """Migrate one idle tenant ``src_node -> dst_node``.
+
+    The fence (state flip to MIGRATING) happens synchronously under the
+    source serve lock — after this function returns the tenant is either
+    MIGRATING (handle in flight) or the call raised.  The transfer runs
+    on a thread (``threaded=False`` inlines it; ``block`` waits either
+    way).  Raises :class:`MigrationError` if the tenant is busy serving
+    or not on a migratable rung.
+    """
+    mgr = src_node.manager
+    handle = MigrationHandle(instance_id, src_node.node_id,
+                             dst_node.node_id)
+    peer = StorePeer(mgr.store, dst_node.manager.store,
+                     link_bw_bytes_s=link_bw_bytes_s)
+
+    lock = src_node.engine.instance_lock(instance_id)
+    if not lock.acquire(blocking=False):
+        raise MigrationError(f"{instance_id}: busy serving")
+    try:
+        inst = mgr.instances.get(instance_id)
+        if inst is None:
+            raise MigrationError(f"{instance_id}: not on node "
+                                 f"{src_node.node_id}")
+        if inst.state not in MIGRATABLE_STATES:
+            raise MigrationError(
+                f"{instance_id}: state {inst.state.value} not migratable")
+        mgr.hib.quiesce(inst)
+        try:
+            if inst.state == S.HIBERNATE:
+                inst.sm.fire(Event.MIGRATE)   # disk state already complete
+            else:
+                # MMAP_CLEAN / PARTIAL: run the full-deflate body, landing
+                # on MIGRATING instead of HIBERNATE — same flush, fenced
+                mgr.hib.deflate(inst, event=Event.MIGRATE)
+        except BaseException:
+            # a MIGRATING tenant with no handle would block forever:
+            # fall back to HIBERNATE before letting the error out
+            if inst.state == S.MIGRATING:
+                inst.sm.fire(Event.MIGRATE_ABORT)
+            raise
+        inst.migration = handle
+    finally:
+        lock.release()
+
+    def _transfer() -> None:
+        t0 = time.monotonic()
+        st = handle.stats
+        try:
+            bundle = _export_bundle(src_node, inst, arch_key)
+            st.meta_bytes = bundle.meta_bytes()
+            st.full_snapshot_bytes = sum(
+                m.nbytes for m in bundle.extents.values())
+            digests = {m.digest for m in bundle.extents.values()
+                       if m.digest is not None}
+            peer.ship(digests, st)
+            rebuilt = _rebuild_on_target(dst_node, bundle)
+            # commit: target first (the tenant must exist somewhere at
+            # every instant), then the source forgets + GCs
+            dst_node.manager.admit(rebuilt)
+            inst.sm.fire(Event.MIGRATE_DONE)
+            mgr.detach(instance_id, target=dst_node.node_id)
+            if on_commit is not None:
+                on_commit()
+            inst.terminate()       # store refs released (GC), REAP gone
+            st.seconds = time.monotonic() - t0
+            handle._finish()
+        except BaseException as e:
+            # abort: the source's disk state was never mutated
+            # destructively — fall back to a plain hibernated tenant
+            try:
+                if inst.state == S.MIGRATING:
+                    inst.sm.fire(Event.MIGRATE_ABORT)
+            finally:
+                inst.migration = None
+                st.seconds = time.monotonic() - t0
+                handle._finish(error=e)
+
+    if threaded:
+        t = threading.Thread(target=_transfer, daemon=True,
+                             name=f"migrate-{instance_id}")
+        t.start()
+        if block:
+            handle.wait()
+    else:
+        _transfer()
+    if block and handle.error is not None:
+        raise MigrationError(str(handle.error)) from handle.error
+    return handle

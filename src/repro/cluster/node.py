@@ -1,0 +1,127 @@
+"""One simulated cluster node: manager + governor + store + engine.
+
+A :class:`Node` is the single-node stack the rest of the repo built —
+``InstanceManager`` (with its ``MemoryGovernor`` and ``SwapStore``),
+``ServingEngine``, optionally an ``AsyncPlatform`` — plus the cluster-
+facing surface the router scores placement and migration against:
+governed-bytes headroom, digest inventory, and imminent-wake burden.
+
+Every node of one cluster shares the deployment's store salt (the
+router seeds it), so content digests are comparable across nodes and a
+``StorePeer`` transfer can dedup against whatever the target already
+holds.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional
+
+from repro.core.governor import GovernorConfig
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.core.state import RUNG_OF
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import AsyncPlatform, PlatformPolicy
+
+
+class Node:
+    def __init__(self, node_id: str, factory: Callable, *,
+                 spool_dir: str,
+                 shared_loader: Optional[Callable] = None,
+                 budget_bytes: Optional[int] = None,
+                 salt: Optional[bytes] = None,
+                 governor_cfg: Optional[GovernorConfig] = None,
+                 manager_cfg: Optional[ManagerConfig] = None,
+                 link_bw_bytes_s: float = 4 << 30):
+        self.node_id = node_id
+        self.factory = factory
+        #: modelled node-to-node link bandwidth (transfer accounting)
+        self.link_bw_bytes_s = link_bw_bytes_s
+        if manager_cfg is None:
+            manager_cfg = ManagerConfig(
+                spool_dir=os.path.join(spool_dir, node_id),
+                memory_budget_bytes=budget_bytes,
+                store_salt=salt,
+                governor_policy=governor_cfg)
+        self.cfg = manager_cfg
+        self.manager = InstanceManager(manager_cfg, factory,
+                                       shared_loader=shared_loader)
+        self.engine = ServingEngine(self.manager)
+        self.platform: Optional[AsyncPlatform] = None
+
+    # ------------------------------------------------------------- surface
+    @property
+    def governor(self):
+        return self.manager.governor
+
+    @property
+    def store(self):
+        return self.manager.store
+
+    def governed_bytes(self) -> int:
+        return self.governor.governed_bytes()
+
+    def pressure_bytes(self) -> int:
+        return self.governor.pressure_bytes()
+
+    def headroom_bytes(self) -> int:
+        """Budget minus governed bytes (can be negative under breach);
+        an unbudgeted node reports unbounded headroom."""
+        budget = self.governor.budget_bytes
+        if budget is None:
+            return 1 << 62
+        return budget - self.governed_bytes()
+
+    def digest_overlap_bytes(self, digests) -> int:
+        """On-disk bytes of ``digests`` this node's store already holds —
+        the affinity term of placement/migration scoring: a tenant whose
+        base weights are parked here wakes from local disk."""
+        if self.store is None or not digests:
+            return 0
+        return self.store.stored_bytes_of(digests)
+
+    def imminent_wake_burden_s(self, now: float,
+                               horizon_s: float = 5.0) -> float:
+        """Summed predicted wake cost (seconds) of this node's deflated
+        tenants whose next request is expected within ``horizon_s`` —
+        placement steers new tenants away from nodes about to pay wakes."""
+        gov = self.governor
+        burden = 0.0
+        with self.manager._lock:
+            insts = list(self.manager.instances.values())
+        for inst in insts:
+            rung = RUNG_OF[inst.state]
+            cost = gov.wake_cost(rung)
+            if cost <= 0:
+                continue
+            gap = gov.predicted_gap(inst.instance_id, now,
+                                    last_used=inst.last_used)
+            if gap <= horizon_s:
+                burden += cost
+        return burden
+
+    def states(self) -> Dict[str, str]:
+        return self.manager.states()
+
+    # ------------------------------------------------------------- platform
+    def start_platform(self, policy: PlatformPolicy,
+                       arch_of: Dict[str, str],
+                       workers: int = 2) -> AsyncPlatform:
+        """Run this node event-driven: per-tenant queues, worker pool,
+        policy daemon — the router installs its reroute hook on it."""
+        self.platform = AsyncPlatform(self.engine, policy, arch_of,
+                                      workers=workers).start()
+        return self.platform
+
+    def stop(self) -> None:
+        if self.platform is not None:
+            self.platform.stop()
+            self.platform = None
+
+    def close(self) -> None:
+        self.stop()
+        if self.store is not None:
+            self.store.close()
+
+    def __repr__(self) -> str:            # pragma: no cover - debug aid
+        return (f"Node({self.node_id}, tenants={len(self.manager.instances)}, "
+                f"governed={self.governed_bytes()})")

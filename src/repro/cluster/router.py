@@ -1,0 +1,379 @@
+"""Hibernate-aware cluster routing: placement, rebalancing, handoff.
+
+The single-node governor can only deflate tenants, never move them — one
+hot node evicts to TERMINATED while a neighbour idles.  The router adds
+the missing degrees of freedom:
+
+  * **Placement** — a new tenant lands on the node scoring best on
+    ``(headroom + affinity) / (1 + imminent wake burden)``: budget
+    headroom keeps hot nodes from collecting more tenants, digest-overlap
+    affinity prefers nodes whose CAS store already holds the
+    deployment's base-weight segments (wakes read local disk, and a
+    later migration of this tenant ships ~zero bytes), and the
+    imminent-wake burden (per-rung wake-cost EWMA x predicted-idle EWMA,
+    both from the node governors) steers away from nodes about to pay
+    wake storms.
+  * **Cluster-escalated governor** — each rebalance round runs every
+    node's own ladder first; a node still breaching its budget for
+    ``sustained_breach_rounds`` consecutive rounds escalates: its most
+    idle migratable tenants are shipped to the peer maximising
+
+        bytes_freed * predicted_idle
+        / (transfer_bytes_missing / link_bw + wake_cost)
+
+    and only if no peer can take them does the router fall back to
+    TERMINATED eviction (the old single-node behaviour, kept as the
+    ``migration=False`` baseline).
+  * **Handoff** — requests racing a migration block on the transfer
+    handle (``ensure_awake`` on a MIGRATING tenant), then reroute to the
+    tenant's new node; the async platforms get a ``reroute`` hook so
+    queued work follows the tenant too.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.migrate import (MigrationError, MigrationHandle,
+                                   migrate_instance)
+from repro.cluster.node import Node
+from repro.core.state import ContainerState
+from repro.serving.engine import Request, Response, TenantMigrated
+from repro.serving.scheduler import PlatformPolicy
+
+S = ContainerState
+
+
+@dataclass
+class ClusterPolicy:
+    #: consecutive rebalance rounds a node must breach before escalation
+    sustained_breach_rounds: int = 2
+    #: master switch: False reproduces the single-node evict-only world
+    #: (the benchmark's no-migration baseline)
+    migration: bool = True
+    #: cap per (node, round) — a rebalance must not stampede the link
+    max_migrations_per_round: int = 2
+    #: weight of digest-overlap affinity in placement scoring
+    affinity_weight: float = 1.0
+    #: placement looks this far ahead for imminent wakes (seconds)
+    imminent_horizon_s: float = 5.0
+    #: after migration fails to clear a sustained breach, TERMINATED
+    #: eviction of idle hibernated tenants remains the last resort
+    terminate_last_resort: bool = True
+
+
+class ClusterRouter:
+    """Places tenant requests across N :class:`Node`\\ s and owns the
+    cluster tier of the deflation ladder (MIGRATING)."""
+
+    def __init__(self, nodes: Sequence[Node],
+                 arch_of: Optional[Dict[str, str]] = None,
+                 policy: Optional[ClusterPolicy] = None):
+        if not nodes:
+            raise ValueError("a cluster needs at least one node")
+        self.nodes: Dict[str, Node] = {n.node_id: n for n in nodes}
+        self.arch_of: Dict[str, str] = dict(arch_of or {})
+        self.policy = policy or ClusterPolicy()
+        #: tenant -> node_id (updated at placement and migration commit)
+        self.placement: Dict[str, str] = {}
+        self.handles: List[MigrationHandle] = []
+        self.log: List[tuple] = []
+        #: TERMINATED evictions the cluster tier had to fall back to —
+        #: each one is a tenant destroyed (its next request is a cold
+        #: start); the migration tier exists to keep this at zero
+        self.evictions = 0
+        self._breach: Dict[str, int] = {nid: 0 for nid in self.nodes}
+        self._lock = threading.RLock()
+        for n in nodes:
+            if n.platform is not None:
+                n.platform.reroute = self._reroute
+
+    # ------------------------------------------------------------ placement
+    def deployment_digests(self, arch_key: str) -> frozenset:
+        """Union of CAS digests referenced by every tenant of this
+        deployment cluster-wide — the content a new/migrated tenant of
+        the same arch will eventually need on its node's disk."""
+        out = set()
+        for node in self.nodes.values():
+            store = node.store
+            if store is None:
+                continue
+            with node.manager._lock:
+                iids = list(node.manager.instances)
+            for iid in iids:
+                if self.arch_of.get(iid) != arch_key:
+                    continue
+                inst = node.manager.instances.get(iid)
+                if inst is None or not hasattr(inst.swap_file, "extents"):
+                    continue
+                out.update(m.digest
+                           for m in store.export_meta(inst.swap_file).values()
+                           if getattr(m, "digest", None) is not None)
+        return frozenset(out)
+
+    def placement_score(self, node: Node, arch_key: str, now: float,
+                        digests: Optional[frozenset] = None) -> float:
+        """Higher is better: budget headroom plus digest-overlap
+        affinity, discounted by the node's imminent wake burden.
+        ``digests`` lets callers scoring many nodes compute the
+        cluster-wide deployment inventory once."""
+        if digests is None:
+            digests = self.deployment_digests(arch_key)
+        affinity = node.digest_overlap_bytes(digests)
+        headroom = max(node.headroom_bytes(), 0)
+        burden = node.imminent_wake_burden_s(
+            now, self.policy.imminent_horizon_s)
+        return (headroom + self.policy.affinity_weight * affinity) \
+            / (1.0 + burden)
+
+    def place(self, instance_id: str, arch_key: str, *,
+              shared_paths=None, now: Optional[float] = None) -> Node:
+        """Pick a node for a new tenant and cold-start it there."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            if instance_id in self.placement:
+                return self.nodes[self.placement[instance_id]]
+            self.arch_of.setdefault(instance_id, arch_key)
+            digests = self.deployment_digests(arch_key)
+            best = max(self.nodes.values(),
+                       key=lambda n: self.placement_score(
+                           n, arch_key, now, digests=digests))
+            self.placement[instance_id] = best.node_id
+        best.engine.start_instance(instance_id, arch_key,
+                                   shared_paths=shared_paths)
+        self.log.append((now, "place", instance_id, best.node_id))
+        return best
+
+    def node_of(self, instance_id: str) -> Optional[Node]:
+        nid = self.placement.get(instance_id)
+        return self.nodes.get(nid) if nid is not None else None
+
+    # ------------------------------------------------------------ serving
+    def handle(self, req: Request, now: Optional[float] = None) -> Response:
+        """Synchronous serve path (virtual-time benchmarks): route to the
+        tenant's node; a request racing a migration blocks on the
+        transfer inside the engine, raises :class:`TenantMigrated`, and
+        is re-dispatched to the tenant's new node."""
+        now = time.monotonic() if now is None else now
+        iid = req.instance_id
+        observed = False
+        for _ in range(len(self.nodes) + 2):
+            node = self.node_of(iid)
+            if node is None:
+                node = self.place(iid, self.arch_of[iid], now=now)
+            if not observed:
+                # exactly once per request: a handoff retry must not
+                # re-feed the same arrival (a zero gap would collapse
+                # the tenant's inter-arrival EWMA toward "imminent")
+                node.manager.governor.observe_arrival(iid, now=now)
+                observed = True
+            try:
+                return node.engine.handle(req)
+            except TenantMigrated as e:
+                with self._lock:
+                    if e.target is not None:
+                        self.placement[iid] = e.target
+                self.log.append((now, "handoff", iid, e.target))
+                continue
+        raise RuntimeError(f"request for {iid} chased migrations too long")
+
+    def submit(self, req: Request):
+        """Async serve path: enqueue on the tenant's node's platform."""
+        node = self.node_of(req.instance_id)
+        if node is None:
+            node = self.place(req.instance_id,
+                              self.arch_of[req.instance_id])
+        if node.platform is None:
+            raise RuntimeError(f"node {node.node_id} has no platform "
+                               "(call Node.start_platform)")
+        return node.platform.submit(req)
+
+    def _reroute(self, iid: str, reqs, futs) -> bool:
+        """AsyncPlatform hook: a worker hit ``TenantMigrated`` — chase
+        the tenant to its new node and chain the original futures."""
+        node = self.node_of(iid)
+        if node is None or node.platform is None:
+            return False
+        for req, fut in zip(reqs, futs):
+            tgt = node.platform.submit(req)
+
+            def _chain(done, fut=fut):
+                if fut.done():
+                    return
+                err = done.exception()
+                if err is not None:
+                    fut.set_exception(err)
+                else:
+                    fut.set_result(done.result())
+            tgt.add_done_callback(_chain)
+        return True
+
+    def start_platforms(self, policy: PlatformPolicy,
+                        workers: int = 2) -> None:
+        """Run every node event-driven and wire the reroute hooks."""
+        for node in self.nodes.values():
+            node.start_platform(policy, self.arch_of, workers=workers)
+            node.platform.reroute = self._reroute
+
+    # ------------------------------------------------------------ migration
+    def migrate(self, instance_id: str, target_node_id: str, *,
+                block: bool = True) -> MigrationHandle:
+        src = self.node_of(instance_id)
+        if src is None:
+            raise MigrationError(f"{instance_id}: unknown tenant")
+        dst = self.nodes[target_node_id]
+        if dst is src:
+            raise MigrationError(f"{instance_id}: already on "
+                                 f"{target_node_id}")
+
+        def commit():
+            with self._lock:
+                self.placement[instance_id] = target_node_id
+
+        h = migrate_instance(
+            src, dst, instance_id, self.arch_of[instance_id],
+            link_bw_bytes_s=min(src.link_bw_bytes_s, dst.link_bw_bytes_s),
+            on_commit=commit, block=block)
+        self.handles.append(h)
+        self.log.append((time.monotonic(), "migrate", instance_id,
+                         src.node_id, target_node_id))
+        return h
+
+    def _tenant_digests(self, node: Node, inst) -> frozenset:
+        if node.store is None or not hasattr(inst.swap_file, "extents"):
+            return frozenset()
+        return frozenset(
+            m.digest for m in node.store.export_meta(inst.swap_file).values()
+            if m.digest is not None)
+
+    def _best_target(self, src: Node, inst, freed: int, idle: float,
+                     now: float) -> Optional[Tuple[Node, float]]:
+        """Highest migration score among peers with room for the husk."""
+        gov = src.governor
+        digests = self._tenant_digests(src, inst)
+        stored = src.store.stored_bytes_of(digests) if src.store else 0
+        # anon bytes still resident (MMAP_CLEAN/PARTIAL sources) are not
+        # content-addressed yet: assume they ship (conservative) — for
+        # the typical HIBERNATED victim this term is zero
+        unstored = gov._anon_resident_bytes(inst)
+        best: Optional[Tuple[Node, float]] = None
+        for node in self.nodes.values():
+            if node is src:
+                continue
+            # the husk lands hibernated: the target pays its metadata now
+            if node.headroom_bytes() < inst.metadata_bytes():
+                continue
+            overlap = node.digest_overlap_bytes(digests)
+            missing = max(stored - overlap, 0) + unstored
+            score = gov.migration_score(
+                freed, idle, missing,
+                min(src.link_bw_bytes_s, node.link_bw_bytes_s))
+            if best is None or score > best[1]:
+                best = (node, score)
+        return best
+
+    # ------------------------------------------------------------ rebalance
+    def rebalance(self, now: Optional[float] = None) -> List[tuple]:
+        """One cluster governor round per node.
+
+        The sustained-breach signal is the *residual* pressure after the
+        node's own rung ladder has done all it can: what remains is
+        structural — the husk load (plus anything pinned by in-flight
+        serves) exceeds the budget, and no amount of local deflation
+        fixes that.  A residual sustained for ``sustained_breach_rounds``
+        escalates to migration (most-idle victims to the best-scoring
+        peers); TERMINATED eviction runs only when migration is off or
+        found no (victim, target) pair this round — strictly the last
+        resort, exactly one rung below MIGRATING."""
+        now = time.monotonic() if now is None else now
+        actions: List[tuple] = []
+        for nid, node in self.nodes.items():
+            gov = node.governor
+            gov.step(now=now, try_lock=node.engine.instance_lock)
+            if gov.pressure_bytes() <= 0:
+                self._breach[nid] = 0
+                continue
+            self._breach[nid] += 1
+            if self._breach[nid] < self.policy.sustained_breach_rounds:
+                continue
+            migrated: List[tuple] = []
+            if self.policy.migration:
+                migrated = self._migrate_for_pressure(node, now)
+                actions += migrated
+            if not migrated and gov.pressure_bytes() > 0 \
+                    and self.policy.terminate_last_resort:
+                actions += self._terminate_for_pressure(node, now)
+        if actions:
+            self.log.append((now, "rebalance", tuple(actions)))
+        return actions
+
+    def _migrate_for_pressure(self, node: Node, now: float) -> List[tuple]:
+        gov = node.governor
+        acts: List[tuple] = []
+        # a couple of victims per round (the link must not stampede);
+        # the sustained streak keeps rounds coming until the residual
+        # pressure clears
+        for inst, freed, idle in gov.migration_candidates(now):
+            if len(acts) >= self.policy.max_migrations_per_round \
+                    or gov.pressure_bytes() <= 0:
+                break
+            pick = self._best_target(node, inst, freed, idle, now)
+            if pick is None:
+                continue
+            target, score = pick
+            try:
+                h = self.migrate(inst.instance_id, target.node_id,
+                                 block=True)
+            except MigrationError:
+                continue                  # raced a request: next victim
+            if h.ok:
+                acts.append(("migrate", inst.instance_id, node.node_id,
+                             target.node_id, score))
+        return acts
+
+    def _terminate_for_pressure(self, node: Node, now: float) -> List[tuple]:
+        """Last resort, unchanged single-node semantics: evict idle
+        hibernated tenants, most idle first, until pressure clears."""
+        gov = node.governor
+        acts: List[tuple] = []
+        for inst, _freed, _idle in gov.migration_candidates(now):
+            if gov.pressure_bytes() <= 0:
+                break
+            if inst.state != S.HIBERNATE:
+                continue
+            lock = node.engine.instance_lock(inst.instance_id)
+            if not lock.acquire(blocking=False):
+                continue
+            try:
+                if inst.state != S.HIBERNATE:
+                    continue
+                node.manager.evict(inst.instance_id)
+            finally:
+                lock.release()
+            with self._lock:
+                self.placement.pop(inst.instance_id, None)
+            self.evictions += 1
+            acts.append(("terminate", inst.instance_id, node.node_id))
+        return acts
+
+    # ------------------------------------------------------------ accounting
+    def migration_stats(self) -> Dict[str, float]:
+        done = [h for h in self.handles if h.ok]
+        return {
+            "migrations": len(done),
+            "aborted": sum(1 for h in self.handles
+                           if h.done and not h.ok),
+            "bytes_shipped": sum(h.stats.bytes_shipped for h in done),
+            "meta_bytes": sum(h.stats.meta_bytes for h in done),
+            "wire_bytes": sum(h.stats.wire_bytes for h in done),
+            "bytes_dedup": sum(h.stats.bytes_dedup for h in done),
+            "full_snapshot_bytes": sum(h.stats.full_snapshot_bytes
+                                       for h in done),
+            "link_seconds": sum(h.stats.link_seconds for h in done),
+        }
+
+    def close(self) -> None:
+        for node in self.nodes.values():
+            node.close()

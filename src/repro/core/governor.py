@@ -36,9 +36,15 @@ from repro.core.state import ContainerState, Rung
 S = ContainerState
 
 #: states the governor may act on (idle, servable); running states are
-#: skipped via the engine's per-instance try-lock anyway
+#: skipped via the engine's per-instance try-lock anyway.  MIGRATING is
+#: deliberately absent: an in-transfer tenant is fenced — the state
+#: machine rejects every deflate/evict event on it.
 _IDLE_STATES = frozenset({S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL,
                           S.HIBERNATE})
+
+#: states a cluster migration may ship from: the tenant's anon state is
+#: (or can cheaply be flushed) on the CAS/REAP disk tier
+MIGRATABLE_STATES = frozenset({S.MMAP_CLEAN, S.PARTIAL, S.HIBERNATE})
 
 #: states a scored descent is still applicable from — revalidated under
 #: the victim's serve lock, because the instance may have served (or been
@@ -313,6 +319,53 @@ class MemoryGovernor:
                 out.append((Rung.TERMINATED,
                             min(inst.metadata_bytes(), need)))
         return out
+
+    # ------------------------------------------------------- cluster tier
+    def migration_candidates(self, now: Optional[float] = None
+                             ) -> List[Tuple[object, int, float]]:
+        """Tenants a cluster router may ship off-node, as
+        ``(instance, freed_bytes, predicted_idle_s)`` — most-idle first.
+
+        Migration sits between the ladder's HIBERNATED and TERMINATED
+        rungs: it frees everything TERMINATED would (resident anon bytes,
+        kept-alive metadata, last-sharer mmap) *without* destroying the
+        tenant — the husk moves to a node with headroom instead.  Only
+        :data:`MIGRATABLE_STATES` qualify; a WARM/serving tenant is never
+        shipped (its state machine would reject ``MIGRATE`` anyway)."""
+        now = time.monotonic() if now is None else now
+        with self.manager._lock:
+            insts = list(self.manager.instances.values())
+        out: List[Tuple[object, int, float]] = []
+        for inst in insts:
+            if inst.state not in MIGRATABLE_STATES:
+                continue
+            freed = (self._anon_resident_bytes(inst)
+                     + self._mmap_benefit(inst) + inst.metadata_bytes())
+            idle = self.predicted_gap(inst.instance_id, now,
+                                      last_used=inst.last_used)
+            out.append((inst, freed, idle))
+        out.sort(key=lambda t: -t[2])
+        return out
+
+    def migration_score(self, freed_bytes: int, predicted_idle_s: float,
+                        transfer_bytes_missing: int,
+                        link_bw_bytes_s: float,
+                        wake_cost_s: Optional[float] = None) -> float:
+        """Cluster-escalation score for one (victim, target) pair:
+
+            bytes_freed * predicted_idle
+            / (transfer_bytes_missing / link_bw + wake_cost)
+
+        ``transfer_bytes_missing`` is the dedup-aware transfer — only the
+        digests the target's CAS store lacks — so shipping a tenant to a
+        node that already holds its base weights is nearly free and wins.
+        ``wake_cost`` defaults to the measured HIBERNATED-rung wake EWMA:
+        the migrant lands hibernated on the target."""
+        if wake_cost_s is None:
+            wake_cost_s = self.wake_cost(Rung.HIBERNATED)
+        denom = (transfer_bytes_missing / max(link_bw_bytes_s, 1.0)
+                 + wake_cost_s + 1e-6)
+        return freed_bytes * predicted_idle_s / denom
 
     def _apply(self, inst, rung_to: Rung, need: int, now: float,
                score: float,

@@ -118,21 +118,31 @@ class HibernationManager:
         self.lookahead_keys = 0
 
     # ------------------------------------------------------------- deflate
-    def deflate(self, inst: ModelInstance) -> DeflateStats:
-        t0 = time.monotonic()
-        st = DeflateStats()
-
-        # step 0: an in-flight wake stream drains first (no new chunks are
-        # claimed; in-flight chunks finish installing), and background
-        # lookahead fetches quiesce — deflate must own the instance
+    def quiesce(self, inst: ModelInstance) -> None:
+        """Step 0 of every whole-instance transition (full deflate,
+        migration): an in-flight wake stream drains first (no new chunks
+        are claimed; in-flight chunks finish installing), and background
+        lookahead fetches quiesce — the caller must own the instance."""
         pipe = inst.wake_pipeline
         if pipe is not None:
             pipe.cancel(drain=True)
             inst.wake_pipeline = None
         inst.quiesce_bg()
 
-        # step 1: pause (SIGSTOP).  Raises if a request is in flight.
-        inst.sm.fire(Event.SIGSTOP)
+    def deflate(self, inst: ModelInstance, *,
+                event: Event = Event.SIGSTOP) -> DeflateStats:
+        """Full deflate.  ``event`` is normally SIGSTOP (④); a cluster
+        migration of a not-yet-hibernated tenant passes ``MIGRATE`` — the
+        same swap-out body runs, but the state lands on MIGRATING so the
+        governor cannot touch the tenant while its snapshot ships."""
+        t0 = time.monotonic()
+        st = DeflateStats()
+
+        self.quiesce(inst)
+
+        # step 1: pause (SIGSTOP / MIGRATE).  Raises if a request is in
+        # flight.
+        inst.sm.fire(event)
 
         # a cancelled stream may have left working-set units undelivered;
         # the REAP file is rewritten below from *resident* state, so
@@ -159,6 +169,14 @@ class HibernationManager:
         items = sorted(w_reap + kv_reap,
                        key=lambda it: order.get(it[0], len(order)))
         inst.reap_file.write_batch(items)
+        # content-address the working set too (cluster inventory): the
+        # REAP file keeps the wake path private + sequential, while the
+        # CAS copy dedups against every same-deployment tenant on the
+        # node — digest-overlap placement affinity and dedup-aware
+        # migration transfers (repro.cluster) read it.  For shared base
+        # weights this is metadata-only after the first tenant.
+        if items and getattr(inst.swap_file, "store", None) is not None:
+            inst.swap_file.write_units(items)
         # coldness signal for the store's compression tiers: these units
         # missed the working set this cycle.  Only meaningful when a REAP
         # working set exists — with no recorded set (pagefault-mode
@@ -250,11 +268,7 @@ class HibernationManager:
         t0 = time.monotonic()
         st = DeflateStats(rung="partial")
 
-        pipe = inst.wake_pipeline
-        if pipe is not None:
-            pipe.cancel(drain=True)
-            inst.wake_pipeline = None
-        inst.quiesce_bg()
+        self.quiesce(inst)
 
         inst.sm.fire(Event.PARTIAL_STOP)
         # mmap cleanup rides along: PARTIAL is below MMAP_CLEAN on the

@@ -56,7 +56,8 @@ class WeightUnit:
 class ModelInstance:
     def __init__(self, instance_id: str, cfg, params, *, pool,
                  spool_dir: str, shared_paths: Optional[Set[str]] = None,
-                 base_id: Optional[str] = None, store=None):
+                 base_id: Optional[str] = None, store=None,
+                 metadata_bytes: int = 1 << 16):
         self.instance_id = instance_id
         self.cfg = cfg
         self.base_id = base_id
@@ -95,6 +96,7 @@ class ModelInstance:
             self.swap_file = SwapFile(f"{spool_dir}/{instance_id}.swap")
         self.reap_file = ReapFile(f"{spool_dir}/{instance_id}.reap")
         self.fault_log: List[Tuple[float, Tuple]] = []
+        self._metadata_bytes = metadata_bytes
         self.created_at = time.monotonic()
         self.last_used = self.created_at
         #: True once the current hibernation cycle's upfront inflate ran
@@ -108,6 +110,10 @@ class ModelInstance:
         #: — the wake-storm guard hands this handle to late arrivals and
         #: the fault path demand-pulls from it
         self.wake_pipeline = None
+        #: in-flight cluster migration (``repro.cluster.migrate.
+        #: MigrationHandle``) while MIGRATING — requests and wakes block
+        #: on it, mirroring the wake pipeline's shared-handle semantics
+        self.migration = None
         #: serializes unit installation across the wake streamer, demand
         #: pulls, lookahead prefetch and the engine's fault path (re-entrant:
         #: the fault path nests install calls)
@@ -351,8 +357,10 @@ class ModelInstance:
 
     def metadata_bytes(self) -> int:
         """The kept-alive 'host OS objects': page tables, compiled-fn
-        handles, state machine — small by design."""
-        return 1 << 16
+        handles, state machine — small by design.  Simulation knob
+        (``ManagerConfig.husk_metadata_bytes``): the cluster benchmarks
+        model paper-realistic husk/warm ratios with it."""
+        return self._metadata_bytes
 
     # ---------------------------------------------------------- background
     def bg_begin(self) -> None:

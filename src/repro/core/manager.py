@@ -110,6 +110,11 @@ class ManagerConfig:
     #: governor knobs (headroom, rung thresholds, terminate policy);
     #: None uses :class:`~repro.core.governor.GovernorConfig` defaults
     governor_policy: Optional[GovernorConfig] = None
+    #: kept-alive metadata a hibernated husk is charged for (page tables,
+    #: compiled handles).  The default is deliberately tiny; cluster
+    #: benchmarks raise it to paper-realistic husk/warm ratios so the
+    #: TERMINATED/MIGRATING economics have teeth.
+    husk_metadata_bytes: int = 1 << 16
 
 
 class InstanceManager:
@@ -138,6 +143,11 @@ class InstanceManager:
         self.events: List[tuple] = []
         self._lock = threading.RLock()                 # instance table
         self._wake_locks: Dict[str, threading.Lock] = {}
+        #: tenants migrated off this node -> target node id, so straggler
+        #: requests raise ``TenantMigrated`` (rerouted by the cluster
+        #: router) instead of cold-starting a duplicate here.  Entries are
+        #: dropped if the tenant ever migrates back (``admit``).
+        self.migrated: Dict[str, str] = {}
         #: wake-storm accounting: inflates actually performed vs callers
         #: that arrived wanting one and found it already done/in flight
         self.wakes_performed = 0
@@ -164,7 +174,8 @@ class InstanceManager:
             spool_dir=self.cfg.spool_dir,
             shared_paths=shared_paths if self.shared else None,
             base_id=arch_key if self.shared else None,
-            store=self.store)
+            store=self.store,
+            metadata_bytes=self.cfg.husk_metadata_bytes)
         if self.shared and inst.base_id and inst.shared_paths:
             self.shared.acquire(inst.base_id, inst)
         inst.sm.fire(Event.COLD_START)
@@ -203,6 +214,16 @@ class InstanceManager:
         the same pipeline at low priority unless overridden.
         """
         inst = self.instances.get(instance_id)
+        if inst is not None and inst.state == ContainerState.MIGRATING:
+            # in-flight-request handoff: block on the transfer handle the
+            # way late wake arrivals block on the shared wake pipeline.
+            # When it completes the tenant lives on the target node (or
+            # aborted back to HIBERNATE) — the caller re-resolves.
+            handle = inst.migration
+            self.wakes_deduped += 1
+            if handle is not None:
+                handle.wait()
+            return None
         if inst is None or inst.state not in WAKEABLE_STATES:
             return None
         if priority is None:
@@ -242,6 +263,33 @@ class InstanceManager:
         absorbed by the same pipeline via demand-pull."""
         return self.ensure_awake(instance_id, trigger="sigcont",
                                  priority=priority)
+
+    # ------------------------------------------------------------- cluster
+    def detach(self, instance_id: str, target: Optional[str] = None) -> None:
+        """Migration commit on the *source* node: drop the instance from
+        the table without firing EVICT (the state machine already walked
+        MIGRATE -> MIGRATE_DONE -> DEAD) and remember where it went so a
+        straggler request can be rerouted.  The caller owns releasing the
+        instance's disk state (swap-store refs, REAP file)."""
+        with self._lock:
+            self.instances.pop(instance_id, None)
+            self._wake_locks.pop(instance_id, None)
+            if target is not None:
+                self.migrated[instance_id] = target
+        self.governor.forget(instance_id)
+        if self.on_evict is not None:
+            self.on_evict(instance_id)
+        self.events.append((time.monotonic(), "migrate_out", instance_id))
+
+    def admit(self, inst: ModelInstance) -> None:
+        """Migration commit on the *target* node: install a rebuilt
+        instance (hibernated: weights/KV are digests in this node's store,
+        REAP file rebuilt, recorder state shipped)."""
+        with self._lock:
+            self.instances[inst.instance_id] = inst
+            self.migrated.pop(inst.instance_id, None)
+        self.events.append((time.monotonic(), "migrate_in",
+                            inst.instance_id))
 
     def evict(self, instance_id: str) -> None:
         with self._lock:

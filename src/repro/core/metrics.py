@@ -105,6 +105,27 @@ def per_rung_report(manager) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def cluster_report(nodes) -> Dict[str, Dict[str, float]]:
+    """Per-node rollup for a cluster of :class:`~repro.cluster.node.Node`:
+    tenants, governed bytes vs budget, rung mix, and the store's
+    dedup'd on-disk footprint — the columns ``benchmarks/cluster_density``
+    renders and the router's rebalance decisions act on."""
+    out: Dict[str, Dict[str, float]] = {}
+    for node in nodes:
+        rungs = per_rung_report(node.manager)
+        budget = node.governor.budget_bytes
+        store = node.store
+        out[node.node_id] = {
+            "tenants": sum(r["instances"] for r in rungs.values()),
+            "governed_bytes": node.governed_bytes(),
+            "budget_bytes": budget if budget is not None else float("inf"),
+            "pressure_bytes": node.pressure_bytes(),
+            "rungs": {r: int(v["instances"]) for r, v in rungs.items()},
+            "disk_stored_bytes": store.live_bytes if store else 0,
+        }
+    return out
+
+
 class LatencyTrace:
     """Named wall-clock spans, e.g. cold_start / prefill / decode / wake."""
 

@@ -40,6 +40,7 @@ class ContainerState(enum.Enum):
     HIBERNATE = "hibernate"              # deflated, paused, zero CPU
     HIBERNATE_RUNNING = "hib_running"    # woken by a request, processing
     WOKEN = "woken"                      # request finished, partially inflated
+    MIGRATING = "migrating"              # snapshot in transit to another node
     DEAD = "dead"                        # evicted / terminated
 
 
@@ -62,6 +63,9 @@ class Event(enum.Enum):
     SIGSTOP = "sigstop"                  # ④⑨ platform deflates (full)
     SIGCONT = "sigcont"                  # ⑤ predictive wake-up
     EVICT = "evict"                      # terminate, delete swap files
+    MIGRATE = "migrate"                  # cluster: ship snapshot to a peer node
+    MIGRATE_DONE = "migrate_done"        # transfer committed on the target
+    MIGRATE_ABORT = "migrate_abort"      # transfer failed: state stays local
 
 
 S, E = ContainerState, Event
@@ -105,12 +109,24 @@ TRANSITIONS: Dict[Tuple[ContainerState, Event], Tuple[ContainerState, str]] = {
     (S.PARTIAL, E.EVICT):              (S.DEAD, "evict"),
     (S.HIBERNATE, E.EVICT):            (S.DEAD, "evict"),
     (S.WOKEN, E.EVICT):                (S.DEAD, "evict"),
+    # --- cluster migration: a deflated-enough tenant (its anon state is
+    # on the CAS/REAP disk tier, or about to be flushed there by
+    # migrate_out) ships to a peer node.  MIGRATING is a fenced state:
+    # requests block on the transfer handle (mirroring the shared wake
+    # pipeline), and the governor may neither deflate nor TERMINATE it —
+    # (MIGRATING, EVICT) is deliberately NOT in this table, so a stale
+    # governor descent can never free swap state a transfer still reads.
+    (S.MMAP_CLEAN, E.MIGRATE):         (S.MIGRATING, "(10)"),
+    (S.PARTIAL, E.MIGRATE):            (S.MIGRATING, "(10)"),
+    (S.HIBERNATE, E.MIGRATE):          (S.MIGRATING, "(10)"),
+    (S.MIGRATING, E.MIGRATE_DONE):     (S.DEAD, "(11)"),
+    (S.MIGRATING, E.MIGRATE_ABORT):    (S.HIBERNATE, "(11')"),
 }
 
 #: states in which the instance holds *no* device memory for app state
-DEFLATED_STATES = frozenset({S.HIBERNATE})
+DEFLATED_STATES = frozenset({S.HIBERNATE, S.MIGRATING})
 #: states in which the instance consumes zero scheduler slots ("zero CPU")
-PAUSED_STATES = frozenset({S.HIBERNATE, S.DEAD})
+PAUSED_STATES = frozenset({S.HIBERNATE, S.MIGRATING, S.DEAD})
 #: states from which a request can be served without a cold start
 SERVABLE_STATES = frozenset({S.WARM, S.MMAP_CLEAN, S.PARTIAL,
                              S.HIBERNATE, S.WOKEN})
@@ -125,6 +141,9 @@ RUNG_OF: Dict[ContainerState, Rung] = {
     S.MMAP_CLEAN: Rung.MMAP_CLEAN,
     S.PARTIAL: Rung.PARTIAL,
     S.HIBERNATE: Rung.HIBERNATED,
+    # migrate_out flushes anon state to disk before the state flips, so a
+    # MIGRATING instance holds hibernated-rung memory (metadata only)
+    S.MIGRATING: Rung.HIBERNATED,
     S.DEAD: Rung.TERMINATED,
     S.COLD: Rung.TERMINATED,
 }

@@ -341,6 +341,91 @@ class SwapStore:
         if batch:
             yield self.read(client, batch)
 
+    # ------------------------------------------------------------- cluster
+    def digests(self) -> frozenset:
+        """Digests of every live segment — the node's content inventory
+        the cluster router scores digest-overlap affinity against."""
+        with self._lock:
+            return frozenset(self._segments)
+
+    def missing_digests(self, digests) -> List[bytes]:
+        """Subset of ``digests`` this store does NOT hold — what a peer
+        transfer must actually ship (dedup-aware migration: everything
+        else is already on this node's disk)."""
+        with self._lock:
+            return [d for d in digests if d not in self._segments]
+
+    def stored_bytes_of(self, digests) -> int:
+        """On-disk (post-compression) bytes of the given segments."""
+        with self._lock:
+            return sum(self._segments[d].stored_nbytes for d in digests
+                       if d in self._segments)
+
+    def export_segments(self, digests
+                        ) -> List[Tuple[bytes, int, int, bytes]]:
+        """Read segments out as ``(digest, level, raw_nbytes, payload)``
+        wire tuples.  Payloads ship at their stored compression level —
+        a cold zlib-tier segment crosses the link compressed and lands on
+        the target at the same tier."""
+        out: List[Tuple[bytes, int, int, bytes]] = []
+        with self._lock:          # sinking relocates extents: stay locked
+            for d in digests:
+                seg = self._segments[d]
+                blob = os.pread(self.fd, seg.stored_nbytes, seg.offset)
+                self.reads += 1
+                out.append((d, seg.level, seg.raw_nbytes, blob))
+        return out
+
+    def import_segments(self, items: Sequence[Tuple[bytes, int, int, bytes]]
+                        ) -> int:
+        """Install wire segments from a peer at refcount zero; the
+        follow-up :meth:`adopt_extents` call takes the references.  The
+        digest is the *cluster-wide* content address, so both stores must
+        share a salt (the router seeds every node from one deployment
+        salt).  Returns new on-disk bytes written."""
+        new = 0
+        with self._lock:
+            for digest, level, raw_nbytes, payload in items:
+                if digest in self._segments:
+                    self.dedup_hits += 1
+                    continue
+                seg = _Segment(self._alloc(len(payload)), len(payload),
+                               raw_nbytes, level, refs=0, tried_level=level)
+                os.pwrite(self.fd, payload, seg.offset)
+                self.bytes_written += len(payload)
+                self.writes += 1
+                new += len(payload)
+                self._segments[digest] = seg
+        return new
+
+    def export_meta(self, client: "StoreClient") -> Dict[Hashable, "UnitMeta"]:
+        """Snapshot one owner's extent table (the REAP-metadata half of a
+        migration: keys, digests, dtypes, shapes — no payload bytes)."""
+        with self._lock:
+            return dict(client.extents)
+
+    def adopt_extents(self, owner: str,
+                      metas: Dict[Hashable, "UnitMeta"]) -> "StoreClient":
+        """Rebuild a migrated tenant's client: its extent table is
+        installed verbatim and a reference is taken on every segment it
+        names.  Raises ``KeyError`` if a digest was never shipped —
+        adoption must follow :meth:`import_segments`, never precede it."""
+        with self._lock:
+            missing = [m.digest for m in metas.values()
+                       if m.digest is not None
+                       and m.digest not in self._segments]
+            if missing:
+                raise KeyError(
+                    f"adopt_extents({owner}): {len(missing)} digests "
+                    f"absent — transfer incomplete")
+            c = self.client(owner)
+            for key, meta in metas.items():
+                self._drop_meta(c.extents.pop(key, None))
+                if meta.digest is not None:
+                    self._segments[meta.digest].refs += 1
+                c.extents[key] = meta
+            return c
+
     # ------------------------------------------------------------- GC
     def _drop_meta(self, meta: Optional[UnitMeta]) -> None:
         if meta is None or meta.digest is None:

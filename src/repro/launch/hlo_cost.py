@@ -134,14 +134,16 @@ def _parse_op_line(line: str) -> Optional[Op]:
     # or a single token like bf16[8,3072]{1,0}
     if rest.startswith("("):
         depth = 0
+        end = 0
         for i, ch in enumerate(rest):
             if ch == "(":
                 depth += 1
             elif ch == ")":
                 depth -= 1
                 if depth == 0:
+                    end = i
                     break
-        type_str, rest = rest[:i + 1], rest[i + 1:]
+        type_str, rest = rest[:end + 1], rest[end + 1:]
     else:
         sp = rest.find(" ")
         if sp < 0:

@@ -50,6 +50,19 @@ S = ContainerState
 # requests / responses
 # ---------------------------------------------------------------------------
 
+class TenantMigrated(RuntimeError):
+    """The tenant no longer lives on this node: its snapshot migrated to
+    ``target`` (a peer node id, or ``None`` if unknown).  The cluster
+    router catches this and re-dispatches the request there."""
+
+    def __init__(self, instance_id: str, target: Optional[str] = None):
+        super().__init__(
+            f"tenant {instance_id} migrated away"
+            + (f" to node {target}" if target else ""))
+        self.instance_id = instance_id
+        self.target = target
+
+
 @dataclass
 class Request:
     instance_id: str
@@ -331,7 +344,31 @@ class ServingEngine:
 
     def _serve_batch_locked(self, instance_id: str,
                             reqs: List[Request]) -> List[Response]:
-        inst = self.manager.instances[instance_id]
+        inst = self.manager.instances.get(instance_id)
+        # in-flight-request handoff: a request landing on a MIGRATING
+        # tenant blocks on the transfer handle (exactly like late wake
+        # arrivals block on the shared wake pipeline), then either serves
+        # locally (transfer aborted -> HIBERNATE) or reroutes (committed:
+        # the tenant now lives on the target node)
+        while inst is not None and inst.state == S.MIGRATING:
+            self.manager.ensure_awake(instance_id, trigger="request")
+            inst = self.manager.instances.get(instance_id)
+        if inst is not None and inst.state == S.DEAD \
+                and inst.migration is not None:
+            # commit window: MIGRATE_DONE has fired but the source has
+            # not detached yet — wait for the commit to finish (placement
+            # and the forwarding address are recorded before the handle
+            # resolves) rather than serving a weight-dropped husk
+            inst.migration.wait()
+            inst = self.manager.instances.get(instance_id)
+            if inst is None or inst.state == S.DEAD:
+                raise TenantMigrated(instance_id,
+                                     self.manager.migrated.get(instance_id))
+        if inst is None:
+            if instance_id in self.manager.migrated:
+                raise TenantMigrated(instance_id,
+                                     self.manager.migrated[instance_id])
+            raise KeyError(f"instance {instance_id} not started")
         resps = [Response(r, state_before=inst.state.value) for r in reqs]
         t0 = time.monotonic()
 
@@ -484,7 +521,7 @@ class ServingEngine:
         cur = jnp.asarray([r.tokens[-1] if r.tokens else 0 for r in resps],
                           jnp.int32)
         done = np.zeros((B,), bool)
-        for step in range(max_new - 1 + 1):
+        for _step in range(max_new - 1 + 1):
             # the fed-back tokens' embedding rows page-fault on access
             ek = self._embed_keys(inst, np.asarray(cur))
             inst.recorder.record_many(ek)

@@ -31,7 +31,8 @@ from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
 from repro.core.state import ContainerState
-from repro.serving.engine import Request, Response, ServingEngine
+from repro.serving.engine import (Request, Response, ServingEngine,
+                                  TenantMigrated)
 
 S = ContainerState
 
@@ -95,6 +96,11 @@ class AsyncPlatform:
         # this platform's per-tenant queue entry and serve lock
         engine.manager.on_evict = self._forget_tenant
         self.rejected = 0
+        #: cluster hook: ``reroute(iid, reqs, futs) -> bool`` takes over a
+        #: batch whose tenant migrated off this node (the router resolves
+        #: the futures against the target node).  Without it, stragglers
+        #: fail with :class:`TenantMigrated` on their futures.
+        self.reroute = None
 
     @property
     def arrivals(self) -> Dict[str, tuple]:
@@ -222,12 +228,22 @@ class AsyncPlatform:
     def _serve(self, iid: str, reqs: List[Request],
                futs: List[Future]) -> None:
         try:
-            if iid not in self.engine.manager.instances:
+            mgr = self.engine.manager
+            if iid not in mgr.instances and iid not in mgr.migrated:
                 self.engine.start_instance(iid, self.arch_of[iid])
                 self.log.append((time.monotonic(), "cold_start", iid))
             resps = self.engine.serve_batch(iid, reqs)
             for f, r in zip(futs, resps):
                 f.set_result(r)
+        except TenantMigrated as e:
+            # the tenant lives on another node now: hand the batch to the
+            # cluster router (it resolves the futures against the target)
+            if self.reroute is not None and self.reroute(iid, reqs, futs):
+                self.log.append((time.monotonic(), "rerouted", iid))
+                return
+            for f in futs:
+                if not f.done():
+                    f.set_exception(e)
         except BaseException as e:
             for f in futs:
                 if not f.done():

@@ -131,6 +131,42 @@ def test_ladder_illegal_transitions():
         assert sm.state == state
 
 
+def test_migration_transitions():
+    """MIGRATE fences MMAP_CLEAN/PARTIAL/HIBERNATE; the fence resolves
+    only via MIGRATE_DONE (-> DEAD on the source) or MIGRATE_ABORT
+    (-> HIBERNATE: the snapshot never left)."""
+    for src in (S.MMAP_CLEAN, S.PARTIAL, S.HIBERNATE):
+        sm = StateMachine(state=src)
+        assert sm.fire(E.MIGRATE) == S.MIGRATING
+        assert sm.fire(E.MIGRATE_DONE) == S.DEAD
+    sm = StateMachine(state=S.HIBERNATE)
+    sm.fire(E.MIGRATE)
+    assert sm.fire(E.MIGRATE_ABORT) == S.HIBERNATE
+    assert RUNG_OF[S.MIGRATING] == Rung.HIBERNATED
+
+
+def test_migrating_is_fenced_from_every_other_event():
+    """A MIGRATING tenant accepts ONLY the two resolution events.  In
+    particular governor TERMINATED (EVICT) is illegal — a stale descent
+    must never free swap state an in-flight transfer is reading — and a
+    serving/inflated state can never MIGRATE."""
+    legal = {E.MIGRATE_DONE, E.MIGRATE_ABORT}
+    for ev in Event:
+        if ev in legal:
+            assert (S.MIGRATING, ev) in TRANSITIONS
+            continue
+        assert (S.MIGRATING, ev) not in TRANSITIONS, ev
+        sm = StateMachine(state=S.MIGRATING)
+        with pytest.raises(InvalidTransition):
+            sm.fire(ev)
+        assert sm.state == S.MIGRATING
+    # MIGRATE is only reachable from deflated-enough idle rungs
+    for state in ContainerState:
+        can = (state, E.MIGRATE) in TRANSITIONS
+        assert can == (state in (S.MMAP_CLEAN, S.PARTIAL, S.HIBERNATE)), \
+            state
+
+
 def test_rung_ladder_is_total_and_ordered():
     """Every state has a rung; DEFLATE_EVENT_FOR covers every non-WARM
     rung and each mapped event lands on (at most) its rung from WARM."""
