@@ -42,6 +42,7 @@ from benchmarks.common import Table, build_factory, fmt_mb, request_for
 from repro.cluster import ClusterPolicy, ClusterRouter, Node
 from repro.core.governor import GovernorConfig
 from repro.core.metrics import percentile
+from repro.core.state import Rung
 
 ARCH = "llama3.2-3b"
 N_NODES = 4
@@ -94,7 +95,7 @@ def _mk_cluster(spool: str, per_node_budget, migration: bool,
         inst.recorder.stop()
         # everyone starts hibernated: digests land in every node's store
         # (this is also what lets later migrations dedup base weights)
-        node.manager.deflate(iid)
+        node.manager.descend(iid, Rung.HIBERNATED)
     return router, nodes, tenants, cfg0
 
 

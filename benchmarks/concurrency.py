@@ -25,6 +25,7 @@ from benchmarks.common import Table, fmt_ms, make_engine, request_for
 from repro.core.metrics import percentile
 from repro.core.swap import SwapFile
 from repro.serving import AsyncPlatform, PlatformPolicy, Request
+from repro.core.state import Rung
 
 TENANTS = ["chat", "search", "stream", "batch"]
 ARCH = "llama3.2-3b"
@@ -38,7 +39,7 @@ def _prepare(spool: str):
         cfg = mgr.instances[t].cfg
         eng.record_sample(t, request_for(cfg, t, "probe", 6, 2, seed=i,
                                          close_session=True))
-        mgr.deflate(t)
+        mgr.descend(t, Rung.HIBERNATED)
     return eng, mgr
 
 

@@ -22,6 +22,7 @@ import time
 
 from benchmarks.common import Table, fmt_mb, make_engine, request_for
 from repro.core.metrics import percentile
+from repro.core.state import Rung
 
 ARCH = "llama3.2-3b"
 N_TENANTS = 8
@@ -37,7 +38,7 @@ def run(dedup: bool, cycles: int, spool="/tmp/bench_dedup"):
         eng.handle(request_for(inst.cfg, iid, "s", 8, 4, close_session=True))
     # deflate everyone, measure the disk tier
     for t in range(N_TENANTS):
-        mgr.deflate(f"t{t}")
+        mgr.descend(f"t{t}", Rung.HIBERNATED)
     if dedup:
         st = mgr.store.stats()
         disk = st["stored_bytes"]
@@ -56,7 +57,7 @@ def run(dedup: bool, cycles: int, spool="/tmp/bench_dedup"):
         inst = mgr.instances[f"t{t}"]
         mgr.hib.fault(inst, inst.nonresident_keys())
         mgr.hib.wake(inst, mode="pagefault", trigger="sigcont")
-        mgr.deflate(f"t{t}")
+        mgr.descend(f"t{t}", Rung.HIBERNATED)
     for inst in mgr.instances.values():
         if getattr(inst.swap_file, "fd", None) is not None:
             os.fsync(inst.swap_file.fd)
@@ -70,7 +71,7 @@ def run(dedup: bool, cycles: int, spool="/tmp/bench_dedup"):
             mgr.hib.fault(inst, inst.nonresident_keys())
             wakes.append(time.monotonic() - t0)
             mgr.hib.wake(inst, mode="pagefault", trigger="sigcont")
-            mgr.deflate(f"t{t}")
+            mgr.descend(f"t{t}", Rung.HIBERNATED)
     syscalls = (mgr.store.reads if dedup else
                 sum(i.swap_file.reads for i in mgr.instances.values()))
     return {"disk": disk, "logical": logical,

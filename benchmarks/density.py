@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from benchmarks.common import Table, fmt_mb, make_engine, request_for
 from repro.core.metrics import memory_report
+from repro.core.state import Rung
 
 ARCH = "llama3.2-3b"
 BUDGET = 256 << 20          # 256 MB of "device" memory
@@ -33,7 +34,7 @@ def packed_instances(policy: str, spool: str):
             if policy != "hibernate-cold":
                 eng.record_sample(iid, request_for(inst.cfg, iid, "p", 8, 4,
                                                    close_session=True))
-            mgr.deflate(iid)
+            mgr.descend(iid, Rung.HIBERNATED)
             if policy == "woken-mix":
                 # woken residency: wake with the working set resident.
                 # The anticipatory wake streams (low priority); density

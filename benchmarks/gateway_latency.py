@@ -1,0 +1,264 @@
+"""Network front door: streaming TTFT through the gateway, per SLO class
+and container state, plus overload behaviour.
+
+Three measurements over real loopback HTTP (chunked NDJSON streaming):
+
+  * concurrency — 32 clients stream simultaneously through one gateway
+    (mixed interactive/batch); the front door must hold every session
+    open concurrently and every stream must deliver its full token
+    count.
+  * TTFT per state — time-to-first-token through the full network path
+    (client -> gateway -> front door -> platform -> engine) for a warm
+    tenant, a hibernated (woken) tenant, and a cold start; the woken
+    path is compared against the direct-engine wake baseline (same
+    Request, ``on_token`` callback, no network) — the gateway must add
+    protocol overhead, not a second wake path.
+  * overload — a flood past the per-tenant session cap: the excess gets
+    429 + Retry-After immediately (bounded queues, honest backpressure),
+    never an unbounded queue.
+
+`python -m benchmarks.gateway_latency [--quick]`
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import threading
+import time
+
+from benchmarks.common import Table, fmt_ms, make_engine, request_for
+from repro.core.metrics import percentile
+from repro.core.state import Rung
+from repro.serving import (AsyncPlatform, FrontDoor, FrontDoorPolicy,
+                           Gateway, PlatformPolicy)
+from repro.serving.engine import SLO_BATCH, SLO_INTERACTIVE
+
+ARCH = "llama3.2-3b"
+
+
+def _stream_once(addr, spec, timeout=120.0):
+    """One streaming request; returns (status, ttft_s, tokens, headers)."""
+    conn = http.client.HTTPConnection(*addr, timeout=timeout)
+    try:
+        t0 = time.monotonic()
+        conn.request("POST", "/v1/generate", body=json.dumps(spec),
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        ttft, toks = None, 0
+        while True:
+            ln = resp.readline()
+            if not ln:
+                break
+            obj = json.loads(ln)
+            if "token" in obj:
+                if ttft is None:
+                    ttft = time.monotonic() - t0
+                toks += 1
+        return resp.status, ttft, toks, dict(resp.getheaders())
+    finally:
+        conn.close()
+
+
+def _mk_stack(spool, tenants, *, workers=4, scale="tiny",
+              door_policy=None, plat_policy=None):
+    eng, mgr = make_engine(spool, scale=scale)
+    arch_of = {t: ARCH for t in tenants}
+    plat = AsyncPlatform(eng, plat_policy or PlatformPolicy(keep_warm_s=1e9),
+                         arch_of, workers=workers)
+    door = FrontDoor(plat, policy=door_policy)
+    return mgr, plat, door
+
+
+def bench_concurrency(spool, sessions=32, new_tokens=6):
+    """All ``sessions`` streams open at once through one gateway."""
+    tenants = [f"g{i}" for i in range(8)]
+    mgr, plat, door = _mk_stack(f"{spool}/conc", tenants, workers=4)
+    results = [None] * sessions
+    barrier = threading.Barrier(sessions)
+
+    def client(i):
+        tenant = tenants[i % len(tenants)]
+        slo = SLO_BATCH if i % 4 == 3 else SLO_INTERACTIVE
+        barrier.wait()
+        results[i] = _stream_once(addr, {
+            "tenant": tenant, "session": f"s{i}", "prompt": [1, 2, 3, 4],
+            "max_new_tokens": new_tokens, "slo": slo, "arch": ARCH,
+            "close": True})
+
+    with plat, Gateway(door) as gw:
+        addr = gw.address
+        t0 = time.monotonic()
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(sessions)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.monotonic() - t0
+
+    ttfts = [r[1] for r in results if r[1] is not None]
+    toks = sum(r[2] for r in results)
+    return {
+        "sessions": sessions,
+        "ok": sum(1 for r in results
+                  if r[0] == 200 and r[2] == new_tokens),
+        "peak": door.peak_sessions,
+        "tok_s": toks / wall,
+        "p50": percentile(ttfts, 50), "p99": percentile(ttfts, 99),
+    }
+
+
+def bench_ttft_states(spool, iters=8, new_tokens=4):
+    """TTFT through the gateway per container state, plus the
+    direct-engine woken baseline the acceptance ratio is against."""
+    # scaled config: the wake cost dominates, so the gateway/direct TTFT
+    # ratio measures protocol overhead against a realistic wake, not
+    # against a near-zero tiny-model inflate
+    tenants = ["warm", "woken", "direct"]
+    mgr, plat, door = _mk_stack(f"{spool}/states", tenants, workers=2,
+                                scale="scaled")
+    out = {"warm": [], "woken": [], "cold": [], "direct": []}
+
+    def spec(tenant, sid):
+        return {"tenant": tenant, "session": sid,
+                "prompt": [1, 2, 3, 4], "max_new_tokens": new_tokens,
+                "arch": ARCH, "close": True}
+
+    with plat, Gateway(door) as gw:
+        addr = gw.address
+        # prime all three tenants (the first request is a cold start)
+        _stream_once(addr, spec("warm", "prime"))
+        _stream_once(addr, spec("woken", "prime"))
+        cfg = mgr.instances["warm"].cfg      # same arch, same shapes
+        plat.submit(request_for(cfg, "direct", "prime", 4, new_tokens,
+                                close_session=True)).result(timeout=120)
+        for i in range(iters):
+            _, ttft, toks, _ = _stream_once(addr, spec("warm", f"w{i}"))
+            assert toks == new_tokens
+            out["warm"].append(ttft)
+        # woken gateway vs direct-engine baseline, interleaved pairwise:
+        # a host load spike lands on both sets, not just the one that
+        # happened to run first — the ratio check compares wake paths,
+        # not scheduler luck
+        for i in range(iters):
+            mgr.descend("woken", Rung.HIBERNATED)
+            _, ttft, toks, _ = _stream_once(addr, spec("woken", f"h{i}"))
+            assert toks == new_tokens
+            out["woken"].append(ttft)
+
+            # baseline: same wake path, no network — Request.on_token
+            # fires on the engine worker at the same point the gateway's
+            # first chunk is cut
+            mgr.descend("direct", Rung.HIBERNATED)
+            stamp = []
+            req = request_for(cfg, "direct", f"d{i}", 4, new_tokens,
+                              seed=i, close_session=True,
+                              slo=SLO_INTERACTIVE,
+                              on_token=lambda tok, s=stamp: (
+                                  s.append(time.monotonic())
+                                  if not s else None))
+            t0 = time.monotonic()
+            plat.submit(req).result(timeout=120)
+            out["direct"].append(stamp[0] - t0)
+        for i in range(iters):
+            iid = f"cold{i}"                 # never started before
+            door.register(iid, ARCH)
+            _, ttft, _, _ = _stream_once(addr, spec(iid, "c0"))
+            out["cold"].append(ttft)
+            mgr.evict(iid)
+    return out
+
+
+def bench_overload(spool, flood=16, cap=4):
+    """Flood one tenant past its session cap: the overflow must get an
+    immediate 429 with a Retry-After hint, not a queue slot."""
+    mgr, plat, door = _mk_stack(
+        f"{spool}/flood", ["hot"], workers=2,
+        door_policy=FrontDoorPolicy(max_sessions_per_tenant=cap))
+    statuses = [None] * flood
+    barrier = threading.Barrier(flood)
+
+    def client(i):
+        barrier.wait()
+        status, _, _, headers = _stream_once(addr, {
+            "tenant": "hot", "session": f"f{i}", "prompt": [1, 2],
+            "max_new_tokens": 8, "arch": ARCH, "close": True})
+        statuses[i] = (status, headers.get("Retry-After"))
+
+    with plat, Gateway(door) as gw:
+        addr = gw.address
+        _stream_once(addr, {"tenant": "hot", "session": "prime",
+                            "prompt": [1], "max_new_tokens": 1,
+                            "arch": ARCH, "close": True})
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(flood)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    ok = sum(1 for s, _ in statuses if s == 200)
+    rejected = [h for s, h in statuses if s == 429]
+    return {"flood": flood, "cap": cap, "ok": ok,
+            "rejected": len(rejected),
+            "hinted": sum(1 for h in rejected if h is not None),
+            "stats": door.stats()}
+
+
+def _trimmed_p99(xs):
+    """p99 after dropping the single worst sample — applied symmetrically
+    to both sides of the gateway/direct ratio so one scheduler spike
+    (hundreds of ms on a loaded host) can't flip a wake-path comparison
+    whose true signal is tens of ms."""
+    return percentile(sorted(xs)[:-1] if len(xs) > 3 else xs, 99)
+
+
+def main(quick: bool = False):
+    spool = "/tmp/bench_gateway"
+    iters = 8 if quick else 16
+
+    conc = bench_concurrency(spool)
+    states = bench_ttft_states(spool, iters=iters)
+    flood = bench_overload(spool)
+
+    tab = Table("network front door (loopback HTTP streaming)",
+                ["phase", "streams", "tok/s",
+                 "ttft p50 (ms)", "ttft p99 (ms)"])
+    tab.add(f"{conc['sessions']} concurrent sessions (mixed slo)",
+            conc["peak"], f"{conc['tok_s']:.0f}",
+            fmt_ms(conc["p50"]), fmt_ms(conc["p99"]))
+    for phase in ("warm", "woken", "cold"):
+        tab.add(f"gateway {phase} interactive", 1, "",
+                fmt_ms(percentile(states[phase], 50)),
+                fmt_ms(percentile(states[phase], 99)))
+    tab.add("direct-engine woken baseline", 1, "",
+            fmt_ms(percentile(states["direct"], 50)),
+            fmt_ms(percentile(states["direct"], 99)))
+    tab.add(f"overload flood ({flood['flood']} vs cap {flood['cap']})",
+            flood["ok"], "", "", "")
+    tab.add("overload 429 + Retry-After",
+            flood["rejected"], "", "", "")
+    print(tab.render())
+
+    ratio = _trimmed_p99(states["woken"]) \
+        / max(_trimmed_p99(states["direct"]), 1e-9)
+    checks = [
+        ("gateway holds >=32 concurrent streaming sessions",
+         conc["peak"] >= 32),
+        ("every concurrent stream delivered its full token count",
+         conc["ok"] == conc["sessions"]),
+        ("woken interactive p99 TTFT within 1.5x of direct wake path",
+         ratio <= 1.5),
+        ("overload sheds with 429, never queues unboundedly",
+         flood["rejected"] > 0
+         and flood["ok"] + flood["rejected"] == flood["flood"]),
+        ("every 429 carried a Retry-After hint",
+         flood["hinted"] == flood["rejected"]),
+    ]
+    return tab, checks
+
+
+if __name__ == "__main__":
+    import sys
+    checks = main(quick="--quick" in sys.argv)[1]
+    sys.exit(0 if all(all(c[1:]) for c in checks) else 1)

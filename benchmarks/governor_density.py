@@ -38,6 +38,7 @@ from repro.core.governor import GovernorConfig
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.metrics import per_rung_report, percentile
 from repro.serving.engine import ServingEngine
+from repro.core.state import Rung
 
 ARCH = "arctic-480b"         # MoE: expert units give the PARTIAL rung teeth
 PROMPT_LEN = 24
@@ -120,7 +121,7 @@ def _run(eng, mgr, n, events, policy, seed=7):
         inst.last_used = t
         peak = max(peak, mgr.resident_bytes())
         if policy == "always-hib":
-            mgr.deflate(iid)
+            mgr.descend(iid, Rung.HIBERNATED)
     return ttfts, peak, per_rung_report(mgr)
 
 
@@ -135,9 +136,9 @@ def _rung_wake_costs(eng, mgr, iid, cycles):
             if rung == "partial":
                 victims = [k for _, _, k in
                            mgr.governor._partial_candidates(inst)]
-                mgr.deflate_partial(iid, victims)
+                mgr.descend(iid, Rung.PARTIAL, keys=victims)
             else:
-                mgr.deflate(iid)
+                mgr.descend(iid, Rung.HIBERNATED)
             eng.handle(request_for(inst.cfg, iid, f"rw{c}{rung[0]}",
                                    PROMPT_LEN, 1, seed=500 + c,
                                    close_session=True))
@@ -172,7 +173,7 @@ def main(quick: bool = False):
     eng, mgr = _make("/tmp/bench_governor/hib")
     _setup_tenants(eng, mgr, n)
     for i in range(n):
-        mgr.deflate(f"t{i}")
+        mgr.descend(f"t{i}", Rung.HIBERNATED)
     hib_tt, hib_peak, _ = _run(eng, mgr, n, events, "always-hib")
     rows.append(("always-hib", hib_peak, hib_peak, hib_tt, None))
     del eng, mgr

@@ -17,6 +17,7 @@ import time
 
 from benchmarks.common import (WORKLOADS, Table, fmt_ms, make_engine,
                                request_for)
+from repro.core.state import Rung
 
 
 def run_workload(name, arch, plen, ntok, scale, spool="/tmp/bench_lat"):
@@ -41,7 +42,7 @@ def run_workload(name, arch, plen, ntok, scale, spool="/tmp/bench_lat"):
 
     # --- hibernate + page-fault wake
     mgr.cfg.wake_mode = "pagefault"
-    mgr.deflate("i")
+    mgr.descend("i", Rung.HIBERNATED)
     r = eng.handle(request_for(inst.cfg, "i", "pf", plen, ntok,
                                close_session=True))
     res["hib-pf"] = r.spans["e2e"]
@@ -50,7 +51,7 @@ def run_workload(name, arch, plen, ntok, scale, spool="/tmp/bench_lat"):
 
     # --- hibernate + REAP wake
     mgr.cfg.wake_mode = "reap"
-    mgr.deflate("i")
+    mgr.descend("i", Rung.HIBERNATED)
     r = eng.handle(request_for(inst.cfg, "i", "reap", plen, ntok,
                                close_session=True))
     res["hib-reap"] = r.spans["e2e"]

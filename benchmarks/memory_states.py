@@ -10,6 +10,7 @@ from __future__ import annotations
 from benchmarks.common import (WORKLOADS, Table, fmt_mb, make_engine,
                                request_for)
 from repro.core.metrics import memory_report
+from repro.core.state import Rung
 
 N_INSTANCES = 10
 
@@ -33,7 +34,7 @@ def run_workload(name, arch, plen, ntok, scale, spool="/tmp/bench_mem"):
 
     warm = pss_total()
     for i in range(N_INSTANCES):
-        mgr.deflate(f"i{i}")
+        mgr.descend(f"i{i}", Rung.HIBERNATED)
     hib = pss_total()
     for i in range(N_INSTANCES):
         inst = insts[i]

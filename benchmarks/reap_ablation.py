@@ -22,6 +22,7 @@ from benchmarks.common import Table, fmt_mb
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.models import model
 from repro.serving import Request, ServingEngine
+from repro.core.state import Rung
 
 ARCH = "deepseek-v2-236b"      # experts + embed blocks: the drifting parts
 N_TOKENS, NEW = 24, 4
@@ -67,7 +68,7 @@ def run(drift: float, union_probes: int, spool: str):
         eng.record_sample("i", Request(
             "i", f"probe{j}", probe,
             max_new_tokens=PROBE_NEW, close_session=True))
-    mgr.deflate("i")
+    mgr.descend("i", Rung.HIBERNATED)
     lo = int(drift * (V // 2))
     r = eng.handle(Request("i", "req", _prompt(rng, cfg, lo, lo + V // 2),
                            max_new_tokens=NEW, close_session=True))

@@ -16,6 +16,8 @@
                      vectored fault IO
   cluster_density  — cluster fabric: 4 nodes, skewed tenant pile,
                      migration-on vs migration-off tenants-per-GB
+  gateway_latency  — network front door: streaming TTFT per SLO class
+                     and container state over loopback HTTP, overload 429s
   roofline         — brief: per-(arch x shape x mesh) roofline table
 
 `python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`
@@ -40,10 +42,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (allocator, cluster_density, concurrency,
-                            dedup_store, density, governor_density,
-                            latency_states, memory_states, reap_ablation,
-                            roofline, sharing, swap_throughput,
-                            wake_latency)
+                            dedup_store, density, gateway_latency,
+                            governor_density, latency_states, memory_states,
+                            reap_ablation, roofline, sharing,
+                            swap_throughput, wake_latency)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
@@ -53,6 +55,7 @@ def main(argv=None):
         ("density", density),
         ("governor_density", governor_density),
         ("cluster_density", cluster_density),
+        ("gateway_latency", gateway_latency),
         ("dedup_store", dedup_store),
         ("sharing", sharing),
         ("reap_ablation", reap_ablation),

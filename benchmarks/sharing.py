@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from benchmarks.common import Table, fmt_mb, fmt_ms, make_engine, request_for
 from repro.core.metrics import memory_report
+from repro.core.state import Rung
 
 ARCH = "phi4-mini-3.8b"      # 200k vocab: big shared embedding
 N = 4
@@ -26,7 +27,7 @@ def run(share: bool, spool="/tmp/bench_share"):
     pss_warm = sum(memory_report(i, mgr.shared).pss_total
                    for i in mgr.instances.values())
     for i in range(N):
-        mgr.deflate(f"i{i}")
+        mgr.descend(f"i{i}", Rung.HIBERNATED)
     # wake latency of one instance
     r = eng.handle(request_for(mgr.instances["i0"].cfg, "i0", "s2", 8, 4,
                                close_session=True))

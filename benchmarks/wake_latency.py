@@ -33,6 +33,7 @@ from benchmarks.common import Table, fmt_mb, request_for
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.metrics import percentile
 from repro.serving.engine import ServingEngine
+from repro.core.state import Rung
 
 ARCH = "llama3.2-3b"
 NUM_LAYERS = 6
@@ -113,7 +114,7 @@ def _cycles(eng, mgr, inst, n: int):
     cfg = inst.cfg
     ttfts, stats = [], []
     for c in range(n):
-        mgr.deflate("tenant")
+        mgr.descend("tenant", Rung.HIBERNATED)
         t0 = time.monotonic()
         eng.handle(request_for(cfg, "tenant", f"probe{c}", PROBE_LEN, 0,
                                seed=100 + c, close_session=True))

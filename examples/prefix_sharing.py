@@ -16,6 +16,7 @@ from repro.configs import get_config, tiny_config
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.models import model
 from repro.serving import Request, ServingEngine
+from repro.core.state import Rung
 
 SPOOL = "/tmp/repro_prefix"
 N_SESSIONS = 6
@@ -66,7 +67,7 @@ def main():
     # hibernation round-trips shared pages through the swap files once
     eng.record_sample("i0", Request("i0", "probe", np.asarray([3], np.int32),
                                     max_new_tokens=1, close_session=True))
-    st = mgr.deflate("i0")
+    st = mgr.descend("i0", Rung.HIBERNATED)
     print(f"deflated: {st.kv_pages_swapped} kv pages swapped "
           f"({(st.reap_bytes + st.swap_bytes) >> 10} KB)")
     r = eng.handle(Request("i0", "fork1", np.asarray([5], np.int32),

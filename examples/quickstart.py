@@ -16,6 +16,7 @@ from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.metrics import memory_report
 from repro.models import model
 from repro.serving import Request, ServingEngine
+from repro.core.state import Rung
 
 SPOOL = "/tmp/repro_quickstart"
 
@@ -68,7 +69,7 @@ def main():
     print(f"  REAP recorded {len(ws)} working-set units")
 
     # ④ SIGSTOP: deflate
-    st = mgr.deflate("tenant0")
+    st = mgr.descend("tenant0", Rung.HIBERNATED)
     print(f"  deflated: reap={st.reap_bytes >> 10} KB "
           f"swap={st.swap_bytes >> 10} KB "
           f"kv_pages={st.kv_pages_swapped} in {st.seconds * 1e3:.0f} ms")

@@ -17,11 +17,16 @@ package adds the cluster tier over the single-node stack:
 """
 from repro.cluster.migrate import (MigrationError, MigrationHandle,
                                    StorePeer, TransferStats,
-                                   migrate_instance)
+                                   migrate_instance, receive_bundle)
 from repro.cluster.node import Node
 from repro.cluster.router import ClusterPolicy, ClusterRouter
+from repro.cluster.transport import (AuthError, LoopbackTransport,
+                                     SocketTransport, StoreServer,
+                                     Transport, TransportError)
 
 __all__ = [
     "ClusterPolicy", "ClusterRouter", "MigrationError", "MigrationHandle",
     "Node", "StorePeer", "TransferStats", "migrate_instance",
+    "receive_bundle", "Transport", "LoopbackTransport", "SocketTransport",
+    "StoreServer", "TransportError", "AuthError",
 ]

@@ -34,9 +34,18 @@ deployment's refcounted CAS segment file.  Migration therefore ships
 
 On any transfer/rebuild error the source fires ``MIGRATE_ABORT`` back to
 HIBERNATE — its disk state was never touched, so it keeps serving
-locally.  The channel is in-process (two stores on one host); a real
-network transport behind the same ``StorePeer`` interface is an open
-item (see ROADMAP).
+locally — and the :class:`StorePeer` sweeps whatever segments it had
+already imported on the target (never-adopted imports are refcount-zero
+orphans; leaking them would be a slow disk leak on every failed
+transfer).  Once ``MIGRATE_DONE`` fires the commit is irrevocable: the
+target owns the tenant, so source-side finalization (forwarding address,
+terminate, store GC) runs to completion even if the commit callback or
+cleanup itself fails — a crash there must never strand the tenant on
+both nodes or neither.
+
+The channel is a :class:`~repro.cluster.transport.Transport`: in-process
+loopback by default, or a length-prefixed socket speaking the
+:mod:`repro.cluster.wire` binary protocol for real multi-host moves.
 """
 from __future__ import annotations
 
@@ -45,6 +54,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.cluster.transport import (AuthError, LoopbackTransport,
+                                     Transport, TransportError)
 from repro.core.governor import MIGRATABLE_STATES
 from repro.core.instance import ModelInstance
 from repro.core.state import ContainerState, Event
@@ -79,42 +90,81 @@ class TransferStats:
 
 
 class StorePeer:
-    """Transfer channel between two nodes' CAS stores.
+    """Transfer channel between two nodes' CAS stores, over a
+    :class:`~repro.cluster.transport.Transport`.
 
     Both stores must share the deployment salt — the digest *is* the
     cluster-wide content address, so an unsalted-compatible peer would be
-    a different deployment and shipping to it is refused."""
+    a different deployment and shipping to it is refused (loopback
+    compares salts directly; the socket transport proves possession via
+    the keyed-nonce handshake, so the salt never crosses the wire).
 
-    def __init__(self, src_store, dst_store,
-                 link_bw_bytes_s: float = 4 << 30):
-        if src_store is None or dst_store is None:
+    The peer remembers every digest it ships; if the migration aborts
+    before the target adopts them, :meth:`release_remote` sweeps those
+    refcount-zero imports so a failed transfer leaks nothing."""
+
+    def __init__(self, src_store, dst_store=None, *,
+                 transport: Optional[Transport] = None,
+                 link_bw_bytes_s: float = 4 << 30,
+                 chunk_bytes: int = 4 << 20):
+        if src_store is None or (dst_store is None and transport is None):
             raise MigrationError("migration requires the dedup store on "
                                  "both nodes (ManagerConfig.dedup_store)")
-        if src_store.salt != dst_store.salt:
-            raise MigrationError("peer stores use different deployment "
-                                 "salts: digests are not comparable")
+        if transport is None:
+            transport = LoopbackTransport(dst_store=dst_store)
         self.src = src_store
-        self.dst = dst_store
+        self.transport = transport
         self.link_bw_bytes_s = link_bw_bytes_s
+        self.chunk_bytes = chunk_bytes
+        self.shipped: List[bytes] = []    # imported on target, not adopted
+        try:
+            transport.authenticate(src_store.salt)
+        except AuthError as e:
+            raise MigrationError(str(e)) from e
 
     def missing(self, digests) -> List[bytes]:
-        return self.dst.missing_digests(digests)
+        return self.transport.missing_digests(list(digests))
 
     def ship(self, digests, stats: TransferStats) -> None:
         """Move the given digests' segments src -> dst, dedup-aware:
-        only segments absent on the target cross the link."""
+        only segments absent on the target cross the link, in chunks so
+        the transport's flow control applies within one migration.  On
+        failure the already-shipped chunks are swept on the target
+        before the error propagates — no refcount leak mid-bundle."""
         digests = list(digests)
         stats.digests_total += len(digests)
         missing = self.missing(digests)
         stats.digests_shipped += len(missing)
         stats.bytes_dedup += self.src.stored_bytes_of(
             [d for d in digests if d not in set(missing)])
-        if missing:
-            wire = self.src.export_segments(missing)
-            stats.bytes_shipped += sum(len(p) for _, _, _, p in wire)
-            self.dst.import_segments(wire)
-        stats.link_seconds += (stats.bytes_shipped
-                               / max(self.link_bw_bytes_s, 1.0))
+        sent = 0
+        try:
+            for chunk in self.src.export_segments_iter(
+                    missing, chunk_bytes=self.chunk_bytes):
+                self.shipped.extend(d for d, _, _, _ in chunk)
+                sent += self.transport.send_segments(chunk)
+            self.transport.barrier()
+        except BaseException:
+            self.release_remote()
+            raise
+        stats.bytes_shipped += sent
+        stats.link_seconds += sent / max(self.link_bw_bytes_s, 1.0)
+
+    def adopted(self) -> None:
+        """The bundle landed and the target took refs: nothing to sweep."""
+        self.shipped = []
+
+    def release_remote(self) -> int:
+        """Abort cleanup: free segments we imported on the target that
+        were never adopted.  Best-effort — if the channel itself is dead
+        the server's connection-teardown sweep reclaims them instead."""
+        if not self.shipped:
+            return 0
+        digests, self.shipped = self.shipped, []
+        try:
+            return self.transport.sweep_orphans(digests)
+        except (TransportError, OSError):
+            return 0
 
 
 class MigrationHandle:
@@ -130,6 +180,10 @@ class MigrationHandle:
         self.target_node_id = target
         self.stats = TransferStats()
         self.error: Optional[BaseException] = None
+        #: True once ``MIGRATE_DONE`` fired — past this point the target
+        #: owns the tenant and the source will finish its teardown even
+        #: if a later step (commit callback, local GC) records an error
+        self.committed = False
         self._done = threading.Event()
 
     @property
@@ -303,8 +357,20 @@ def _populate_target(mgr, inst: ModelInstance,
     return inst
 
 
+def receive_bundle(dst_node, bundle: _Bundle) -> ModelInstance:
+    """Target-side bundle commit: rebuild the hibernated husk and admit
+    it.  This is the single entry point both transports call — the
+    loopback directly, the :class:`~repro.cluster.transport.StoreServer`
+    as its ``BUNDLE`` handler — so socket and in-process migrations are
+    byte-identical from here down."""
+    rebuilt = _rebuild_on_target(dst_node, bundle)
+    dst_node.manager.admit(rebuilt)
+    return rebuilt
+
+
 def migrate_instance(src_node, dst_node, instance_id: str, arch_key: str,
                      *, link_bw_bytes_s: float = 4 << 30,
+                     transport: Optional[Transport] = None,
                      on_commit: Optional[Callable[[], None]] = None,
                      block: bool = True,
                      threaded: bool = True) -> MigrationHandle:
@@ -315,12 +381,25 @@ def migrate_instance(src_node, dst_node, instance_id: str, arch_key: str,
     MIGRATING (handle in flight) or the call raised.  The transfer runs
     on a thread (``threaded=False`` inlines it; ``block`` waits either
     way).  Raises :class:`MigrationError` if the tenant is busy serving
-    or not on a migratable rung.
+    or not on a migratable rung; a transfer failure raised with
+    ``block=True`` carries the handle as ``exc.handle`` so callers can
+    tell a refused fence from a failed target.
+
+    ``transport`` defaults to in-process loopback against ``dst_node``;
+    pass a connected :class:`~repro.cluster.transport.SocketTransport`
+    to move the tenant to a remote :class:`StoreServer` instead (then
+    ``dst_node`` may be ``None``).
     """
     mgr = src_node.manager
-    handle = MigrationHandle(instance_id, src_node.node_id,
-                             dst_node.node_id)
-    peer = StorePeer(mgr.store, dst_node.manager.store,
+    if transport is None:
+        if dst_node is None:
+            raise MigrationError("migration needs a target node or a "
+                                 "connected transport")
+        transport = LoopbackTransport(dst_node=dst_node)
+    target_id = transport.target_node_id or (
+        dst_node.node_id if dst_node is not None else "remote")
+    handle = MigrationHandle(instance_id, src_node.node_id, target_id)
+    peer = StorePeer(mgr.store, transport=transport,
                      link_bw_bytes_s=link_bw_bytes_s)
 
     lock = src_node.engine.instance_lock(instance_id)
@@ -360,30 +439,51 @@ def migrate_instance(src_node, dst_node, instance_id: str, arch_key: str,
             st.meta_bytes = bundle.meta_bytes()
             st.full_snapshot_bytes = sum(
                 m.nbytes for m in bundle.extents.values())
-            digests = {m.digest for m in bundle.extents.values()
-                       if m.digest is not None}
+            digests = sorted(m.digest for m in bundle.extents.values()
+                             if m.digest is not None)
             peer.ship(digests, st)
-            rebuilt = _rebuild_on_target(dst_node, bundle)
             # commit: target first (the tenant must exist somewhere at
             # every instant), then the source forgets + GCs
-            dst_node.manager.admit(rebuilt)
+            peer.transport.send_bundle(bundle)
+            peer.adopted()
             inst.sm.fire(Event.MIGRATE_DONE)
-            mgr.detach(instance_id, target=dst_node.node_id)
-            if on_commit is not None:
-                on_commit()
-            inst.terminate()       # store refs released (GC), REAP gone
-            st.seconds = time.monotonic() - t0
-            handle._finish()
+            handle.committed = True
         except BaseException as e:
             # abort: the source's disk state was never mutated
-            # destructively — fall back to a plain hibernated tenant
+            # destructively — fall back to a plain hibernated tenant;
+            # anything already imported on the target is swept
             try:
-                if inst.state == S.MIGRATING:
-                    inst.sm.fire(Event.MIGRATE_ABORT)
+                peer.release_remote()
             finally:
-                inst.migration = None
-                st.seconds = time.monotonic() - t0
-                handle._finish(error=e)
+                try:
+                    if inst.state == S.MIGRATING:
+                        inst.sm.fire(Event.MIGRATE_ABORT)
+                finally:
+                    inst.migration = None
+                    st.seconds = time.monotonic() - t0
+                    handle._finish(error=e)
+            return
+        # Past MIGRATE_DONE the commit is irrevocable — the target owns
+        # the tenant.  Every source-side step below must be attempted
+        # even if an earlier one fails (crash consistency: a commit
+        # callback blowing up must not leave a DEAD husk holding store
+        # refs and no forwarding address).
+        commit_err: Optional[BaseException] = None
+        try:
+            mgr.detach(instance_id, target=target_id)
+        except BaseException as e:
+            commit_err = e
+        if on_commit is not None:
+            try:
+                on_commit()
+            except BaseException as e:
+                commit_err = commit_err or e
+        try:
+            inst.terminate()       # store refs released (GC), REAP gone
+        except BaseException as e:
+            commit_err = commit_err or e
+        st.seconds = time.monotonic() - t0
+        handle._finish(error=commit_err)
 
     if threaded:
         t = threading.Thread(target=_transfer, daemon=True,
@@ -394,5 +494,7 @@ def migrate_instance(src_node, dst_node, instance_id: str, arch_key: str,
     else:
         _transfer()
     if block and handle.error is not None:
-        raise MigrationError(str(handle.error)) from handle.error
+        err = MigrationError(str(handle.error))
+        err.handle = handle     # lets callers distinguish transfer
+        raise err from handle.error  # failures from fence refusals
     return handle

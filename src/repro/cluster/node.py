@@ -47,6 +47,7 @@ class Node:
                                        shared_loader=shared_loader)
         self.engine = ServingEngine(self.manager)
         self.platform: Optional[AsyncPlatform] = None
+        self.peer_server = None
 
     # ------------------------------------------------------------- surface
     @property
@@ -117,8 +118,29 @@ class Node:
             self.platform.stop()
             self.platform = None
 
+    # ------------------------------------------------------------- network
+    def start_peer_server(self, host: str = "127.0.0.1", port: int = 0):
+        """Expose this node's store + bundle admission to authenticated
+        peers over the binary wire protocol; returns ``(host, port)``.
+        Peers dial it with ``SocketTransport.connect(addr, salt)`` —
+        the handshake proves the shared deployment salt, never ships it."""
+        from repro.cluster.migrate import receive_bundle
+        from repro.cluster.transport import StoreServer
+        if self.store is None:
+            raise RuntimeError("peer server requires the dedup store "
+                               "(ManagerConfig.dedup_store)")
+        if self.peer_server is None:
+            self.peer_server = StoreServer(
+                self.store, node_id=self.node_id,
+                bundle_handler=lambda b: receive_bundle(self, b),
+                host=host, port=port)
+        return self.peer_server.address
+
     def close(self) -> None:
         self.stop()
+        if self.peer_server is not None:
+            self.peer_server.close()
+            self.peer_server = None
         if self.store is not None:
             self.store.close()
 

@@ -62,6 +62,25 @@ class ClusterPolicy:
     #: after migration fails to clear a sustained breach, TERMINATED
     #: eviction of idle hibernated tenants remains the last resort
     terminate_last_resort: bool = True
+    #: per-tenant damping: a tenant that just migrated is not a victim
+    #: again for this long — without it two alternating-breach nodes
+    #: ping-pong the same idle tenant (each move *causes* the next
+    #: breach on the receiver)
+    migration_cooldown_s: float = 30.0
+    #: breach-streak hysteresis as a fraction of the node budget: a
+    #: node's sustained-breach counter only resets once pressure clears
+    #: by this margin, so hovering at the budget edge doesn't restart
+    #: the streak every other round
+    breach_hysteresis: float = 0.0
+    #: transfer failures: try the next-best target up to this many more
+    #: times before giving up on the victim this round
+    migration_retries: int = 2
+    #: a target that failed a transfer is skipped for this long
+    blacklist_cooldown_s: float = 60.0
+    #: each rebalance round sweeps imported-but-never-adopted store
+    #: segments older than this (a peer that died mid-transfer without
+    #: aborting leaves them; see ``SwapStore.sweep_orphans``)
+    orphan_max_age_s: float = 300.0
 
 
 class ClusterRouter:
@@ -85,6 +104,12 @@ class ClusterRouter:
         #: start); the migration tier exists to keep this at zero
         self.evictions = 0
         self._breach: Dict[str, int] = {nid: 0 for nid in self.nodes}
+        #: tenant -> commit time of its last migration (cooldown damping)
+        self._cooldown: Dict[str, float] = {}
+        #: node_id -> timestamp until which it is skipped as a target
+        self._blacklist: Dict[str, float] = {}
+        self.cooldown_skips = 0
+        self.migration_retries = 0
         self._lock = threading.RLock()
         for n in nodes:
             if n.platform is not None:
@@ -249,8 +274,10 @@ class ClusterRouter:
             if m.digest is not None)
 
     def _best_target(self, src: Node, inst, freed: int, idle: float,
-                     now: float) -> Optional[Tuple[Node, float]]:
-        """Highest migration score among peers with room for the husk."""
+                     now: float, exclude=()) -> Optional[Tuple[Node, float]]:
+        """Highest migration score among peers with room for the husk.
+        Blacklisted targets (recent transfer failures) and ``exclude``
+        (targets already tried for this victim) are skipped."""
         gov = src.governor
         digests = self._tenant_digests(src, inst)
         stored = src.store.stored_bytes_of(digests) if src.store else 0
@@ -260,7 +287,9 @@ class ClusterRouter:
         unstored = gov._anon_resident_bytes(inst)
         best: Optional[Tuple[Node, float]] = None
         for node in self.nodes.values():
-            if node is src:
+            if node is src or node.node_id in exclude:
+                continue
+            if self._blacklist.get(node.node_id, -1e18) > now:
                 continue
             # the husk lands hibernated: the target pays its metadata now
             if node.headroom_bytes() < inst.metadata_bytes():
@@ -291,9 +320,18 @@ class ClusterRouter:
         actions: List[tuple] = []
         for nid, node in self.nodes.items():
             gov = node.governor
+            if node.store is not None:
+                node.store.sweep_orphans(
+                    max_age_s=self.policy.orphan_max_age_s)
             gov.step(now=now, try_lock=node.engine.instance_lock)
-            if gov.pressure_bytes() <= 0:
-                self._breach[nid] = 0
+            pressure = gov.pressure_bytes()
+            if pressure <= 0:
+                # hysteresis: only a clear with margin resets the streak —
+                # a node hovering at the budget edge stays "hot" and
+                # escalates on its next breach instead of re-counting
+                budget = gov.budget_bytes or 0
+                if pressure <= -int(self.policy.breach_hysteresis * budget):
+                    self._breach[nid] = 0
                 continue
             self._breach[nid] += 1
             if self._breach[nid] < self.policy.sustained_breach_rounds:
@@ -319,18 +357,38 @@ class ClusterRouter:
             if len(acts) >= self.policy.max_migrations_per_round \
                     or gov.pressure_bytes() <= 0:
                 break
-            pick = self._best_target(node, inst, freed, idle, now)
-            if pick is None:
+            iid = inst.instance_id
+            if now - self._cooldown.get(iid, -1e18) \
+                    < self.policy.migration_cooldown_s:
+                self.cooldown_skips += 1
                 continue
-            target, score = pick
-            try:
-                h = self.migrate(inst.instance_id, target.node_id,
-                                 block=True)
-            except MigrationError:
-                continue                  # raced a request: next victim
-            if h.ok:
-                acts.append(("migrate", inst.instance_id, node.node_id,
-                             target.node_id, score))
+            # bounded retry: a failed transfer blacklists its target and
+            # moves on to the next-best peer (capped), so one sick node
+            # can't absorb every rebalance round
+            tried: set = set()
+            for _attempt in range(self.policy.migration_retries + 1):
+                pick = self._best_target(node, inst, freed, idle, now,
+                                         exclude=tried)
+                if pick is None:
+                    break
+                target, score = pick
+                try:
+                    h = self.migrate(iid, target.node_id, block=True)
+                except MigrationError as e:
+                    if getattr(e, "handle", None) is None:
+                        break             # raced a request: next victim
+                    # the transfer itself failed: target's fault until
+                    # proven otherwise — blacklist and try the next peer
+                    self._blacklist[target.node_id] = \
+                        now + self.policy.blacklist_cooldown_s
+                    tried.add(target.node_id)
+                    self.migration_retries += 1
+                    continue
+                if h.ok or h.committed:
+                    self._cooldown[iid] = now
+                    acts.append(("migrate", iid, node.node_id,
+                                 target.node_id, score))
+                break
         return acts
 
     def _terminate_for_pressure(self, node: Node, now: float) -> List[tuple]:
@@ -361,10 +419,18 @@ class ClusterRouter:
     # ------------------------------------------------------------ accounting
     def migration_stats(self) -> Dict[str, float]:
         done = [h for h in self.handles if h.ok]
+        now = time.monotonic()
         return {
             "migrations": len(done),
             "aborted": sum(1 for h in self.handles
-                           if h.done and not h.ok),
+                           if h.done and not h.ok and not h.committed),
+            "migration_cooldown_s": self.policy.migration_cooldown_s,
+            "breach_hysteresis": self.policy.breach_hysteresis,
+            "cooldown_skips": self.cooldown_skips,
+            "retries": self.migration_retries,
+            "tenants_in_cooldown": len(self._cooldown),
+            "blacklisted_targets": sum(
+                1 for until in self._blacklist.values() if until > now),
             "bytes_shipped": sum(h.stats.bytes_shipped for h in done),
             "meta_bytes": sum(h.stats.meta_bytes for h in done),
             "wire_bytes": sum(h.stats.wire_bytes for h in done),

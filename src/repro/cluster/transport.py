@@ -1,0 +1,452 @@
+"""Transfer channels behind :class:`~repro.cluster.migrate.StorePeer`.
+
+The migration path speaks one small interface — ``Transport`` — with two
+implementations:
+
+* :class:`LoopbackTransport` — two stores in one process; Python objects
+  *are* the wire.  This is the original in-process fabric and the
+  byte-identity reference the socket path is tested against.
+* :class:`SocketTransport` / :class:`StoreServer` — a length-prefixed
+  binary protocol over TCP (see :mod:`repro.cluster.wire` for the frame
+  and value encodings) with chunked segment transfer, a credit window
+  for flow control, and a mutual challenge–response handshake keyed on
+  the deployment salt.
+
+Security stance: the per-deployment store salt is the trust boundary.
+Digests are salted BLAKE2b, so two deployments can never compare content
+addresses; the handshake proves *possession* of the salt on both ends
+via keyed-BLAKE2b over fresh nonces — the salt itself never crosses the
+wire, and a peer from another deployment (or no deployment) fails auth
+before it can name a single digest.  Transport is plaintext TCP for now;
+TLS on the channel is a recorded follow-on (see ROADMAP).
+
+Crash story: the server tracks which segments each connection imported.
+``BUNDLE`` adopting them ends the transfer; a connection that drops
+first gets its never-adopted imports swept on teardown
+(:meth:`SwapStore.sweep_orphans`), so a client killed between
+``import_segments`` and ``adopt_extents`` cannot leak refcount-zero
+payload bytes on the target.
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac
+import os
+import socket
+import struct
+import threading
+from typing import Callable, List, Optional, Tuple
+
+from repro.cluster import wire
+from repro.cluster.wire import (MSG_AUTH, MSG_AUTH_OK, MSG_BUNDLE,
+                                MSG_BUNDLE_OK, MSG_BYE, MSG_ERR,
+                                MSG_HELLO, MSG_MISSING, MSG_MISSING_OK,
+                                MSG_SEGMENTS, MSG_SEGMENTS_OK, MSG_SWEEP,
+                                MSG_SWEEP_OK, PROTOCOL_VERSION)
+
+
+class TransportError(RuntimeError):
+    """The channel failed mid-transfer (connection loss, peer error)."""
+
+
+class AuthError(TransportError):
+    """The peer could not prove possession of the deployment salt."""
+
+
+def _salt_proof(salt: bytes, *parts: bytes) -> bytes:
+    return hashlib.blake2b(b"".join(parts), digest_size=32,
+                           key=salt).digest()
+
+
+class Transport:
+    """Abstract one-way transfer channel to a target node's store."""
+
+    #: node id of the far end (forwarding-address bookkeeping), if known
+    target_node_id: Optional[str] = None
+
+    def authenticate(self, salt: bytes) -> None:
+        """Verify the far end belongs to the deployment ``salt`` names.
+        Raises :class:`AuthError` otherwise."""
+        raise NotImplementedError
+
+    def missing_digests(self, digests: List[bytes]) -> List[bytes]:
+        raise NotImplementedError
+
+    def send_segments(self, items) -> int:
+        """Ship one chunk of ``(digest, level, raw, payload)`` tuples;
+        returns payload bytes handed to the channel.  May be buffered —
+        :meth:`barrier` confirms receipt."""
+        raise NotImplementedError
+
+    def barrier(self) -> None:
+        """Block until every chunk sent so far is installed remotely."""
+
+    def send_bundle(self, bundle) -> None:
+        """Deliver the migration bundle: the far end rebuilds the husk
+        and admits it (the transfer's commit on the target side)."""
+        raise NotImplementedError
+
+    def sweep_orphans(self, digests: List[bytes]) -> int:
+        """Abort path: free never-adopted imports on the target."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class LoopbackTransport(Transport):
+    """Two stores in one process — today's fabric, kept as the default.
+
+    Objects cross by reference; there is no encode/decode step, which is
+    exactly what makes it the byte-identity reference for the socket
+    path (same store mutations, no wire in between)."""
+
+    def __init__(self, dst_store=None, dst_node=None):
+        if dst_store is None and dst_node is None:
+            raise ValueError("loopback needs a target store or node")
+        self.dst_node = dst_node
+        self.dst_store = (dst_store if dst_store is not None
+                          else dst_node.manager.store)
+        self.target_node_id = getattr(dst_node, "node_id", None)
+
+    def authenticate(self, salt: bytes) -> None:
+        if not hmac.compare_digest(salt, self.dst_store.salt):
+            raise AuthError("peer stores use different deployment "
+                            "salts: digests are not comparable")
+
+    def missing_digests(self, digests: List[bytes]) -> List[bytes]:
+        return self.dst_store.missing_digests(digests)
+
+    def send_segments(self, items) -> int:
+        self.dst_store.import_segments(items)
+        return sum(len(p) for _, _, _, p in items)
+
+    def send_bundle(self, bundle) -> None:
+        if self.dst_node is None:
+            raise TransportError("store-only loopback cannot deliver a "
+                                 "bundle (no target node)")
+        from repro.cluster.migrate import receive_bundle  # cycle: lazy
+        receive_bundle(self.dst_node, bundle)
+
+    def sweep_orphans(self, digests: List[bytes]) -> int:
+        return self.dst_store.sweep_orphans(digests)
+
+
+# --------------------------------------------------------------------------
+# socket plumbing
+# --------------------------------------------------------------------------
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise TransportError("connection closed mid-frame")
+        buf += chunk
+    return bytes(buf)
+
+
+def _read_frame(sock: socket.socket) -> Tuple[int, bytes]:
+    try:
+        return wire.read_frame(lambda n: _recv_exact(sock, n))
+    except (OSError, struct.error) as e:
+        raise TransportError(f"recv failed: {e}") from e
+
+
+def _write_frame(sock: socket.socket, msg_type: int,
+                 payload: bytes) -> None:
+    try:
+        sock.sendall(wire.pack_frame(msg_type, payload))
+    except OSError as e:
+        raise TransportError(f"send failed: {e}") from e
+
+
+class SocketTransport(Transport):
+    """Length-prefixed binary channel to a :class:`StoreServer`.
+
+    Segment chunks are pipelined under a credit window (at most
+    ``window`` un-acked ``SEGMENTS`` frames in flight); every other
+    operation is strict request/response, so a :meth:`barrier` drains
+    the window first.  One transport serves any number of sequential
+    migrations — the server's per-connection import ledger resets at
+    each ``BUNDLE``."""
+
+    def __init__(self, sock: socket.socket, *, window: int = 4):
+        self.sock = sock
+        self.window = max(1, window)
+        self._unacked = 0
+        self._salt_fp: Optional[bytes] = None   # blake2b(salt) fingerprint
+        self._lock = threading.Lock()
+        self._closed = False
+
+    # ------------------------------------------------------------ connect
+    @classmethod
+    def connect(cls, addr: Tuple[str, int], salt: bytes, *,
+                node_id: str = "", window: int = 4,
+                timeout: float = 30.0) -> "SocketTransport":
+        """Dial a :class:`StoreServer` and run the salt handshake.
+
+        Server sends ``HELLO{proto, node_id, nonce_s}``; we answer
+        ``AUTH{node_id, nonce_c, proof}`` where the proof is
+        keyed-BLAKE2b(salt, nonce_s‖nonce_c‖"client"); the server's
+        ``AUTH_OK`` carries the mirrored proof so auth is mutual."""
+        sock = socket.create_connection(addr, timeout=timeout)
+        sock.settimeout(timeout)
+        try:
+            t = cls(sock, window=window)
+            mt, payload = _read_frame(sock)
+            if mt != MSG_HELLO:
+                raise AuthError("peer did not speak HELLO")
+            hello = wire.decode_value(payload)
+            if hello.get("proto") != PROTOCOL_VERSION:
+                raise TransportError(
+                    f"protocol {hello.get('proto')} != "
+                    f"{PROTOCOL_VERSION}")
+            nonce_s = hello["nonce"]
+            nonce_c = os.urandom(16)
+            _write_frame(sock, MSG_AUTH, wire.encode_value({
+                "node_id": node_id, "nonce": nonce_c,
+                "proof": _salt_proof(salt, nonce_s, nonce_c, b"client"),
+            }))
+            mt, payload = _read_frame(sock)
+            if mt == MSG_ERR:
+                raise AuthError(wire.decode_value(payload).get(
+                    "error", "auth rejected"))
+            if mt != MSG_AUTH_OK:
+                raise AuthError("handshake out of order")
+            ok = wire.decode_value(payload)
+            want = _salt_proof(salt, nonce_c, nonce_s, b"server")
+            if not hmac.compare_digest(ok.get("proof", b""), want):
+                raise AuthError("server failed the salt proof — "
+                                "different deployment")
+            t.target_node_id = hello.get("node_id") or None
+            t._salt_fp = hashlib.blake2b(salt, digest_size=16).digest()
+            return t
+        except BaseException:
+            sock.close()
+            raise
+
+    # ------------------------------------------------------------ helpers
+    def authenticate(self, salt: bytes) -> None:
+        fp = hashlib.blake2b(salt, digest_size=16).digest()
+        if self._salt_fp is None or not hmac.compare_digest(
+                fp, self._salt_fp):
+            raise AuthError("channel was authenticated for a different "
+                            "deployment salt")
+
+    def _recv_ack(self, expect: int):
+        mt, payload = _read_frame(self.sock)
+        if mt == MSG_ERR:
+            raise TransportError(
+                wire.decode_value(payload).get("error", "peer error"))
+        if mt != expect:
+            raise TransportError(f"unexpected frame 0x{mt:02x} "
+                                 f"(wanted 0x{expect:02x})")
+        return wire.decode_value(payload)
+
+    def _drain(self, down_to: int = 0) -> None:
+        while self._unacked > down_to:
+            self._recv_ack(MSG_SEGMENTS_OK)
+            self._unacked -= 1
+
+    # ----------------------------------------------------------- Transport
+    def missing_digests(self, digests: List[bytes]) -> List[bytes]:
+        with self._lock:
+            self._drain()
+            _write_frame(self.sock, MSG_MISSING,
+                         wire.encode_value(list(digests)))
+            resp = self._recv_ack(MSG_MISSING_OK)
+        out = []
+        for d in resp:
+            if not isinstance(d, bytes):
+                raise TransportError("malformed MISSING_OK")
+            out.append(d)
+        return out
+
+    def send_segments(self, items) -> int:
+        payload = wire.encode_segments(items)
+        with self._lock:
+            self._drain(self.window - 1)    # credit window
+            _write_frame(self.sock, MSG_SEGMENTS, payload)
+            self._unacked += 1
+        return sum(len(p) for _, _, _, p in items)
+
+    def barrier(self) -> None:
+        with self._lock:
+            self._drain()
+
+    def send_bundle(self, bundle) -> None:
+        with self._lock:
+            self._drain()
+            _write_frame(self.sock, MSG_BUNDLE, wire.encode_bundle(bundle))
+            self._recv_ack(MSG_BUNDLE_OK)
+
+    def sweep_orphans(self, digests: List[bytes]) -> int:
+        with self._lock:
+            self._drain()
+            _write_frame(self.sock, MSG_SWEEP,
+                         wire.encode_value(list(digests)))
+            resp = self._recv_ack(MSG_SWEEP_OK)
+        return int(resp.get("freed", 0))
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            try:
+                self._drain()
+                _write_frame(self.sock, MSG_BYE, b"")
+            except TransportError:
+                pass
+            finally:
+                self.sock.close()
+
+
+class StoreServer:
+    """Accept loop exposing one node's store (and bundle admission) to
+    authenticated peers.  One thread per connection; frames within a
+    connection are processed strictly in order, which is what makes the
+    client's credit window a real backpressure signal (an ack means the
+    segments are on disk, not merely buffered)."""
+
+    def __init__(self, store, *, node_id: str = "",
+                 bundle_handler: Optional[Callable] = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.store = store
+        self.node_id = node_id
+        self.bundle_handler = bundle_handler
+        self._listener = socket.create_server((host, port))
+        self.address: Tuple[str, int] = self._listener.getsockname()[:2]
+        self._closing = threading.Event()
+        self._conns: List[socket.socket] = []
+        self._lock = threading.Lock()
+        self._threads: List[threading.Thread] = []
+        self.auth_failures = 0
+        self.transfers = 0
+        self.orphans_swept = 0
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True,
+            name=f"store-server-{node_id or self.address[1]}")
+        self._accept_thread.start()
+
+    # ------------------------------------------------------------- accept
+    def _accept_loop(self) -> None:
+        while not self._closing.is_set():
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return                      # listener closed
+            with self._lock:
+                if self._closing.is_set():
+                    sock.close()
+                    return
+                self._conns.append(sock)
+            t = threading.Thread(target=self._serve_conn, args=(sock,),
+                                 daemon=True, name="store-peer-conn")
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, sock: socket.socket) -> None:
+        imported: set = set()
+        try:
+            sock.settimeout(60.0)
+            if not self._handshake(sock):
+                return
+            while True:
+                try:
+                    mt, payload = _read_frame(sock)
+                except TransportError:
+                    return                  # peer vanished: finally sweeps
+                if mt == MSG_BYE:
+                    return
+                try:
+                    self._dispatch(sock, mt, payload, imported)
+                except (wire.WireError, KeyError, TransportError,
+                        RuntimeError) as e:
+                    _write_frame(sock, MSG_ERR, wire.encode_value(
+                        {"error": f"{type(e).__name__}: {e}"}))
+        except (OSError, TransportError):
+            pass
+        finally:
+            # crash consistency: a connection that dies after importing
+            # but before its bundle was adopted leaves orphans — reclaim
+            if imported:
+                self.orphans_swept += len(imported)
+                self.store.sweep_orphans(imported)
+            sock.close()
+            with self._lock:
+                if sock in self._conns:
+                    self._conns.remove(sock)
+
+    def _handshake(self, sock: socket.socket) -> bool:
+        nonce_s = os.urandom(16)
+        _write_frame(sock, MSG_HELLO, wire.encode_value({
+            "proto": PROTOCOL_VERSION, "node_id": self.node_id,
+            "nonce": nonce_s}))
+        mt, payload = _read_frame(sock)
+        if mt != MSG_AUTH:
+            self.auth_failures += 1
+            _write_frame(sock, MSG_ERR,
+                         wire.encode_value({"error": "expected AUTH"}))
+            return False
+        auth = wire.decode_value(payload)
+        nonce_c = auth.get("nonce", b"")
+        want = _salt_proof(self.store.salt, nonce_s, nonce_c, b"client")
+        if not isinstance(nonce_c, bytes) or not hmac.compare_digest(
+                auth.get("proof", b""), want):
+            self.auth_failures += 1
+            _write_frame(sock, MSG_ERR, wire.encode_value(
+                {"error": "salt proof failed: different deployment"}))
+            return False
+        _write_frame(sock, MSG_AUTH_OK, wire.encode_value({
+            "proof": _salt_proof(self.store.salt, nonce_c, nonce_s,
+                                 b"server")}))
+        return True
+
+    def _dispatch(self, sock, mt: int, payload: bytes,
+                  imported: set) -> None:
+        if mt == MSG_MISSING:
+            digests = wire.decode_value(payload)
+            _write_frame(sock, MSG_MISSING_OK, wire.encode_value(
+                self.store.missing_digests(digests)))
+        elif mt == MSG_SEGMENTS:
+            items = wire.decode_segments(payload)
+            new = self.store.import_segments(items)
+            imported.update(new)
+            _write_frame(sock, MSG_SEGMENTS_OK,
+                         wire.encode_value({"imported": len(new)}))
+        elif mt == MSG_BUNDLE:
+            if self.bundle_handler is None:
+                raise TransportError("node does not accept migrations")
+            bundle = wire.decode_bundle(payload)
+            self.bundle_handler(bundle)
+            imported.clear()                # adopted: no longer orphans
+            self.transfers += 1
+            _write_frame(sock, MSG_BUNDLE_OK, wire.encode_value({}))
+        elif mt == MSG_SWEEP:
+            digests = wire.decode_value(payload)
+            freed = self.store.sweep_orphans(digests)
+            imported.difference_update(digests)
+            _write_frame(sock, MSG_SWEEP_OK,
+                         wire.encode_value({"freed": freed}))
+        else:
+            raise TransportError(f"unknown message 0x{mt:02x}")
+
+    # -------------------------------------------------------------- close
+    def close(self) -> None:
+        self._closing.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        self._accept_thread.join(timeout=5.0)
+        for t in self._threads:
+            t.join(timeout=5.0)

@@ -1,0 +1,370 @@
+"""Canonical binary wire format for the cluster fabric.
+
+Everything StorePeer moves between nodes — unit keys, ``UnitMeta``
+extent tables, ``_Bundle`` migration metadata, segment payloads — has an
+in-process representation made of Python tuples and dataclasses.  This
+module defines the *wire-safe* encoding of those values: a type-tagged,
+length-prefixed binary codec with one canonical byte string per value,
+so digest tables and REAP key orders round-trip bit-exact between
+deployments built on different hosts.
+
+Design rules:
+
+* **Self-describing** — every value carries a one-byte type tag; the
+  decoder never needs out-of-band schema.
+* **Canonical** — a given value has exactly one encoding.  Varints are
+  minimal-length, floats are big-endian IEEE-754 doubles, and the only
+  unordered container (``frozenset``) is serialised with its elements'
+  *encodings* sorted, so ``encode(decode(b)) == b`` for any valid ``b``.
+  Dicts and lists preserve order (REAP first-touch order is load-bearing
+  for the streamed wake pipeline).
+* **Bounded** — the decoder enforces nesting and size limits so a
+  malformed or hostile peer cannot balloon memory before auth completes.
+
+Framing (``pack_frame`` / ``unpack_frame``) is a plain
+``u32 length | u8 msg-type | payload`` envelope used by the socket
+transport; the loopback transport never touches it.
+
+The one non-wire-safe bundle field is ``compiled`` — jitted executables
+stand in for a node-shared compilation cache and only transfer by
+reference in-process.  ``encode_bundle`` drops them; a migrant arriving
+over a real socket re-JITs against the target's compilation cache.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, List, Tuple
+
+import numpy as np
+
+from repro.core.store import UnitMeta
+
+PROTOCOL_VERSION = 1
+
+#: hard ceiling on one frame (payloads are chunked well below this)
+MAX_FRAME_BYTES = 256 << 20
+#: recursion guard for nested containers
+MAX_DEPTH = 32
+
+# value type tags -----------------------------------------------------------
+_T_NONE = 0x00
+_T_FALSE = 0x01
+_T_TRUE = 0x02
+_T_INT = 0x03      # zigzag varint
+_T_FLOAT = 0x04    # big-endian IEEE-754 double
+_T_STR = 0x05      # varint length + utf-8
+_T_BYTES = 0x06    # varint length + raw
+_T_TUPLE = 0x07    # varint count + values
+_T_LIST = 0x08     # varint count + values
+_T_DICT = 0x09     # varint count + key/value pairs, insertion order
+_T_FSET = 0x0A     # varint count + element encodings, sorted bytewise
+_T_META = 0x0B     # UnitMeta: digest, fill, nbytes, dtype, shape
+
+# frame message types -------------------------------------------------------
+MSG_HELLO = 0x10       # server -> client: {proto, node_id, nonce}
+MSG_AUTH = 0x11        # client -> server: {node_id, nonce, proof}
+MSG_AUTH_OK = 0x12     # server -> client: {proof}  (mutual)
+MSG_MISSING = 0x13     # client -> server: [digests]
+MSG_MISSING_OK = 0x14  # server -> client: [missing digests]
+MSG_SEGMENTS = 0x15    # client -> server: [(digest, level, raw, payload)]
+MSG_SEGMENTS_OK = 0x16 # server -> client: {imported}   (flow-control ack)
+MSG_BUNDLE = 0x17      # client -> server: encoded bundle
+MSG_BUNDLE_OK = 0x18   # server -> client: {}
+MSG_SWEEP = 0x19       # client -> server: [digests] to orphan-sweep
+MSG_SWEEP_OK = 0x1A    # server -> client: {freed}
+MSG_BYE = 0x1B         # client -> server: clean shutdown
+MSG_ERR = 0x1C         # either direction: {error}
+
+
+class WireError(ValueError):
+    """Malformed, non-canonical, or oversized wire data."""
+
+
+# --------------------------------------------------------------------------
+# varints
+# --------------------------------------------------------------------------
+
+def _put_uvarint(out: bytearray, n: int) -> None:
+    while n >= 0x80:
+        out.append((n & 0x7F) | 0x80)
+        n >>= 7
+    out.append(n)
+
+
+def _get_uvarint(buf, pos: int) -> Tuple[int, int]:
+    shift = 0
+    n = 0
+    while True:
+        if pos >= len(buf):
+            raise WireError("truncated varint")
+        b = buf[pos]
+        pos += 1
+        n |= (b & 0x7F) << shift
+        if not b & 0x80:
+            if b == 0 and shift:
+                raise WireError("non-canonical varint (padded)")
+            return n, pos
+        shift += 7
+        if shift > 63:
+            raise WireError("varint overflow")
+
+
+def _zigzag(n: int) -> int:
+    if not -(1 << 63) <= n < (1 << 63):
+        raise WireError("int out of 64-bit range")
+    return (n << 1) ^ (n >> 63)
+
+
+def _unzigzag(n: int) -> int:
+    return (n >> 1) ^ -(n & 1)
+
+
+# --------------------------------------------------------------------------
+# values
+# --------------------------------------------------------------------------
+
+def _encode_into(out: bytearray, v: Any, depth: int) -> None:
+    if depth > MAX_DEPTH:
+        raise WireError("value nests too deep")
+    if v is None:
+        out.append(_T_NONE)
+    elif v is True:
+        out.append(_T_TRUE)
+    elif v is False:
+        out.append(_T_FALSE)
+    elif isinstance(v, (int, np.integer)):
+        # numpy scalars canonicalise to plain ints (token ids, fills)
+        out.append(_T_INT)
+        _put_uvarint(out, _zigzag(int(v)))
+    elif isinstance(v, (float, np.floating)):
+        out.append(_T_FLOAT)
+        out += struct.pack(">d", float(v))
+    elif isinstance(v, str):
+        raw = v.encode("utf-8")
+        out.append(_T_STR)
+        _put_uvarint(out, len(raw))
+        out += raw
+    elif isinstance(v, (bytes, bytearray, memoryview)):
+        raw = bytes(v)
+        out.append(_T_BYTES)
+        _put_uvarint(out, len(raw))
+        out += raw
+    elif isinstance(v, UnitMeta):
+        out.append(_T_META)
+        _encode_into(out, v.digest, depth + 1)
+        _put_uvarint(out, _zigzag(v.fill))
+        _put_uvarint(out, v.nbytes)
+        raw = v.dtype.encode("utf-8")
+        _put_uvarint(out, len(raw))
+        out += raw
+        _put_uvarint(out, len(v.shape))
+        for d in v.shape:
+            _put_uvarint(out, d)
+    elif isinstance(v, tuple):
+        out.append(_T_TUPLE)
+        _put_uvarint(out, len(v))
+        for x in v:
+            _encode_into(out, x, depth + 1)
+    elif isinstance(v, list):
+        out.append(_T_LIST)
+        _put_uvarint(out, len(v))
+        for x in v:
+            _encode_into(out, x, depth + 1)
+    elif isinstance(v, dict):
+        out.append(_T_DICT)
+        _put_uvarint(out, len(v))
+        for k, x in v.items():
+            _encode_into(out, k, depth + 1)
+            _encode_into(out, x, depth + 1)
+    elif isinstance(v, frozenset):
+        encs = []
+        for x in v:
+            e = bytearray()
+            _encode_into(e, x, depth + 1)
+            encs.append(bytes(e))
+        encs.sort()
+        out.append(_T_FSET)
+        _put_uvarint(out, len(encs))
+        for e in encs:
+            out += e
+    else:
+        raise WireError(f"type {type(v).__name__} is not wire-safe")
+
+
+def encode_value(v: Any) -> bytes:
+    """Canonical encoding of one wire-safe value."""
+    out = bytearray()
+    _encode_into(out, v, 0)
+    return bytes(out)
+
+
+def _decode_at(buf, pos: int, depth: int) -> Tuple[Any, int]:
+    if depth > MAX_DEPTH:
+        raise WireError("value nests too deep")
+    if pos >= len(buf):
+        raise WireError("truncated value")
+    tag = buf[pos]
+    pos += 1
+    if tag == _T_NONE:
+        return None, pos
+    if tag == _T_TRUE:
+        return True, pos
+    if tag == _T_FALSE:
+        return False, pos
+    if tag == _T_INT:
+        n, pos = _get_uvarint(buf, pos)
+        return _unzigzag(n), pos
+    if tag == _T_FLOAT:
+        if pos + 8 > len(buf):
+            raise WireError("truncated float")
+        return struct.unpack_from(">d", buf, pos)[0], pos + 8
+    if tag in (_T_STR, _T_BYTES):
+        n, pos = _get_uvarint(buf, pos)
+        if pos + n > len(buf):
+            raise WireError("truncated string/bytes")
+        raw = bytes(buf[pos:pos + n])
+        pos += n
+        return (raw.decode("utf-8") if tag == _T_STR else raw), pos
+    if tag == _T_META:
+        digest, pos = _decode_at(buf, pos, depth + 1)
+        if digest is not None and not isinstance(digest, bytes):
+            raise WireError("UnitMeta.digest must be bytes or None")
+        fill, pos = _get_uvarint(buf, pos)
+        nbytes, pos = _get_uvarint(buf, pos)
+        n, pos = _get_uvarint(buf, pos)
+        if pos + n > len(buf):
+            raise WireError("truncated dtype")
+        dtype = bytes(buf[pos:pos + n]).decode("utf-8")
+        pos += n
+        rank, pos = _get_uvarint(buf, pos)
+        if rank > 64:
+            raise WireError("absurd tensor rank")
+        shape = []
+        for _ in range(rank):
+            d, pos = _get_uvarint(buf, pos)
+            shape.append(d)
+        return UnitMeta(digest=digest, fill=_unzigzag(fill),
+                        nbytes=nbytes, dtype=dtype,
+                        shape=tuple(shape)), pos
+    if tag in (_T_TUPLE, _T_LIST):
+        n, pos = _get_uvarint(buf, pos)
+        items = []
+        for _ in range(n):
+            x, pos = _decode_at(buf, pos, depth + 1)
+            items.append(x)
+        return (tuple(items) if tag == _T_TUPLE else items), pos
+    if tag == _T_DICT:
+        n, pos = _get_uvarint(buf, pos)
+        d = {}
+        for _ in range(n):
+            k, pos = _decode_at(buf, pos, depth + 1)
+            v, pos = _decode_at(buf, pos, depth + 1)
+            d[k] = v
+        if len(d) != n:
+            raise WireError("duplicate dict key")
+        return d, pos
+    if tag == _T_FSET:
+        n, pos = _get_uvarint(buf, pos)
+        items = []
+        prev = b""
+        for _ in range(n):
+            start = pos
+            x, pos = _decode_at(buf, pos, depth + 1)
+            enc = bytes(buf[start:pos])
+            if enc <= prev and items:
+                raise WireError("frozenset elements not canonically "
+                                "sorted")
+            prev = enc
+            items.append(x)
+        fs = frozenset(items)
+        if len(fs) != n:
+            raise WireError("duplicate frozenset element")
+        return fs, pos
+    raise WireError(f"unknown type tag 0x{tag:02x}")
+
+
+def decode_value(buf) -> Any:
+    """Decode one value; the buffer must hold exactly one value."""
+    v, pos = _decode_at(buf, 0, 0)
+    if pos != len(buf):
+        raise WireError(f"{len(buf) - pos} trailing bytes after value")
+    return v
+
+
+# --------------------------------------------------------------------------
+# segments
+# --------------------------------------------------------------------------
+
+def encode_segments(items) -> bytes:
+    """``[(digest, level, raw_nbytes, payload), ...]`` — the exact tuple
+    shape ``SwapStore.export_segments`` emits and ``import_segments``
+    accepts."""
+    return encode_value([(d, int(level), int(raw), bytes(payload))
+                         for d, level, raw, payload in items])
+
+
+def decode_segments(buf) -> List[Tuple[bytes, int, int, bytes]]:
+    items = decode_value(buf)
+    if not isinstance(items, list):
+        raise WireError("segment chunk must be a list")
+    out = []
+    for it in items:
+        if (not isinstance(it, tuple) or len(it) != 4
+                or not isinstance(it[0], bytes)
+                or not isinstance(it[1], int)
+                or not isinstance(it[2], int)
+                or not isinstance(it[3], bytes)):
+            raise WireError("malformed segment tuple")
+        out.append(it)
+    return out
+
+
+# --------------------------------------------------------------------------
+# bundles
+# --------------------------------------------------------------------------
+
+_BUNDLE_FIELDS = ("instance_id", "arch_key", "base_id", "shared_paths",
+                  "extents", "reap_order", "stable", "misses",
+                  "kv_sessions", "last_used", "created_at", "arrival",
+                  "wire_keys")
+
+
+def encode_bundle(bundle) -> bytes:
+    """Encode a migration ``_Bundle``.  ``compiled`` does not cross the
+    wire (executables are host-local; see module docstring)."""
+    body = tuple(getattr(bundle, f) for f in _BUNDLE_FIELDS)
+    return encode_value((PROTOCOL_VERSION,) + body)
+
+
+def decode_bundle(buf):
+    from repro.cluster.migrate import _Bundle  # import cycle: call-time
+    body = decode_value(buf)
+    if not isinstance(body, tuple) or len(body) != len(_BUNDLE_FIELDS) + 1:
+        raise WireError("malformed bundle")
+    if body[0] != PROTOCOL_VERSION:
+        raise WireError(f"bundle protocol {body[0]} != "
+                        f"{PROTOCOL_VERSION}")
+    return _Bundle(**dict(zip(_BUNDLE_FIELDS, body[1:])))
+
+
+# --------------------------------------------------------------------------
+# frames
+# --------------------------------------------------------------------------
+
+_FRAME_HDR = struct.Struct(">IB")
+
+
+def pack_frame(msg_type: int, payload: bytes) -> bytes:
+    if len(payload) > MAX_FRAME_BYTES:
+        raise WireError(f"frame payload {len(payload)}B exceeds "
+                        f"{MAX_FRAME_BYTES}B")
+    return _FRAME_HDR.pack(len(payload), msg_type) + payload
+
+
+def read_frame(recv_exact) -> Tuple[int, bytes]:
+    """Read one frame via ``recv_exact(n) -> bytes`` (raises on EOF)."""
+    hdr = recv_exact(_FRAME_HDR.size)
+    length, msg_type = _FRAME_HDR.unpack(hdr)
+    if length > MAX_FRAME_BYTES:
+        raise WireError(f"frame length {length}B exceeds cap")
+    return msg_type, recv_exact(length)

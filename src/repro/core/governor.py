@@ -388,9 +388,9 @@ class MemoryGovernor:
             before = self._anon_resident_bytes(inst) \
                 + self._mmap_benefit(inst)
             rung_from = inst.rung
-            hib = self.manager.hib
+            # the ladder speaks the manager's rung-addressed descend API
             if rung_to == Rung.MMAP_CLEAN:
-                st = hib.deflate_mmap(inst)
+                st = self.manager.descend(iid, rung_to)
                 freed = st.shared_bytes_released
             elif rung_to == Rung.PARTIAL:
                 # a bite never goes below min_partial_bytes: for a tiny
@@ -402,14 +402,15 @@ class MemoryGovernor:
                         break
                     victims.append(key)
                     tot += nb
-                st = hib.deflate_partial(inst, victims)
+                st = self.manager.descend(iid, rung_to, keys=victims)
                 freed = st.swap_bytes + st.shared_bytes_released
             elif rung_to == Rung.HIBERNATED:
-                st = hib.deflate(inst)
+                st = self.manager.descend(iid, rung_to)
                 freed = before
             else:                        # TERMINATED
                 freed = inst.metadata_bytes()
-                self.manager.evict(iid)  # also forgets our arrival model
+                # descend(TERMINATED) evicts (also forgets our arrivals)
+                self.manager.descend(iid, rung_to)
             act = GovernorAction(iid, rung_from, rung_to, freed, score,
                                  time.monotonic() - t0)
             return act

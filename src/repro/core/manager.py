@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -26,7 +27,8 @@ from repro.core.hibernate import HibernationManager
 from repro.core.inflate import InflatorPool
 from repro.core.instance import ModelInstance
 from repro.core.pool import PagePool
-from repro.core.state import ContainerState, Event
+from repro.core.state import (DEFLATE_EVENT_FOR, ContainerState, Event,
+                              Rung)
 from repro.core.store import StorePolicy, SwapStore
 
 #: ladder states a wake (request-driven or predictive) climbs out of
@@ -184,16 +186,67 @@ class InstanceManager:
         self.events.append((time.monotonic(), "cold_start", instance_id))
         return inst
 
+    def descend(self, instance_id: str, rung, *, keys=None):
+        """Walk one tenant down the deflation ladder to ``rung``.
+
+        The single rung-addressed entry point the governor, router, and
+        gateway all speak — ``rung`` is a :class:`~repro.core.state.Rung`
+        and dispatch is validated against ``DEFLATE_EVENT_FOR`` (an
+        unreachable rung for the tenant's current state raises
+        ``InvalidTransition`` from the state machine, exactly like the
+        underlying event would).
+
+        * ``Rung.MMAP_CLEAN`` — drop the clean file-backed mmap bytes.
+        * ``Rung.PARTIAL`` — swap out ``keys`` (cold unit keys); when
+          ``keys`` is None the governor's partial-victim scan picks the
+          coldest units, so callers without their own victim policy get
+          the ladder's.
+        * ``Rung.HIBERNATED`` — full deflate (working set to REAP +
+          store, host state dropped).
+        * ``Rung.TERMINATED`` — evict: the container is destroyed.
+
+        Returns the rung's ``DeflateStats`` (``None`` for TERMINATED).
+        """
+        rung = Rung(rung)
+        if rung not in DEFLATE_EVENT_FOR:
+            raise ValueError(f"{rung!r} is not a deflation target")
+        inst = self.instances[instance_id]
+        if rung == Rung.TERMINATED:
+            self.evict(instance_id)
+            return None
+        if rung == Rung.MMAP_CLEAN:
+            return self.hib.deflate_mmap(inst)
+        if rung == Rung.PARTIAL:
+            if keys is None:
+                keys = [k for _, _, k in
+                        self.governor._partial_candidates(inst)]
+            return self.hib.deflate_partial(inst, keys)
+        return self.hib.deflate(inst)
+
+    # -- deprecated shims (pre-descend API) ------------------------------
     def deflate(self, instance_id: str):
-        return self.hib.deflate(self.instances[instance_id])
+        """Deprecated: use ``descend(instance_id, Rung.HIBERNATED)``."""
+        warnings.warn(
+            "InstanceManager.deflate is deprecated; use "
+            "descend(instance_id, Rung.HIBERNATED)",
+            DeprecationWarning, stacklevel=2)
+        return self.descend(instance_id, Rung.HIBERNATED)
 
     def deflate_mmap(self, instance_id: str):
-        """Ladder rung 1: clean the instance's file-backed mmap only."""
-        return self.hib.deflate_mmap(self.instances[instance_id])
+        """Deprecated: use ``descend(instance_id, Rung.MMAP_CLEAN)``."""
+        warnings.warn(
+            "InstanceManager.deflate_mmap is deprecated; use "
+            "descend(instance_id, Rung.MMAP_CLEAN)",
+            DeprecationWarning, stacklevel=2)
+        return self.descend(instance_id, Rung.MMAP_CLEAN)
 
     def deflate_partial(self, instance_id: str, keys):
-        """Ladder rung 2: swap out the given cold unit keys only."""
-        return self.hib.deflate_partial(self.instances[instance_id], keys)
+        """Deprecated: use ``descend(instance_id, Rung.PARTIAL, keys=...)``."""
+        warnings.warn(
+            "InstanceManager.deflate_partial is deprecated; use "
+            "descend(instance_id, Rung.PARTIAL, keys=keys)",
+            DeprecationWarning, stacklevel=2)
+        return self.descend(instance_id, Rung.PARTIAL, keys=keys)
 
     def ensure_awake(self, instance_id: str, trigger: str = "request",
                      priority: Optional[str] = None):

@@ -40,6 +40,7 @@ from __future__ import annotations
 import hashlib
 import os
 import threading
+import time
 import zlib
 from dataclasses import dataclass
 from typing import (Callable, Dict, Hashable, List, Optional, Sequence,
@@ -86,6 +87,11 @@ class _Segment:
     level: int                   # zlib level the payload is stored at (0=raw)
     refs: int = 0
     tried_level: int = 0         # highest level ever attempted (anti-thrash)
+    #: set when a peer transfer installed this segment at refcount zero
+    #: and no adopt_extents has claimed it yet — a transfer that dies
+    #: between import and adopt leaves these, and the orphan sweep
+    #: (:meth:`SwapStore.sweep_orphans`) reclaims them
+    imported_at: Optional[float] = None
 
 
 @dataclass
@@ -263,6 +269,7 @@ class SwapStore:
                 r.dedup_bytes = len(buf)
                 self._maybe_sink(seg, level)
             seg.refs += 1
+            seg.imported_at = None      # a local writer now references it
             client.extents[key] = UnitMeta(
                 digest, 0, len(buf), str(arr.dtype), arr.shape)
             return r
@@ -376,25 +383,48 @@ class SwapStore:
                 out.append((d, seg.level, seg.raw_nbytes, blob))
         return out
 
+    def export_segments_iter(self, digests, chunk_bytes: int = 4 << 20):
+        """Chunked :meth:`export_segments`: yields wire-tuple batches of
+        ~``chunk_bytes`` stored payload each, so a multi-GB transfer
+        streams through bounded memory and the transport can apply
+        flow control per chunk instead of per migration."""
+        batch: List[bytes] = []
+        pending = 0
+        for d in digests:
+            with self._lock:
+                seg = self._segments.get(d)
+                size = seg.stored_nbytes if seg is not None else 0
+            batch.append(d)
+            pending += size
+            if pending >= chunk_bytes:
+                yield self.export_segments(batch)
+                batch, pending = [], 0
+        if batch:
+            yield self.export_segments(batch)
+
     def import_segments(self, items: Sequence[Tuple[bytes, int, int, bytes]]
-                        ) -> int:
+                        ) -> List[bytes]:
         """Install wire segments from a peer at refcount zero; the
         follow-up :meth:`adopt_extents` call takes the references.  The
         digest is the *cluster-wide* content address, so both stores must
         share a salt (the router seeds every node from one deployment
-        salt).  Returns new on-disk bytes written."""
-        new = 0
+        salt).  Newly installed segments are stamped ``imported_at`` and
+        stay orphans until adopted; returns their digests so the transfer
+        channel can sweep them if the migration aborts mid-bundle."""
+        new: List[bytes] = []
+        now = time.monotonic()
         with self._lock:
             for digest, level, raw_nbytes, payload in items:
                 if digest in self._segments:
                     self.dedup_hits += 1
                     continue
                 seg = _Segment(self._alloc(len(payload)), len(payload),
-                               raw_nbytes, level, refs=0, tried_level=level)
+                               raw_nbytes, level, refs=0, tried_level=level,
+                               imported_at=now)
                 os.pwrite(self.fd, payload, seg.offset)
                 self.bytes_written += len(payload)
                 self.writes += 1
-                new += len(payload)
+                new.append(digest)
                 self._segments[digest] = seg
         return new
 
@@ -422,9 +452,47 @@ class SwapStore:
             for key, meta in metas.items():
                 self._drop_meta(c.extents.pop(key, None))
                 if meta.digest is not None:
-                    self._segments[meta.digest].refs += 1
+                    seg = self._segments[meta.digest]
+                    seg.refs += 1
+                    seg.imported_at = None      # adopted: no longer orphan
                 c.extents[key] = meta
             return c
+
+    def orphan_digests(self, max_age_s: float = 0.0) -> List[bytes]:
+        """Imported-but-never-adopted segments at least ``max_age_s``
+        old — what a dead transfer left behind."""
+        cutoff = time.monotonic() - max_age_s
+        with self._lock:
+            return [d for d, s in self._segments.items()
+                    if s.refs <= 0 and s.imported_at is not None
+                    and s.imported_at <= cutoff]
+
+    def sweep_orphans(self, digests=None, max_age_s: float = 0.0) -> int:
+        """Free orphaned imports (refcount zero, ``imported_at`` set).
+
+        A transfer that dies between :meth:`import_segments` and
+        :meth:`adopt_extents` leaves payload bytes no client references;
+        the aborting peer sweeps the digests it shipped, and the server's
+        connection teardown (or a periodic pass with ``max_age_s``)
+        catches peers that vanished without aborting.  Segments that were
+        adopted, or that a local writer has since referenced, are never
+        touched.  Returns on-disk bytes reclaimed."""
+        cutoff = time.monotonic() - max_age_s
+        freed = 0
+        with self._lock:
+            if digests is None:
+                digests = [d for d, s in self._segments.items()
+                           if s.imported_at is not None]
+            for d in list(digests):
+                seg = self._segments.get(d)
+                if (seg is None or seg.refs > 0
+                        or seg.imported_at is None
+                        or seg.imported_at > cutoff):
+                    continue
+                del self._segments[d]
+                self._release_extent(seg.offset, seg.stored_nbytes)
+                freed += seg.stored_nbytes
+        return freed
 
     # ------------------------------------------------------------- GC
     def _drop_meta(self, meta: Optional[UnitMeta]) -> None:

@@ -1,10 +1,16 @@
-from repro.serving.engine import Request, Response, ServingEngine
+from repro.serving.engine import (SLO_BATCH, SLO_INTERACTIVE, Request,
+                                  Response, ServingEngine)
+from repro.serving.frontdoor import (Backpressure, FrontDoor,
+                                     FrontDoorPolicy, TokenStream)
+from repro.serving.gateway import Gateway
 from repro.serving.paged_kv import KVSession, PagedKVCache
 from repro.serving.scheduler import (AdmissionError, AsyncPlatform,
                                      Platform, PlatformPolicy)
 
 __all__ = ["Request", "Response", "ServingEngine", "KVSession",
            "PagedKVCache", "AdmissionError", "AsyncPlatform",
-           "Platform", "PlatformPolicy"]
+           "Platform", "PlatformPolicy", "SLO_INTERACTIVE", "SLO_BATCH",
+           "FrontDoor", "FrontDoorPolicy", "TokenStream", "Backpressure",
+           "Gateway"]
 # repro.serving.paged_backend bridges the cache to the Pallas kernel
 # (imported lazily: it pulls in the kernels package)

@@ -30,7 +30,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +63,14 @@ class TenantMigrated(RuntimeError):
         self.target = target
 
 
+#: SLO classes the front door stamps on requests: interactive work
+#: drives high-priority wakes and is claimed first by the worker pool;
+#: batch work rides low-priority (yielding) wakes and is shed first
+#: under admission pressure.
+SLO_INTERACTIVE = "interactive"
+SLO_BATCH = "batch"
+
+
 @dataclass
 class Request:
     instance_id: str
@@ -72,6 +80,22 @@ class Request:
     embeds: Optional[np.ndarray] = None      # VLM stub patch embeddings
     frames: Optional[np.ndarray] = None      # audio stub encoder frames
     close_session: bool = False
+    #: SLO class (``SLO_INTERACTIVE`` / ``SLO_BATCH``)
+    slo: str = SLO_INTERACTIVE
+    #: token-level streaming sink: called with each generated token id as
+    #: it is produced — the first call fires right after prefill, i.e. as
+    #: soon as the wake pipeline's critical prefix is resident, so a
+    #: streaming client's TTFT tracks the wake path, not full inflate.
+    #: Must be cheap and must not raise (failures are swallowed).
+    on_token: Optional[Callable[[int], None]] = field(
+        default=None, repr=False, compare=False)
+
+    def emit(self, token: int) -> None:
+        if self.on_token is not None:
+            try:
+                self.on_token(token)
+            except Exception:
+                pass        # a broken stream sink must not kill the batch
 
 
 @dataclass
@@ -372,6 +396,12 @@ class ServingEngine:
         resps = [Response(r, state_before=inst.state.value) for r in reqs]
         t0 = time.monotonic()
 
+        # SLO feeds the wake pipeline's priority: an all-batch claim
+        # wakes low-priority (yielding, no double-buffer) so it never
+        # contends with an interactive tenant's wake on the same store
+        wake_priority = ("high" if any(r.slo != SLO_BATCH for r in reqs)
+                         else "low")
+
         # ---- state machine: the request trigger (②⑥⑦ + ladder rungs)
         wake_stats = None
         if inst.state in (S.HIBERNATE, S.PARTIAL, S.WOKEN):
@@ -379,15 +409,17 @@ class ServingEngine:
                 # wake-storm guard: at most one batched inflate per cycle.
                 # A PARTIAL wake is rung-aware: the critical prefix is
                 # already resident, the cold tail restores behind us.
-                wake_stats = self.manager.ensure_awake(instance_id,
-                                                       trigger="request")
+                wake_stats = self.manager.ensure_awake(
+                    instance_id, trigger="request",
+                    priority=wake_priority)
             inst.sm.fire(Event.REQUEST)       # -> HIBERNATE_RUNNING
             finish_to = S.WOKEN
         elif inst.state in (S.WARM, S.MMAP_CLEAN):
             if inst.state == S.MMAP_CLEAN:
                 # re-map the shared base weights before compute touches them
-                wake_stats = self.manager.ensure_awake(instance_id,
-                                                       trigger="request")
+                wake_stats = self.manager.ensure_awake(
+                    instance_id, trigger="request",
+                    priority=wake_priority)
             inst.sm.fire(Event.REQUEST)       # -> RUNNING
             finish_to = S.WARM
         else:
@@ -477,6 +509,9 @@ class ServingEngine:
                 break
             self._fault(inst, missing, resp)
         resp.tokens.append(int(jnp.argmax(logits[0, :cfg.vocab_size])))
+        # first streamed token: fires as soon as prefill completes, which
+        # on a woken tenant is right after the critical prefix landed
+        req.emit(resp.tokens[-1])
 
         # write prefill KV into pages
         n0 = sess.num_tokens
@@ -550,6 +585,7 @@ class ServingEngine:
                 want = r.request.max_new_tokens
                 if not done[b] and len(r.tokens) < want:
                     r.tokens.append(int(nxt[b]))
+                    r.request.emit(r.tokens[-1])
                     if len(r.tokens) >= want:
                         done[b] = True
                 else:

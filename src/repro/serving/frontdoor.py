@@ -1,0 +1,344 @@
+"""The serving front door: SLO-classed admission + streaming dispatch.
+
+This is the policy half of the network gateway (the protocol half —
+HTTP/1.1 chunked streaming and WebSocket framing — lives in
+:mod:`repro.serving.gateway`).  It sits between network clients and the
+dispatch surface (an :class:`~repro.serving.scheduler.AsyncPlatform`
+for one node, or a :class:`~repro.cluster.router.ClusterRouter` for a
+cluster) and owns three things:
+
+* **SLO classes** — every request carries ``interactive`` or ``batch``.
+  The class flows down the stack: the scheduler claims interactive work
+  first and can cap batch queue depth separately, and the engine wakes
+  a deflated tenant at low priority when only batch work wants it (a
+  background job must not steal double-buffered wake bandwidth from an
+  interactive tenant on the same store).
+* **Bounded queues + honest backpressure** — admission is checked here
+  (session caps) and at the platform (per-tenant queue depth).  A
+  rejection is a :class:`Backpressure` carrying ``retry_after_s``
+  derived from the governor's learned wake costs and the measured
+  service rate — the gateway surfaces it as ``429 Retry-After: n``.
+  When the node is under memory pressure (the governor is actively
+  deflating) batch requests to not-yet-woken tenants are shed first:
+  waking a tenant the governor would immediately re-deflate is the
+  ping-pong the deflation ladder exists to avoid.
+* **Token streams** — :class:`TokenStream` bridges the engine's
+  ``on_token`` callback (worker thread) to a consumer (gateway event
+  loop or client thread).  The first token fires when prefill completes,
+  which on a woken tenant is as soon as the wake pipeline's critical
+  prefix is resident — streaming TTFT tracks the wake path, not full
+  inflate.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.state import RUNG_OF, Rung
+from repro.serving.engine import SLO_BATCH, SLO_INTERACTIVE, Request
+from repro.serving.scheduler import AdmissionError
+
+_END = object()
+
+
+class Backpressure(RuntimeError):
+    """The front door refused the request; retry after ``retry_after_s``."""
+
+    def __init__(self, msg: str, retry_after_s: float = 1.0):
+        super().__init__(msg)
+        self.retry_after_s = max(0.05, float(retry_after_s))
+
+
+@dataclass
+class FrontDoorPolicy:
+    #: gateway-wide cap on concurrently open streams
+    max_sessions: int = 256
+    #: per-tenant cap on concurrently open streams
+    max_sessions_per_tenant: int = 32
+    #: at most this fraction of max_sessions may be batch-SLO streams
+    batch_share: float = 0.5
+    #: floor for the Retry-After hint (seconds)
+    min_retry_after_s: float = 0.25
+    #: shed batch requests to deflated tenants while the governor is
+    #: under pressure (deflating faster than it wakes)
+    shed_batch_under_pressure: bool = True
+
+
+class TokenStream:
+    """One streaming response: a thread-safe token queue with latency
+    stamps.
+
+    The engine worker pushes via :meth:`push` (wired as ``Request.on_token``)
+    and finishes via :meth:`finish`; a consumer either iterates
+    (blocking, client threads) or installs a ``waker`` callback and
+    drains with :meth:`drain_nowait` (asyncio bridge — the waker is
+    called from the worker thread, typically
+    ``loop.call_soon_threadsafe``)."""
+
+    def __init__(self, instance_id: str, session_id: str, slo: str):
+        self.instance_id = instance_id
+        self.session_id = session_id
+        self.slo = slo
+        self.submitted_at = time.monotonic()
+        self.first_token_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.response = None
+        self.error: Optional[BaseException] = None
+        self._q: deque = deque()
+        self._cv = threading.Condition()
+        self.waker: Optional[Callable[[], None]] = None
+
+    # ------------------------------------------------------------- producer
+    def push(self, token: int) -> None:
+        with self._cv:
+            if self.first_token_at is None:
+                self.first_token_at = time.monotonic()
+            self._q.append(int(token))
+            self._cv.notify_all()
+        if self.waker is not None:
+            self.waker()
+
+    def finish(self, response=None,
+               error: Optional[BaseException] = None) -> None:
+        with self._cv:
+            if self.finished_at is not None:
+                return
+            self.finished_at = time.monotonic()
+            self.response = response
+            self.error = error
+            self._q.append(_END)
+            self._cv.notify_all()
+        if self.waker is not None:
+            self.waker()
+
+    # ------------------------------------------------------------- consumer
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    def next_token(self, timeout: Optional[float] = None):
+        """Blocking pop: a token id, or ``None`` at end of stream (then
+        the terminal error, if any, is raised)."""
+        with self._cv:
+            while not self._q:
+                if not self._cv.wait(timeout):
+                    raise TimeoutError("token stream stalled")
+            tok = self._q.popleft()
+        if tok is _END:
+            if self.error is not None:
+                raise self.error
+            return None
+        return tok
+
+    def drain_nowait(self) -> List[int]:
+        """Non-blocking: every queued token (the ``_END`` marker is left
+        for ``done`` + emptiness checks by the async consumer)."""
+        out = []
+        with self._cv:
+            while self._q and self._q[0] is not _END:
+                out.append(self._q.popleft())
+        return out
+
+    def __iter__(self):
+        while True:
+            tok = self.next_token()
+            if tok is None:
+                return
+            yield tok
+
+
+class FrontDoor:
+    """Admission + dispatch for streaming requests.
+
+    ``target`` is anything with ``submit(Request) -> Future`` — a single
+    node's :class:`~repro.serving.scheduler.AsyncPlatform` or a
+    :class:`~repro.cluster.router.ClusterRouter` (which places unknown
+    tenants cluster-wide).  ``arch_of`` registrations flow to the target
+    so cold starts resolve their model architecture."""
+
+    def __init__(self, target, *,
+                 policy: Optional[FrontDoorPolicy] = None):
+        self.target = target
+        self.policy = policy or FrontDoorPolicy()
+        self._lock = threading.Lock()
+        self._active: Dict[str, int] = {}      # tenant -> open streams
+        self._active_total = 0
+        self._active_batch = 0
+        self.peak_sessions = 0
+        self.accepted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.errors = 0
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def arch_of(self) -> Dict[str, str]:
+        return self.target.arch_of
+
+    def register(self, instance_id: str, arch_key: str) -> None:
+        """Bind a tenant to a model architecture for cold starts."""
+        self.target.arch_of.setdefault(instance_id, arch_key)
+
+    def _platform_for(self, instance_id: str):
+        # ClusterRouter: per-tenant node platform; AsyncPlatform: itself
+        node_of = getattr(self.target, "node_of", None)
+        if node_of is not None:
+            node = node_of(instance_id)
+            return node.platform if node is not None else None
+        return self.target
+
+    def _manager_for(self, instance_id: str):
+        plat = self._platform_for(instance_id)
+        return plat.engine.manager if plat is not None else None
+
+    def retry_after_s(self, instance_id: str) -> float:
+        plat = self._platform_for(instance_id)
+        if plat is not None and hasattr(plat, "retry_after_s"):
+            hint = plat.retry_after_s(instance_id)
+        else:
+            hint = 1.0
+        return max(self.policy.min_retry_after_s, hint)
+
+    # ------------------------------------------------------------- admission
+    def _admit(self, instance_id: str, slo: str) -> None:
+        pol = self.policy
+        with self._lock:
+            if self._active_total >= pol.max_sessions:
+                self.rejected += 1
+                raise Backpressure(
+                    f"gateway at max_sessions={pol.max_sessions}",
+                    self.retry_after_s(instance_id))
+            if self._active.get(instance_id, 0) \
+                    >= pol.max_sessions_per_tenant:
+                self.rejected += 1
+                raise Backpressure(
+                    f"tenant {instance_id} at "
+                    f"max_sessions_per_tenant={pol.max_sessions_per_tenant}",
+                    self.retry_after_s(instance_id))
+            if slo == SLO_BATCH and self._active_batch \
+                    >= pol.batch_share * pol.max_sessions:
+                self.rejected += 1
+                raise Backpressure(
+                    "batch share of sessions exhausted",
+                    self.retry_after_s(instance_id))
+        if slo == SLO_BATCH and pol.shed_batch_under_pressure:
+            mgr = self._manager_for(instance_id)
+            if mgr is not None:
+                inst = mgr.instances.get(instance_id)
+                deflated = inst is not None and \
+                    RUNG_OF.get(inst.state, Rung.WARM) != Rung.WARM
+                if deflated and mgr.governor.pressure_bytes() > 0:
+                    # the node is deflating faster than it wakes: waking
+                    # this tenant for background work would be undone by
+                    # the governor's next pass — shed it instead
+                    with self._lock:
+                        self.rejected += 1
+                    raise Backpressure(
+                        f"node under memory pressure: batch wake of "
+                        f"{instance_id} shed",
+                        self.retry_after_s(instance_id))
+        with self._lock:
+            self._active_total += 1
+            self._active_batch += 1 if slo == SLO_BATCH else 0
+            self._active[instance_id] = \
+                self._active.get(instance_id, 0) + 1
+            self.peak_sessions = max(self.peak_sessions,
+                                     self._active_total)
+            self.accepted += 1
+
+    def _release(self, instance_id: str, slo: str, ok: bool,
+                 rejected: bool = False) -> None:
+        with self._lock:
+            self._active_total -= 1
+            if slo == SLO_BATCH:
+                self._active_batch -= 1
+            n = self._active.get(instance_id, 0) - 1
+            if n <= 0:
+                self._active.pop(instance_id, None)
+            else:
+                self._active[instance_id] = n
+            if ok:
+                self.completed += 1
+            elif rejected:
+                self.rejected += 1
+            else:
+                self.errors += 1
+
+    # ------------------------------------------------------------- dispatch
+    def submit(self, instance_id: str, prompt, *, session_id: str,
+               max_new_tokens: int = 8, slo: str = SLO_INTERACTIVE,
+               arch_key: Optional[str] = None,
+               close_session: bool = False) -> TokenStream:
+        """Admit + dispatch one streaming request; returns immediately
+        with a live :class:`TokenStream`.  Raises :class:`Backpressure`
+        on rejection (never queues unboundedly)."""
+        if slo not in (SLO_INTERACTIVE, SLO_BATCH):
+            raise ValueError(f"unknown SLO class {slo!r}")
+        if arch_key is not None:
+            self.register(instance_id, arch_key)
+        if instance_id not in self.target.arch_of:
+            raise KeyError(f"tenant {instance_id} has no registered "
+                           "architecture (pass arch_key once)")
+        self._admit(instance_id, slo)
+        stream = TokenStream(instance_id, session_id, slo)
+        req = Request(
+            instance_id=instance_id, session_id=session_id,
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=int(max_new_tokens),
+            close_session=close_session, slo=slo,
+            on_token=stream.push)
+        try:
+            fut = self.target.submit(req)
+        except AdmissionError as e:
+            self._release(instance_id, slo, ok=False, rejected=True)
+            raise Backpressure(str(e), getattr(e, "retry_after_s", 1.0)) \
+                from e
+        except BaseException:
+            self._release(instance_id, slo, ok=False)
+            raise
+        if fut.done() and isinstance(fut.exception(), AdmissionError):
+            # AsyncPlatform parks admission rejections on the future;
+            # surface them synchronously so the gateway answers 429
+            # instead of opening a stream that instantly errors
+            err = fut.exception()
+            self._release(instance_id, slo, ok=False, rejected=True)
+            raise Backpressure(str(err),
+                               getattr(err, "retry_after_s", 1.0)) from err
+
+        def _done(f, stream=stream, iid=instance_id, slo=slo):
+            err = f.exception()
+            if isinstance(err, AdmissionError):
+                err = Backpressure(str(err),
+                                   getattr(err, "retry_after_s", 1.0))
+            self._release(iid, slo, ok=err is None)
+            if err is not None:
+                stream.finish(error=err)
+            else:
+                stream.finish(response=f.result())
+
+        fut.add_done_callback(_done)
+        return stream
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "active_sessions": self._active_total,
+                "active_batch": self._active_batch,
+                "peak_sessions": self.peak_sessions,
+                "accepted": self.accepted,
+                "rejected": self.rejected,
+                "completed": self.completed,
+                "errors": self.errors,
+                "tenants_active": len(self._active),
+            }

@@ -1,0 +1,425 @@
+"""Async network gateway: HTTP/1.1 streaming + WebSocket over asyncio.
+
+The protocol half of the front door (:mod:`repro.serving.frontdoor`
+owns admission and SLO policy).  Hand-rolled on ``asyncio`` streams —
+no external HTTP dependency — because the serving surface is small and
+the latency path matters:
+
+* ``POST /v1/generate`` — body ``{"tenant", "session", "prompt": [ids],
+  "max_new_tokens", "slo", "arch"?, "close"?}``; the response is
+  ``Transfer-Encoding: chunked`` NDJSON, one ``{"token": t}`` line per
+  generated token (flushed immediately — the client's TTFT is the
+  engine's first-token time, which on a woken tenant tracks the wake
+  pipeline's critical prefix) and a final ``{"done": true, ...}`` line.
+* ``GET /v1/ws`` — RFC 6455 WebSocket: each text frame is one request
+  (same JSON), answered by per-token text frames and a ``done`` frame;
+  multiple requests may flow over one socket sequentially.
+* ``GET /healthz``, ``GET /v1/stats`` — liveness and counters.
+
+Overload is an HTTP status, not a queue: :class:`Backpressure` from the
+front door (session caps, per-tenant queue depth, pressure shedding)
+becomes ``429 Too Many Requests`` with a ``Retry-After`` header derived
+from learned wake costs — the client backs off instead of parking work
+on the node that is busiest deflating.
+
+The event loop runs on a dedicated thread; engine workers push tokens
+via ``TokenStream.push`` and the loop is woken per token with
+``call_soon_threadsafe`` — tokens cross threads, never block the loop.
+"""
+from __future__ import annotations
+
+import asyncio
+import base64
+import hashlib
+import json
+import math
+import struct
+import threading
+from typing import Optional, Tuple
+
+from repro.serving.frontdoor import Backpressure, FrontDoor, TokenStream
+
+_WS_GUID = "258EAFA5-E914-47DA-95CA-C5AB0DC85B11"
+_MAX_BODY = 8 << 20
+_MAX_HEADER = 64 << 10
+
+
+class Gateway:
+    """Serve a :class:`FrontDoor` over a loopback (or LAN) socket."""
+
+    def __init__(self, door: FrontDoor, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.door = door
+        self.host = host
+        self.port = port
+        self.address: Optional[Tuple[str, int]] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> Tuple[str, int]:
+        if self._thread is not None:
+            return self.address
+        started = threading.Event()
+        boot_err: list = []
+
+        def run() -> None:
+            loop = asyncio.new_event_loop()
+            self._loop = loop
+            asyncio.set_event_loop(loop)
+            try:
+                self._server = loop.run_until_complete(
+                    asyncio.start_server(self._handle_conn, self.host,
+                                         self.port))
+                self.address = self._server.sockets[0].getsockname()[:2]
+            except BaseException as e:      # port in use, bad host, ...
+                boot_err.append(e)
+                loop.close()
+                return
+            finally:
+                started.set()
+            try:
+                loop.run_forever()
+            finally:
+                self._server.close()
+                loop.run_until_complete(self._server.wait_closed())
+                tasks = asyncio.all_tasks(loop)
+                for t in tasks:
+                    t.cancel()
+                if tasks:
+                    loop.run_until_complete(
+                        asyncio.gather(*tasks, return_exceptions=True))
+                loop.close()
+
+        self._thread = threading.Thread(target=run, daemon=True,
+                                        name="gateway-loop")
+        self._thread.start()
+        started.wait()
+        if boot_err:
+            self._thread.join()
+            self._thread = None
+            raise boot_err[0]
+        return self.address
+
+    def close(self) -> None:
+        if self._loop is None:
+            return
+        try:
+            self._loop.call_soon_threadsafe(self._loop.stop)
+        except RuntimeError:
+            pass                            # loop already closed
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+        self._thread = None
+        self._loop = None
+
+    def __enter__(self) -> "Gateway":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ http core
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            head = await reader.readuntil(b"\r\n\r\n")
+            if len(head) > _MAX_HEADER:
+                raise ValueError("oversized request head")
+            request_line, headers = self._parse_head(head)
+            method, path, _version = request_line
+            if headers.get("upgrade", "").lower() == "websocket":
+                await self._serve_ws(reader, writer, headers)
+                return
+            body = b""
+            n = int(headers.get("content-length", "0") or 0)
+            if n > _MAX_BODY:
+                await self._respond(writer, 413, {"error": "body too "
+                                                  "large"})
+                return
+            if n:
+                body = await reader.readexactly(n)
+            await self._route(writer, method, path, body)
+        except (asyncio.IncompleteReadError, asyncio.LimitOverrunError,
+                ConnectionError, asyncio.CancelledError):
+            pass
+        except Exception as e:
+            try:
+                await self._respond(writer, 400,
+                                    {"error": f"{type(e).__name__}: {e}"})
+            except Exception:
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    @staticmethod
+    def _parse_head(head: bytes):
+        lines = head.decode("latin-1").split("\r\n")
+        parts = lines[0].split(" ")
+        if len(parts) != 3:
+            raise ValueError(f"bad request line: {lines[0]!r}")
+        headers = {}
+        for ln in lines[1:]:
+            if not ln:
+                continue
+            k, _, v = ln.partition(":")
+            headers[k.strip().lower()] = v.strip()
+        return (parts[0], parts[1], parts[2]), headers
+
+    async def _respond(self, writer, status: int, obj,
+                       extra_headers: str = "") -> None:
+        reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                  413: "Payload Too Large", 429: "Too Many Requests",
+                  500: "Internal Server Error"}.get(status, "")
+        body = (json.dumps(obj) + "\n").encode()
+        writer.write(
+            f"HTTP/1.1 {status} {reason}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n{extra_headers}"
+            f"Connection: close\r\n\r\n".encode() + body)
+        await writer.drain()
+
+    async def _route(self, writer, method: str, path: str,
+                     body: bytes) -> None:
+        if method == "GET" and path == "/healthz":
+            await self._respond(writer, 200, {"ok": True})
+        elif method == "GET" and path == "/v1/stats":
+            await self._respond(writer, 200, self.door.stats())
+        elif method == "POST" and path == "/v1/generate":
+            await self._generate(writer, body)
+        else:
+            await self._respond(writer, 404, {"error": f"no route "
+                                              f"{method} {path}"})
+
+    # ------------------------------------------------------------ generate
+    def _submit(self, spec: dict) -> TokenStream:
+        return self.door.submit(
+            spec["tenant"], spec.get("prompt", [1, 2, 3]),
+            session_id=spec.get("session", "s0"),
+            max_new_tokens=int(spec.get("max_new_tokens", 8)),
+            slo=spec.get("slo", "interactive"),
+            arch_key=spec.get("arch"),
+            close_session=bool(spec.get("close", False)))
+
+    async def _generate(self, writer, body: bytes) -> None:
+        try:
+            spec = json.loads(body.decode() or "{}")
+            stream = self._submit(spec)
+        except Backpressure as e:
+            await self._respond(
+                writer, 429,
+                {"error": str(e), "retry_after_s": e.retry_after_s},
+                extra_headers=(f"Retry-After: "
+                               f"{math.ceil(e.retry_after_s)}\r\n"))
+            return
+        except (KeyError, ValueError, TypeError) as e:
+            await self._respond(writer, 400,
+                                {"error": f"{type(e).__name__}: {e}"})
+            return
+
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: application/x-ndjson\r\n"
+                     b"Transfer-Encoding: chunked\r\n"
+                     b"Connection: close\r\n\r\n")
+        await writer.drain()
+
+        async def send_line(obj) -> None:
+            data = (json.dumps(obj) + "\n").encode()
+            writer.write(f"{len(data):x}\r\n".encode() + data + b"\r\n")
+            await writer.drain()
+
+        try:
+            async for tok in self._tokens(stream):
+                await send_line({"token": tok})
+            err = stream.error
+            if err is not None:
+                await send_line({"done": True, "error": str(err)})
+            else:
+                resp = stream.response
+                ttft = stream.ttft_s()
+                await send_line({
+                    "done": True,
+                    "tokens": len(resp.tokens) if resp else 0,
+                    "state_before": resp.state_before if resp else "",
+                    "ttft_ms": None if ttft is None else ttft * 1e3,
+                })
+            writer.write(b"0\r\n\r\n")
+            await writer.drain()
+        except (ConnectionError, asyncio.CancelledError):
+            pass                        # client went away mid-stream
+
+    async def _tokens(self, stream: TokenStream):
+        """Async token iterator over a worker-thread-fed stream."""
+        loop = asyncio.get_running_loop()
+        event = asyncio.Event()
+        stream.waker = lambda: loop.call_soon_threadsafe(event.set)
+        try:
+            while True:
+                for tok in stream.drain_nowait():
+                    yield tok
+                if stream.done:
+                    for tok in stream.drain_nowait():
+                        yield tok
+                    return
+                await asyncio.wait_for(event.wait(), timeout=300.0)
+                event.clear()
+        finally:
+            stream.waker = None
+
+    # ------------------------------------------------------------ websocket
+    async def _serve_ws(self, reader, writer, headers) -> None:
+        key = headers.get("sec-websocket-key", "")
+        if not key:
+            await self._respond(writer, 400, {"error": "missing "
+                                              "Sec-WebSocket-Key"})
+            return
+        accept = base64.b64encode(hashlib.sha1(
+            (key + _WS_GUID).encode()).digest()).decode()
+        writer.write(
+            "HTTP/1.1 101 Switching Protocols\r\n"
+            "Upgrade: websocket\r\nConnection: Upgrade\r\n"
+            f"Sec-WebSocket-Accept: {accept}\r\n\r\n".encode())
+        await writer.drain()
+        while True:
+            msg = await self._ws_recv(reader, writer)
+            if msg is None:
+                return
+            try:
+                spec = json.loads(msg)
+                stream = self._submit(spec)
+            except Backpressure as e:
+                await self._ws_send(writer, json.dumps(
+                    {"error": str(e),
+                     "retry_after_s": e.retry_after_s}))
+                continue
+            except (KeyError, ValueError, TypeError) as e:
+                await self._ws_send(writer, json.dumps(
+                    {"error": f"{type(e).__name__}: {e}"}))
+                continue
+            async for tok in self._tokens(stream):
+                await self._ws_send(writer, json.dumps({"token": tok}))
+            if stream.error is not None:
+                await self._ws_send(writer, json.dumps(
+                    {"done": True, "error": str(stream.error)}))
+            else:
+                ttft = stream.ttft_s()
+                await self._ws_send(writer, json.dumps(
+                    {"done": True,
+                     "ttft_ms": None if ttft is None else ttft * 1e3}))
+
+    async def _ws_recv(self, reader, writer) -> Optional[str]:
+        """One text message (no fragmentation support); answers pings;
+        ``None`` on close."""
+        while True:
+            hdr = await reader.readexactly(2)
+            fin, opcode = hdr[0] & 0x80, hdr[0] & 0x0F
+            masked, ln = hdr[1] & 0x80, hdr[1] & 0x7F
+            if ln == 126:
+                ln = struct.unpack(">H", await reader.readexactly(2))[0]
+            elif ln == 127:
+                ln = struct.unpack(">Q", await reader.readexactly(8))[0]
+            if ln > _MAX_BODY:
+                raise ValueError("oversized websocket frame")
+            mask = await reader.readexactly(4) if masked else b""
+            data = await reader.readexactly(ln)
+            if mask:
+                data = bytes(b ^ mask[i % 4] for i, b in enumerate(data))
+            if opcode == 0x8:                       # close
+                await self._ws_send_raw(writer, 0x8, data[:2])
+                return None
+            if opcode == 0x9:                       # ping -> pong
+                await self._ws_send_raw(writer, 0xA, data)
+                continue
+            if opcode == 0xA:                       # pong
+                continue
+            if opcode != 0x1 or not fin:
+                raise ValueError("only unfragmented text frames are "
+                                 "supported")
+            return data.decode("utf-8")
+
+    async def _ws_send(self, writer, text: str) -> None:
+        await self._ws_send_raw(writer, 0x1, text.encode("utf-8"))
+
+    @staticmethod
+    async def _ws_send_raw(writer, opcode: int, data: bytes) -> None:
+        n = len(data)
+        if n < 126:
+            head = bytes([0x80 | opcode, n])
+        elif n < (1 << 16):
+            head = bytes([0x80 | opcode, 126]) + struct.pack(">H", n)
+        else:
+            head = bytes([0x80 | opcode, 127]) + struct.pack(">Q", n)
+        writer.write(head + data)
+        await writer.drain()
+
+
+def ws_client_handshake(sock, host: str, path: str = "/v1/ws") -> None:
+    """Minimal client-side WebSocket handshake over a connected socket
+    (tests and benchmarks; real clients bring their own stack)."""
+    key = base64.b64encode(hashlib.sha1(str(id(sock)).encode())
+                           .digest()[:16]).decode()
+    sock.sendall(
+        f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
+        f"Upgrade: websocket\r\nConnection: Upgrade\r\n"
+        f"Sec-WebSocket-Key: {key}\r\n"
+        f"Sec-WebSocket-Version: 13\r\n\r\n".encode())
+    buf = b""
+    while b"\r\n\r\n" not in buf:
+        chunk = sock.recv(4096)
+        if not chunk:
+            raise ConnectionError("handshake failed")
+        buf += chunk
+    status = buf.split(b"\r\n", 1)[0]
+    if b"101" not in status:
+        raise ConnectionError(f"upgrade refused: {status!r}")
+    want = base64.b64encode(hashlib.sha1(
+        (key + _WS_GUID).encode()).digest())
+    if want not in buf:
+        raise ConnectionError("bad Sec-WebSocket-Accept")
+
+
+def ws_client_send(sock, text: str) -> None:
+    """Send one masked client text frame (RFC 6455 requires masking)."""
+    import os
+    data = text.encode("utf-8")
+    mask = os.urandom(4)
+    masked = bytes(b ^ mask[i % 4] for i, b in enumerate(data))
+    n = len(data)
+    if n < 126:
+        head = bytes([0x81, 0x80 | n])
+    elif n < (1 << 16):
+        head = bytes([0x81, 0x80 | 126]) + struct.pack(">H", n)
+    else:
+        head = bytes([0x81, 0x80 | 127]) + struct.pack(">Q", n)
+    sock.sendall(head + mask + masked)
+
+
+def ws_client_recv(sock) -> Optional[str]:
+    """Receive one server text frame; ``None`` on close."""
+    def rx(n):
+        buf = b""
+        while len(buf) < n:
+            c = sock.recv(n - len(buf))
+            if not c:
+                raise ConnectionError("closed mid-frame")
+            buf += c
+        return buf
+    while True:
+        hdr = rx(2)
+        opcode, ln = hdr[0] & 0x0F, hdr[1] & 0x7F
+        if ln == 126:
+            ln = struct.unpack(">H", rx(2))[0]
+        elif ln == 127:
+            ln = struct.unpack(">Q", rx(8))[0]
+        data = rx(ln)
+        if opcode == 0x8:
+            return None
+        if opcode in (0x9, 0xA):
+            continue
+        return data.decode("utf-8")

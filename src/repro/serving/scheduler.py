@@ -30,15 +30,23 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
-from repro.core.state import ContainerState
-from repro.serving.engine import (Request, Response, ServingEngine,
-                                  TenantMigrated)
+from repro.core.state import RUNG_OF, ContainerState, Rung
+from repro.serving.engine import (SLO_BATCH, Request, Response,
+                                  ServingEngine, TenantMigrated)
 
 S = ContainerState
 
 
 class AdmissionError(RuntimeError):
-    """A tenant's queue is full: the request was rejected at admission."""
+    """A tenant's queue is full: the request was rejected at admission.
+
+    ``retry_after_s`` is the platform's backoff hint — predicted wake
+    cost of the tenant's current rung plus the queued work ahead of the
+    rejected request (what a gateway surfaces as ``Retry-After``)."""
+
+    def __init__(self, msg: str, retry_after_s: float = 1.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 @dataclass
@@ -54,6 +62,10 @@ class PlatformPolicy:
     ewma_alpha: float = 0.3
     #: admission control: max queued requests per tenant before rejection
     max_queue_depth: int = 64
+    #: admission for batch-SLO requests; None inherits max_queue_depth.
+    #: Under pressure the gateway sheds batch first, so a lower batch
+    #: depth keeps background work from starving interactive admission
+    max_queue_depth_batch: Optional[int] = None
     #: cadence of the background policy daemon (AsyncPlatform only)
     tick_interval_s: float = 0.05
 
@@ -96,6 +108,8 @@ class AsyncPlatform:
         # this platform's per-tenant queue entry and serve lock
         engine.manager.on_evict = self._forget_tenant
         self.rejected = 0
+        #: EWMA of per-request service seconds (feeds retry-after hints)
+        self._service_ewma = 0.05
         #: cluster hook: ``reroute(iid, reqs, futs) -> bool`` takes over a
         #: batch whose tenant migrated off this node (the router resolves
         #: the futures against the target node).  Without it, stragglers
@@ -159,14 +173,19 @@ class AsyncPlatform:
         tenant's queue is full)."""
         fut: Future = Future()
         now = now if now is not None else time.monotonic()
+        depth = self.policy.max_queue_depth
+        if req.slo == SLO_BATCH and \
+                self.policy.max_queue_depth_batch is not None:
+            depth = self.policy.max_queue_depth_batch
         with self._cv:
             q = self.queues.setdefault(req.instance_id, deque())
-            if len(q) >= self.policy.max_queue_depth:
+            if len(q) >= depth:
                 self.rejected += 1
                 self.log.append((now, "rejected", req.instance_id))
                 fut.set_exception(AdmissionError(
-                    f"tenant {req.instance_id}: queue depth "
-                    f">= {self.policy.max_queue_depth}"))
+                    f"tenant {req.instance_id}: {req.slo} queue depth "
+                    f">= {depth}",
+                    retry_after_s=self.retry_after_s(req.instance_id)))
                 return fut
             q.append((req, fut))
             self._note_arrival(req.instance_id, now)
@@ -193,20 +212,52 @@ class AsyncPlatform:
     def _note_arrival(self, iid: str, now: float) -> None:
         self.engine.manager.governor.observe_arrival(iid, now)
 
+    def retry_after_s(self, iid: str) -> float:
+        """Backoff hint for a rejected request: the tenant's predicted
+        wake cost at its current rung (per-rung EWMA the governor
+        learned) plus the queue ahead at the measured per-request
+        service rate.  This is what makes a gateway 429 honest — the
+        client comes back when the node can plausibly serve it."""
+        mgr = self.engine.manager
+        wake = 0.0
+        inst = mgr.instances.get(iid)
+        if inst is not None:
+            rung = RUNG_OF.get(inst.state, Rung.WARM)
+            if rung != Rung.WARM:
+                wake = mgr.governor.wake_cost(rung)
+        with self._cv:
+            depth = len(self.queues.get(iid, ()))
+        return max(0.05, wake + depth * self._service_ewma)
+
     # ------------------------------------------------------------- serving
     def _claim(self):
         """With ``_cv`` held: pop the whole queue of the first unclaimed
-        tenant with work (one claim = one continuous batch)."""
+        tenant with work (one claim = one continuous batch).  Tenants
+        whose queue head is interactive-SLO are claimed before tenants
+        with only batch work — the gateway's SLO classes reach the
+        worker pool here."""
+        batch_pick = None
         for iid, q in self.queues.items():
-            if q and iid not in self._busy:
-                reqs, futs = [], []
-                while q:
-                    r, f = q.popleft()
-                    reqs.append(r)
-                    futs.append(f)
-                self._busy.add(iid)
-                return iid, reqs, futs
+            if not q or iid in self._busy:
+                continue
+            if q[0][0].slo == SLO_BATCH:
+                if batch_pick is None:
+                    batch_pick = iid
+                continue
+            return self._claim_tenant(iid)
+        if batch_pick is not None:
+            return self._claim_tenant(batch_pick)
         return None
+
+    def _claim_tenant(self, iid: str):
+        q = self.queues[iid]
+        reqs, futs = [], []
+        while q:
+            r, f = q.popleft()
+            reqs.append(r)
+            futs.append(f)
+        self._busy.add(iid)
+        return iid, reqs, futs
 
     def _worker_loop(self) -> None:
         while True:
@@ -232,7 +283,10 @@ class AsyncPlatform:
             if iid not in mgr.instances and iid not in mgr.migrated:
                 self.engine.start_instance(iid, self.arch_of[iid])
                 self.log.append((time.monotonic(), "cold_start", iid))
+            t0 = time.monotonic()
             resps = self.engine.serve_batch(iid, reqs)
+            per_req = (time.monotonic() - t0) / max(len(reqs), 1)
+            self._service_ewma += 0.3 * (per_req - self._service_ewma)
             for f, r in zip(futs, resps):
                 f.set_result(r)
         except TenantMigrated as e:
@@ -280,7 +334,7 @@ class AsyncPlatform:
                 if inst.state not in idle_states:
                     continue
                 if self.policy.deflate_instead_of_evict:
-                    mgr.deflate(iid)
+                    mgr.descend(iid, Rung.HIBERNATED)
                     self.log.append((now, "deflate", iid))
                 else:
                     mgr.evict(iid)         # on_evict hook forgets the tenant

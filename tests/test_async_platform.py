@@ -8,6 +8,7 @@ import pytest
 
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.state import ContainerState
+from repro.core.state import Rung
 from repro.serving import (AdmissionError, AsyncPlatform, Platform,
                            PlatformPolicy, Request, ServingEngine)
 
@@ -30,7 +31,7 @@ def _hibernate(eng, mgr, iid="fn-a"):
     """Cold-start, record a working set, deflate."""
     eng.start_instance(iid, ARCH_OF[iid])
     eng.record_sample(iid, _req(iid, "probe", new=1, close_session=True))
-    mgr.deflate(iid)
+    mgr.descend(iid, Rung.HIBERNATED)
     assert mgr.instances[iid].state == S.HIBERNATE
 
 

@@ -10,6 +10,7 @@ from repro.cluster.migrate import migrate_instance
 from repro.core.governor import GovernorConfig
 from repro.core.state import ContainerState, Event, InvalidTransition
 from repro.serving.paged_kv import PagedKVCache
+from repro.core.state import Rung
 
 S = ContainerState
 ARCH = "llama3.2-3b"
@@ -100,11 +101,11 @@ def test_migrate_then_wake_matches_in_place_wake(tiny_factory, spool_dir,
     for i in (inst, twin):
         nid = i.instance_id
         if rung == "hibernated":
-            n0.manager.deflate(nid)
+            n0.manager.descend(nid, Rung.HIBERNATED)
         elif rung == "partial":
             victims = [t[2] for t in
                        n0.manager.governor._partial_candidates(i)][:6]
-            n0.manager.deflate_partial(nid, victims)
+            n0.manager.descend(nid, Rung.PARTIAL, keys=victims)
         else:
             # no shared registry in this cluster: emulate the rung via
             # the state machine + flag, as the governor's mmap descent does
@@ -133,8 +134,8 @@ def test_dedup_transfer_ships_base_weights_once(tiny_factory, spool_dir):
     router, (n0, n1) = _cluster(tiny_factory, spool_dir)
     _tenant(router, n0, "t0", seed=1)
     _tenant(router, n0, "t1", seed=2)          # same arch, different KV
-    n0.manager.deflate("t0")
-    n0.manager.deflate("t1")
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    n0.manager.descend("t1", Rung.HIBERNATED)
 
     h0 = router.migrate("t0", "n1")
     h1 = router.migrate("t1", "n1")
@@ -159,8 +160,8 @@ def test_source_gc_after_migration_spares_survivors(tiny_factory,
     _tenant(router, n0, "gone", seed=3)
     survivor = _tenant(router, n0, "stay", seed=4)
     snap = _snapshot(survivor)
-    n0.manager.deflate("gone")
-    n0.manager.deflate("stay")
+    n0.manager.descend("gone", Rung.HIBERNATED)
+    n0.manager.descend("stay", Rung.HIBERNATED)
     before = n0.store.live_bytes
 
     h = router.migrate("gone", "n1")
@@ -178,7 +179,7 @@ def test_migrating_state_is_fenced(tiny_factory, spool_dir):
     and the governor's scoring never selects a MIGRATING tenant."""
     router, (n0, n1) = _cluster(tiny_factory, spool_dir)
     inst = _tenant(router, n0, "t0")
-    n0.manager.deflate("t0")
+    n0.manager.descend("t0", Rung.HIBERNATED)
     inst.sm.fire(Event.MIGRATE)                # fence without a transfer
     assert inst.state == S.MIGRATING
     with pytest.raises(InvalidTransition):
@@ -206,7 +207,7 @@ def test_request_handoff_blocks_on_transfer(tiny_factory, spool_dir):
     # serve once so compile caches exist (keeps the threaded phase fast)
     router.handle(request_for(cfg, "t0", "warmup", 8, 1, seed=0,
                               close_session=True))
-    n0.manager.deflate("t0")
+    n0.manager.descend("t0", Rung.HIBERNATED)
 
     results, errors = [], []
 
@@ -242,7 +243,7 @@ def test_placement_prefers_digest_affinity(tiny_factory, spool_dir):
     budget = 512 << 20
     router, (n0, n1) = _cluster(tiny_factory, spool_dir, budget=budget)
     seeded = _tenant(router, n1, "seed0", seed=5)
-    n1.manager.deflate("seed0")                # digests land in n1's store
+    n1.manager.descend("seed0", Rung.HIBERNATED)                # digests land in n1's store
     assert n1.store.live_bytes > 0
     now = 1.0
     # the seeded tenant's EWMA says "not due for ages" — n1's imminent
@@ -266,7 +267,7 @@ def _pressure_cluster(tiny_factory, spool_dir, policy):
     n0, n1 = nodes
     for i in range(3):
         _tenant(router, n0, f"t{i}", seed=10 + i, kv_tokens=16)
-        n0.manager.deflate(f"t{i}")
+        n0.manager.descend(f"t{i}", Rung.HIBERNATED)
     # budget holds two husks, not three: sustained breach on n0
     husk = n0.manager.instances["t0"].metadata_bytes()
     n0.governor.budget_bytes = int(2.5 * husk)
@@ -316,7 +317,7 @@ def test_migration_prunes_dead_miss_counters(tiny_factory, spool_dir):
     dead = ("kv", "long-closed-session", 3, 9)
     live_w = next(iter(inst.units))
     inst.recorder.note_misses([dead, live_w])
-    n0.manager.deflate("t0")
+    n0.manager.descend("t0", Rung.HIBERNATED)
     assert dead in inst.recorder.misses or True  # may be pruned by deflate
     inst.recorder.misses[dead] = 5             # force the leak candidate
     h = router.migrate("t0", "n1")
@@ -324,4 +325,93 @@ def test_migration_prunes_dead_miss_counters(tiny_factory, spool_dir):
     moved = n1.manager.instances["t0"]
     assert dead not in moved.recorder.misses
     assert moved.recorder.miss_count(live_w) >= 1
+    router.close()
+
+
+# ------------------------------------------------------------- damping
+def test_migration_cooldown_damps_ping_pong(tiny_factory, spool_dir):
+    """A tenant that just migrated is not a victim again until the
+    cooldown expires — the oscillation damper."""
+    router, n0, n1 = _pressure_cluster(
+        tiny_factory, spool_dir,
+        ClusterPolicy(sustained_breach_rounds=1, migration=True,
+                      migration_cooldown_s=1e9,
+                      terminate_last_resort=False))
+    for iid in ("t0", "t1", "t2"):           # all migrated "just now"
+        router._cooldown[iid] = 999.0
+    acts = router.rebalance(now=1000.0)
+    assert not any(a[0] == "migrate" for a in acts)
+    assert router.cooldown_skips >= 1
+    assert set(n0.manager.instances) == {"t0", "t1", "t2"}  # nobody moved
+    st = router.migration_stats()
+    assert st["cooldown_skips"] == router.cooldown_skips
+    assert st["tenants_in_cooldown"] == 3
+    assert st["migration_cooldown_s"] == 1e9
+
+    # cooldown expired: the same pressure now escalates to migration,
+    # and the fresh migrant re-enters cooldown
+    acts = router.rebalance(now=1000.0 + 2e9)
+    moved = [a for a in acts if a[0] == "migrate"]
+    assert moved
+    assert router._cooldown[moved[0][1]] == 1000.0 + 2e9
+    router.close()
+
+
+def test_breach_hysteresis_preserves_streak(tiny_factory, spool_dir):
+    """Pressure clearing *within* the hysteresis margin must not reset
+    the sustained-breach streak — hovering at the budget edge stays
+    'hot' and escalates on the next breach."""
+    router, n0, n1 = _pressure_cluster(
+        tiny_factory, spool_dir,
+        ClusterPolicy(sustained_breach_rounds=2, migration=True,
+                      breach_hysteresis=0.5, migration_cooldown_s=0.0))
+    tight = n0.governor.budget_bytes
+    assert router.rebalance(now=1.0) == []       # breach: streak 1
+    # clear the breach by a sliver — far inside the 50% margin
+    n0.governor.budget_bytes = int(tight * 1.3)
+    assert router.rebalance(now=2.0) == []       # streak survives
+    assert router._breach["n0"] == 1
+    n0.governor.budget_bytes = tight
+    acts = router.rebalance(now=3.0)             # streak 2: escalate
+    assert any(a[0] == "migrate" for a in acts)
+    assert router.migration_stats()["breach_hysteresis"] == 0.5
+    router.close()
+
+
+def test_transfer_failure_blacklists_target_and_retries(
+        tiny_factory, spool_dir, monkeypatch):
+    """A failed transfer blacklists its target and tries the next-best
+    peer (bounded); a sick node can't absorb every rebalance round."""
+    import repro.cluster.router as router_mod
+    gov_cfg = GovernorConfig(terminate_idle_s=None)
+    router, nodes = _cluster(
+        tiny_factory, spool_dir, n=3, governor_cfg=gov_cfg,
+        policy=ClusterPolicy(sustained_breach_rounds=1,
+                             migration_cooldown_s=0.0,
+                             migration_retries=2,
+                             terminate_last_resort=False))
+    n0 = nodes[0]
+    for i in range(3):
+        _tenant(router, n0, f"t{i}", seed=20 + i, kv_tokens=16)
+        n0.manager.descend(f"t{i}", Rung.HIBERNATED)
+    husk = n0.manager.instances["t0"].metadata_bytes()
+    n0.governor.budget_bytes = int(2.5 * husk)
+    for node in nodes[1:]:
+        node.governor.budget_bytes = 64 << 20
+
+    def always_fails(src, dst, iid, arch, **kw):
+        err = MigrationError("injected: target disk full")
+        err.handle = object()                # transfer, not fence refusal
+        raise err
+
+    monkeypatch.setattr(router_mod, "migrate_instance", always_fails)
+    acts = router.rebalance(now=1000.0)
+    assert not any(a[0] == "migrate" for a in acts)
+    # every peer was tried, failed, and blacklisted
+    assert router.migration_retries >= 2
+    assert set(router._blacklist) == {"n1", "n2"}
+    assert all(until == 1000.0 + router.policy.blacklist_cooldown_s
+               for until in router._blacklist.values())
+    assert set(n0.manager.instances) == {"t0", "t1", "t2"}
+    assert "retries" in router.migration_stats()
     router.close()

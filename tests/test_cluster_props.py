@@ -15,6 +15,7 @@ migration subsets over the same bodies.
 import numpy as np
 import pytest
 
+from repro.core.state import Rung
 from test_cluster import (_assert_identical, _cluster, _full_wake,
                           _snapshot, _tenant)
 
@@ -30,7 +31,7 @@ def _apply_rung(node, inst, rung_idx: int, split_seed: int) -> None:
     multiple proportional bites), 2 = mmap_clean."""
     from repro.core.state import Event
     if rung_idx == 0:
-        node.manager.deflate(inst.instance_id)
+        node.manager.descend(inst.instance_id, Rung.HIBERNATED)
         return
     if rung_idx == 2:
         inst.sm.fire(Event.MMAP_DROP)
@@ -40,7 +41,7 @@ def _apply_rung(node, inst, rung_idx: int, split_seed: int) -> None:
     cands = [t[2] for t in
              node.manager.governor._partial_candidates(inst)]
     if not cands:
-        node.manager.deflate(inst.instance_id)
+        node.manager.descend(inst.instance_id, Rung.HIBERNATED)
         return
     take = rng.integers(1, len(cands) + 1)
     picked = [cands[i] for i in
@@ -50,8 +51,7 @@ def _apply_rung(node, inst, rung_idx: int, split_seed: int) -> None:
     bites = max(1, min(int(rng.integers(1, 4)), len(picked)))
     for chunk in np.array_split(np.arange(len(picked)), bites):
         if len(chunk):
-            node.manager.deflate_partial(
-                inst.instance_id, [picked[i] for i in chunk])
+            node.manager.descend(inst.instance_id, Rung.PARTIAL, keys=[picked[i] for i in chunk])
 
 
 def _check_roundtrip(tiny_factory, spool_dir, rung_idx: int,
@@ -81,7 +81,7 @@ def _check_gc_topology(tiny_factory, spool_dir, n_tenants: int,
         iid = f"t{i}"
         inst = _tenant(router, n0, iid, seed=seed + i, kv_tokens=24)
         snaps[iid] = _snapshot(inst)
-        n0.manager.deflate(iid)
+        n0.manager.descend(iid, Rung.HIBERNATED)
     moved = [f"t{i}" for i in range(n_tenants) if migrate_mask & (1 << i)]
     if len(moved) == n_tenants:
         moved = moved[:-1]                    # keep one survivor

@@ -7,6 +7,7 @@ import pytest
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.state import ContainerState
 from repro.serving import Request, ServingEngine
+from repro.core.state import Rung
 
 S = ContainerState
 
@@ -43,7 +44,7 @@ def test_lifecycle_states(arch, tiny_factory, spool_dir):
     assert (r1.state_before, r1.state_after) == ("warm", "warm")
     assert len(r1.tokens) == 4
     assert all(0 <= t < cfg.vocab_size for t in r1.tokens)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     assert inst.state == S.HIBERNATE
     assert inst.weight_bytes() == 0
     r2 = eng.handle(_req(cfg, "i0", "s1", [4, 5]))
@@ -70,7 +71,7 @@ def test_hibernation_does_not_change_outputs(arch, wake_mode, tiny_factory,
         if hibernate:
             eng.record_sample("i0", _req(inst.cfg, "i0", "probe", [9], n=2,
                                          close_session=True))
-            mgr.deflate("i0")
+            mgr.descend("i0", Rung.HIBERNATED)
         r2 = eng.handle(_req(inst.cfg, "i0", "s", prompt2, n=4))
         return r1.tokens, r2.tokens
 
@@ -89,7 +90,7 @@ def test_woken_memory_leq_warm(tiny_factory, spool_dir):
     warm_bytes = inst.weight_bytes() + inst.kv_bytes()
     eng.record_sample("i0", _req(cfg, "i0", "probe", [1, 2], n=2,
                                  close_session=True))
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     hib_bytes = inst.weight_bytes() + inst.kv_bytes()
     eng.handle(_req(cfg, "i0", "s1", [3, 4], n=2, close_session=True))
     woken_bytes = inst.weight_bytes() + inst.kv_bytes()
@@ -123,7 +124,7 @@ def test_reap_faults_fewer_than_pagefault(tiny_factory, spool_dir):
         cfg = inst.cfg
         eng.record_sample("i0", _req(cfg, "i0", "probe", [1, 2, 3], n=2,
                                      close_session=True))
-        mgr.deflate("i0")
+        mgr.descend("i0", Rung.HIBERNATED)
         r = eng.handle(_req(cfg, "i0", "s", [1, 2, 3], n=2,
                             close_session=True))
         results[mode] = r
@@ -140,7 +141,7 @@ def test_compiled_cache_survives_hibernation(tiny_factory, spool_dir):
     cfg = inst.cfg
     eng.handle(_req(cfg, "i0", "s0", [1, 2, 3], n=2, close_session=True))
     n_compiled = len(inst.compiled)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     eng.handle(_req(cfg, "i0", "s1", [4, 5, 6], n=2, close_session=True))
     assert len(inst.compiled) == n_compiled    # same shapes -> cache hits
 

@@ -1,0 +1,262 @@
+"""Network front door: HTTP/1.1 chunked streaming, WebSocket framing,
+429 backpressure, SLO-classed admission and shedding."""
+import http.client
+import json
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.core.state import ContainerState, Rung
+from repro.serving import (AsyncPlatform, Backpressure, FrontDoor,
+                           FrontDoorPolicy, Gateway, PlatformPolicy,
+                           ServingEngine)
+from repro.serving.engine import SLO_BATCH, SLO_INTERACTIVE, Request
+from repro.serving.gateway import (ws_client_handshake, ws_client_recv,
+                                   ws_client_send)
+
+S = ContainerState
+ARCH_OF = {"fn-a": "llama3.2-3b", "fn-b": "mamba2-130m"}
+
+
+def _mk_stack(tiny_factory, spool_dir, *, workers=2, plat_policy=None,
+              door_policy=None):
+    mgr = InstanceManager(
+        ManagerConfig(spool_dir=spool_dir, wake_mode="reap"), tiny_factory)
+    eng = ServingEngine(mgr)
+    plat = AsyncPlatform(eng, plat_policy or PlatformPolicy(keep_warm_s=1e9),
+                         ARCH_OF, workers=workers)
+    door = FrontDoor(plat, policy=door_policy)
+    return mgr, eng, plat, door
+
+
+def _post(addr, spec, timeout=60.0):
+    """POST /v1/generate, reading the NDJSON stream line by line.
+    Returns (status, headers, [parsed lines])."""
+    conn = http.client.HTTPConnection(*addr, timeout=timeout)
+    try:
+        conn.request("POST", "/v1/generate", body=json.dumps(spec),
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        lines = []
+        while True:
+            ln = resp.readline()
+            if not ln:
+                break
+            lines.append(json.loads(ln))
+        return resp.status, dict(resp.getheaders()), lines
+    finally:
+        conn.close()
+
+
+# ----------------------------------------------------------------- http
+def test_http_streams_tokens_then_done(tiny_factory, spool_dir):
+    mgr, eng, plat, door = _mk_stack(tiny_factory, spool_dir)
+    with plat, Gateway(door) as gw:
+        status, headers, lines = _post(gw.address, {
+            "tenant": "fn-a", "session": "s0", "prompt": [1, 2, 3],
+            "max_new_tokens": 4, "arch": "llama3.2-3b"})
+    assert status == 200
+    assert headers.get("Content-Type") == "application/x-ndjson"
+    toks = [ln["token"] for ln in lines if "token" in ln]
+    done = lines[-1]
+    assert done.get("done") is True and done.get("tokens") == len(toks)
+    assert len(toks) == 4
+    assert done["state_before"] in ("cold", "warm")
+    assert done["ttft_ms"] is not None and done["ttft_ms"] >= 0
+    st = door.stats()
+    assert st["completed"] == 1 and st["active_sessions"] == 0
+
+
+def test_http_streaming_ttft_tracks_first_token(tiny_factory, spool_dir):
+    """The first NDJSON line must arrive before the request finishes —
+    i.e. streaming is per-token, not buffered-until-done."""
+    mgr, eng, plat, door = _mk_stack(tiny_factory, spool_dir)
+    with plat, Gateway(door) as gw:
+        conn = http.client.HTTPConnection(*gw.address, timeout=60.0)
+        try:
+            conn.request("POST", "/v1/generate", body=json.dumps({
+                "tenant": "fn-a", "session": "s0", "prompt": [1, 2, 3],
+                "max_new_tokens": 6, "arch": "llama3.2-3b"}))
+            resp = conn.getresponse()
+            first = json.loads(resp.readline())
+            assert "token" in first          # a token precedes done
+            rest = [json.loads(ln) for ln in resp.readlines() if ln.strip()]
+        finally:
+            conn.close()
+    assert rest[-1].get("done") is True
+
+
+def test_http_429_backpressure_with_retry_after(tiny_factory, spool_dir):
+    """Overload is an HTTP status with an honest hint, not a queue."""
+    mgr, eng, plat, door = _mk_stack(
+        tiny_factory, spool_dir, workers=0,         # nothing drains
+        plat_policy=PlatformPolicy(max_queue_depth=1, keep_warm_s=1e9))
+    with Gateway(door) as gw:           # workers=0: no threads to stop
+        # fill fn-a's (bounded) queue out-of-band
+        door.submit("fn-a", [1, 2, 3], session_id="q0",
+                    arch_key="llama3.2-3b")
+        status, headers, lines = _post(gw.address, {
+            "tenant": "fn-a", "session": "q1", "prompt": [1]})
+        assert status == 429
+        assert int(headers["Retry-After"]) >= 1
+        assert lines[0]["retry_after_s"] >= 0.05
+    st = door.stats()
+    assert st["rejected"] == 1
+
+
+def test_http_routes_and_errors(tiny_factory, spool_dir):
+    mgr, eng, plat, door = _mk_stack(tiny_factory, spool_dir)
+    with plat, Gateway(door) as gw:
+        conn = http.client.HTTPConnection(*gw.address, timeout=30.0)
+        conn.request("GET", "/healthz")
+        assert json.loads(conn.getresponse().read()) == {"ok": True}
+        conn.close()
+
+        conn = http.client.HTTPConnection(*gw.address, timeout=30.0)
+        conn.request("GET", "/v1/stats")
+        st = json.loads(conn.getresponse().read())
+        assert "active_sessions" in st
+        conn.close()
+
+        status, _, lines = _post(gw.address, {"tenant": "ghost",
+                                              "session": "s0"})
+        assert status == 400                 # no registered arch
+        assert "ghost" in lines[0]["error"]
+
+        conn = http.client.HTTPConnection(*gw.address, timeout=30.0)
+        conn.request("GET", "/nope")
+        assert conn.getresponse().status == 404
+        conn.close()
+
+
+# ------------------------------------------------------------- websocket
+def test_websocket_streams_tokens(tiny_factory, spool_dir):
+    mgr, eng, plat, door = _mk_stack(tiny_factory, spool_dir)
+    with plat, Gateway(door) as gw:
+        sock = socket.create_connection(gw.address, timeout=60.0)
+        try:
+            ws_client_handshake(sock, f"{gw.address[0]}:{gw.address[1]}")
+            for sid in ("w0", "w1"):         # two requests, one socket
+                ws_client_send(sock, json.dumps({
+                    "tenant": "fn-b", "session": sid, "prompt": [1, 2],
+                    "max_new_tokens": 3, "arch": "mamba2-130m"}))
+                toks, done = [], None
+                while done is None:
+                    msg = json.loads(ws_client_recv(sock))
+                    if "token" in msg:
+                        toks.append(msg["token"])
+                    else:
+                        done = msg
+                assert len(toks) == 3
+                assert done.get("done") is True and "error" not in done
+        finally:
+            sock.close()
+    assert door.stats()["completed"] == 2
+
+
+def test_websocket_surfaces_backpressure(tiny_factory, spool_dir):
+    mgr, eng, plat, door = _mk_stack(
+        tiny_factory, spool_dir, workers=0,
+        plat_policy=PlatformPolicy(max_queue_depth=1, keep_warm_s=1e9))
+    with Gateway(door) as gw:           # workers=0: no threads to stop
+        door.submit("fn-a", [1], session_id="q0", arch_key="llama3.2-3b")
+        sock = socket.create_connection(gw.address, timeout=30.0)
+        try:
+            ws_client_handshake(sock, "x")
+            ws_client_send(sock, json.dumps({
+                "tenant": "fn-a", "session": "q1", "prompt": [1]}))
+            msg = json.loads(ws_client_recv(sock))
+            assert "error" in msg and msg["retry_after_s"] >= 0.05
+        finally:
+            sock.close()
+
+
+# ----------------------------------------------------------- slo classes
+def test_front_door_session_caps(tiny_factory, spool_dir):
+    mgr, eng, plat, door = _mk_stack(
+        tiny_factory, spool_dir, workers=0,
+        door_policy=FrontDoorPolicy(max_sessions=2,
+                                    max_sessions_per_tenant=1))
+    door.submit("fn-a", [1], session_id="a0", arch_key="llama3.2-3b")
+    with pytest.raises(Backpressure):        # per-tenant cap
+        door.submit("fn-a", [1], session_id="a1")
+    door.register("fn-b", "mamba2-130m")
+    door.submit("fn-b", [1], session_id="b0")
+    with pytest.raises(Backpressure):        # gateway-wide cap
+        door.submit("fn-b", [1], session_id="b1")
+    st = door.stats()
+    assert st["accepted"] == 2 and st["rejected"] == 2
+
+
+def test_batch_share_cap(tiny_factory, spool_dir):
+    mgr, eng, plat, door = _mk_stack(
+        tiny_factory, spool_dir, workers=0,
+        door_policy=FrontDoorPolicy(max_sessions=4, batch_share=0.25))
+    door.submit("fn-a", [1], session_id="b0", slo=SLO_BATCH,
+                arch_key="llama3.2-3b")
+    with pytest.raises(Backpressure):        # 1/4 batch slots used up
+        door.submit("fn-a", [1], session_id="b1", slo=SLO_BATCH)
+    # interactive is unaffected by the batch share
+    door.submit("fn-a", [1], session_id="i0", slo=SLO_INTERACTIVE)
+
+
+def test_pressure_sheds_batch_not_interactive(tiny_factory, spool_dir):
+    """A deflated tenant under governor pressure: batch wakes are shed
+    (the governor would immediately re-deflate), interactive admits."""
+    mgr, eng, plat, door = _mk_stack(tiny_factory, spool_dir)
+    with plat:
+        plat.submit(Request("fn-a", "warmup",
+                            np.array([1, 2], np.int32),
+                            max_new_tokens=1,
+                            close_session=True)).result(timeout=120)
+        mgr.descend("fn-a", Rung.HIBERNATED)
+        mgr.governor.budget_bytes = 1        # hopeless budget: pressure>0
+        assert mgr.governor.pressure_bytes() > 0
+
+        with pytest.raises(Backpressure):
+            door.submit("fn-a", [1], session_id="b0", slo=SLO_BATCH)
+        stream = door.submit("fn-a", [1], session_id="i0",
+                             slo=SLO_INTERACTIVE)
+        toks = list(stream)
+        assert len(toks) >= 1 and stream.error is None
+
+        # with pressure cleared the same batch request admits
+        mgr.governor.budget_bytes = None
+        mgr.descend("fn-a", Rung.HIBERNATED)
+        stream = door.submit("fn-a", [1], session_id="b1", slo=SLO_BATCH)
+        assert list(stream) and stream.error is None
+
+
+def test_unknown_slo_rejected(tiny_factory, spool_dir):
+    mgr, eng, plat, door = _mk_stack(tiny_factory, spool_dir, workers=0)
+    with pytest.raises(ValueError):
+        door.submit("fn-a", [1], session_id="s0", slo="bulk",
+                    arch_key="llama3.2-3b")
+
+
+def test_scheduler_claims_interactive_first(tiny_factory, spool_dir):
+    """With a backlog, a queued interactive tenant is claimed before a
+    tenant with only batch work — even when batch arrived first."""
+    mgr, eng, plat, door = _mk_stack(tiny_factory, spool_dir, workers=0)
+    sb = door.submit("fn-a", [1], session_id="b", slo=SLO_BATCH,
+                     arch_key="llama3.2-3b")
+    si = door.submit("fn-b", [1], session_id="i", slo=SLO_INTERACTIVE,
+                     arch_key="mamba2-130m")
+    order = []
+    while True:
+        with plat._cv:
+            claim = plat._claim()
+        if claim is None:
+            break
+        iid, reqs, futs = claim
+        order.append(reqs[0].slo)
+        try:
+            plat._serve(iid, reqs, futs)
+        finally:
+            with plat._cv:
+                plat._busy.discard(iid)
+    assert order == [SLO_INTERACTIVE, SLO_BATCH]
+    assert sb.done and si.done and sb.error is None and si.error is None

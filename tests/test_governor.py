@@ -95,7 +95,7 @@ def test_wake_cost_ewma_learned_per_rung(tiny_factory, spool_dir):
     inst.recorder.stop()
     gov = mgr.governor
     prior = gov.wake_cost(Rung.HIBERNATED)
-    mgr.deflate("t0")
+    mgr.descend("t0", Rung.HIBERNATED)
     mgr.ensure_awake("t0", trigger="sigcont")
     assert "hibernated" in gov.wake_cost_ewma
     assert gov.wake_cost(Rung.HIBERNATED) != prior
@@ -120,7 +120,7 @@ def test_partial_deflate_then_demand_fault(tiny_factory, spool_dir):
 
     victims = [k for _, _, k in mgr.governor._partial_candidates(inst)]
     assert victims and all(not is_critical_key(k) for k in victims)
-    st = mgr.deflate_partial("moe", victims)
+    st = mgr.descend("moe", Rung.PARTIAL, keys=victims)
     assert inst.state == S.PARTIAL and inst.rung == Rung.PARTIAL
     assert st.rung == "partial" and st.swap_bytes > 0
     wvictims = [k for k in victims if k[0] == "w"]
@@ -192,7 +192,7 @@ def test_mmap_clean_rung_releases_last_sharer(tiny_factory, spool_dir):
                           tiny_factory, shared_loader=loader)
     inst = mgr.cold_start("a", "llama3.2-3b", shared_paths={"embed"})
     assert mgr.governor._mmap_benefit(inst) == inst.shared_weight_bytes() > 0
-    st = mgr.deflate_mmap("a")
+    st = mgr.descend("a", Rung.MMAP_CLEAN)
     assert inst.state == S.MMAP_CLEAN and inst.mmap_dropped
     assert st.shared_bytes_released > 0
     assert not mgr.shared.is_loaded("llama3.2-3b")
@@ -218,10 +218,10 @@ def test_mmap_drop_on_woken_lands_partial_and_wakes(tiny_factory, spool_dir):
     mgr = InstanceManager(ManagerConfig(spool_dir=spool_dir),
                           tiny_factory, shared_loader=loader)
     inst = mgr.cold_start("a", "llama3.2-3b", shared_paths={"embed"})
-    mgr.deflate("a")
+    mgr.descend("a", Rung.HIBERNATED)
     wk = mgr.ensure_awake("a", trigger="sigcont")
     assert wk is not None and inst.state == S.WOKEN
-    st = mgr.deflate_mmap("a")
+    st = mgr.descend("a", Rung.MMAP_CLEAN)
     assert inst.state == S.PARTIAL and st.rung == "partial"
     assert inst.mmap_dropped and not mgr.shared.is_loaded("llama3.2-3b")
     wk2 = mgr.ensure_awake("a", trigger="sigcont")
@@ -239,14 +239,14 @@ def test_stale_governor_action_is_revalidated(tiny_factory, spool_dir):
     inst.last_used = 0.0
     # score says TERMINATED (hibernated + idle), but the tenant woke up
     # between scoring and apply: simulate by applying against WOKEN
-    mgr.deflate("a")
+    mgr.descend("a", Rung.HIBERNATED)
     mgr.ensure_awake("a", trigger="sigcont")
     assert inst.state == S.WOKEN
     act = mgr.governor._apply(inst, Rung.TERMINATED, need=1, now=100.0,
                               score=1.0, try_lock=None)
     assert act is None and "a" in mgr.instances        # NOT evicted
     # and a stale MMAP_CLEAN descent against a hibernated instance no-ops
-    mgr.deflate("a")
+    mgr.descend("a", Rung.HIBERNATED)
     act = mgr.governor._apply(inst, Rung.MMAP_CLEAN, need=1, now=100.0,
                               score=1.0, try_lock=None)
     assert act is None and inst.state == S.HIBERNATE
@@ -264,7 +264,7 @@ def test_terminate_rung_releases_store_refcounts(tiny_factory, spool_dir):
     for iid in ("a", "b"):
         _start(mgr, iid)                 # same arch: payloads dedup
         mgr.instances[iid].last_used = 0.0
-        mgr.deflate(iid)
+        mgr.descend(iid, Rung.HIBERNATED)
     stats = mgr.store.stats()
     assert stats["stored_bytes"] > 0 and stats["dedup_hits"] > 0
     gov = mgr.governor
@@ -284,7 +284,7 @@ def test_terminate_spares_referenced_segments(tiny_factory, spool_dir):
     mgr = _mgr(tiny_factory, spool_dir)
     for iid in ("a", "b"):
         _start(mgr, iid)
-        mgr.deflate(iid)
+        mgr.descend(iid, Rung.HIBERNATED)
     stored = mgr.store.stats()["stored_bytes"]
     mgr.evict("a")
     assert mgr.store.stats()["stored_bytes"] == stored

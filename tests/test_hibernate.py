@@ -12,6 +12,7 @@ import pytest
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.metrics import memory_report
 from repro.core.state import ContainerState, Event
+from repro.core.state import Rung
 
 
 @pytest.fixture()
@@ -30,7 +31,7 @@ def test_deflate_reclaims_weights(mgr):
     inst = _start(mgr)
     warm = inst.weight_bytes()
     assert warm > 0
-    st = mgr.deflate("i0")
+    st = mgr.descend("i0", Rung.HIBERNATED)
     assert inst.state == ContainerState.HIBERNATE
     assert inst.weight_bytes() == 0
     assert st.swap_bytes + st.reap_bytes == warm
@@ -40,7 +41,7 @@ def test_deflate_reclaims_weights(mgr):
 def test_wake_is_bit_exact(mgr):
     inst = _start(mgr)
     before = {k: v.copy() for k, v in inst.weights.items()}
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     # pagefault everything back
     st = mgr.hib.fault(inst, inst.nonresident_keys())
     assert st.faults == len(inst.units)
@@ -56,7 +57,7 @@ def test_reap_wake_restores_working_set_only(mgr):
     inst.recorder.start()
     inst.recorder.record_many(ws)
     inst.recorder.stop()
-    st = mgr.deflate("i0")
+    st = mgr.descend("i0", Rung.HIBERNATED)
     assert st.reap_bytes > 0 and st.swap_bytes > 0
     wk = mgr.hib.wake(inst, mode="reap", trigger="sigcont")
     assert inst.state == ContainerState.WOKEN
@@ -68,7 +69,7 @@ def test_reap_wake_restores_working_set_only(mgr):
 
 def test_pagefault_wake_restores_nothing(mgr):
     inst = _start(mgr)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     wk = mgr.hib.wake(inst, mode="pagefault", trigger="sigcont")
     assert wk.prefetched_bytes == 0
     assert inst.weight_bytes() == 0
@@ -86,7 +87,7 @@ def test_expert_units_are_separate(tiny_factory, spool_dir):
     # 3 expert mats x num_experts units
     assert len(expert_units) == 3 * cfg.moe.num_experts
     # faulting one expert loads only that expert's bytes
-    mgr.deflate("m0")
+    mgr.descend("m0", Rung.HIBERNATED)
     one = expert_units[0]
     st = mgr.hib.fault(inst, [one])
     assert st.faulted_bytes == inst.units[one].nbytes
@@ -101,7 +102,7 @@ def test_swap_files_deleted_on_evict(tiny_factory, spool_dir):
         ManagerConfig(spool_dir=spool_dir, wake_mode="reap",
                       dedup_store=False), tiny_factory)
     inst = _start(mgr)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     paths = [inst.swap_file.path, inst.reap_file.path]
     assert all(os.path.exists(p) for p in paths)
     mgr.hib.wake(inst, mode="reap", trigger="sigcont")
@@ -115,7 +116,7 @@ def test_store_released_on_evict(mgr):
     segment file survives for other tenants) and deletes its REAP file."""
     import os
     inst = _start(mgr)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     assert inst.swap_file.extents and mgr.store.stats()["stored_bytes"] > 0
     mgr.hib.wake(inst, mode="reap", trigger="sigcont")
     mgr.evict("i0")
@@ -154,11 +155,34 @@ def test_shared_weights_refcount(tiny_factory, spool_dir):
     assert mgr.shared.refcount("llama3.2-3b") == 2
     assert len(loads) == 1                     # loaded once, shared
     # shared leaves are not swapped on deflation (clean file-backed pages)
-    st = mgr.deflate("a")
+    st = mgr.descend("a", Rung.HIBERNATED)
     assert st.shared_bytes_released == 0       # b still holds a ref
     assert "embed" not in {k[1] for k in a.swap_file.extents}
-    st2 = mgr.deflate("b")
+    st2 = mgr.descend("b", Rung.HIBERNATED)
     assert st2.shared_bytes_released > 0       # last ref -> dropped
     # PSS splits shared bytes across sharers
     rep = memory_report(b, mgr.shared)
     assert rep.weight_shared_pss == 0          # dropped at refcount 0
+
+
+def test_descend_rejects_non_deflation_rungs(mgr):
+    _start(mgr)
+    with pytest.raises(ValueError):
+        mgr.descend("i0", Rung.WARM)
+
+
+def test_deprecated_deflate_shims_still_work(mgr):
+    """The pre-descend API survives one release as warning shims with
+    identical behavior."""
+    inst = _start(mgr)
+    with pytest.warns(DeprecationWarning, match="descend"):
+        st = mgr.deflate_mmap("i0")
+    assert inst.state == ContainerState.MMAP_CLEAN and st is not None
+    victims = [k for _, _, k in mgr.governor._partial_candidates(inst)][:2]
+    with pytest.warns(DeprecationWarning, match="descend"):
+        mgr.deflate_partial("i0", victims)
+    assert inst.state == ContainerState.PARTIAL
+    with pytest.warns(DeprecationWarning, match="descend"):
+        st = mgr.deflate("i0")
+    assert inst.state == ContainerState.HIBERNATE
+    assert st.swap_bytes + st.reap_bytes > 0

@@ -9,6 +9,7 @@ pytest.importorskip("hypothesis")  # optional dep: skip on minimal installs
 from hypothesis import given, settings, strategies as st
 
 from repro.core.manager import InstanceManager, ManagerConfig
+from repro.core.state import Rung
 
 _counter = itertools.count()
 
@@ -52,7 +53,7 @@ def test_swap_fault_interleavings_lossless(make_instance, data):
         inst.recorder.record_many(keys[i] for i in sorted(ws_idx))
         ws = inst.recorder.stop()
 
-        mgr.deflate(inst.instance_id)       # ④ from WARM / ⑨ from WOKEN
+        mgr.descend(inst.instance_id, Rung.HIBERNATED)       # ④ from WARM / ⑨ from WOKEN
         assert inst.weight_bytes() == 0
         mode = data.draw(st.sampled_from(["reap", "pagefault"]))
         wk = mgr.hib.wake(inst, mode=mode, trigger="sigcont")

@@ -10,6 +10,7 @@ from repro.core.manager import InstanceManager, ManagerConfig
 from repro.models.attention import decode_attention
 from repro.serving import Request, ServingEngine
 from repro.serving.paged_backend import paged_decode
+from repro.core.state import Rung
 
 
 @pytest.fixture()
@@ -66,7 +67,7 @@ def test_kernel_survives_hibernation(served_instance):
     q = jnp.asarray(np.random.default_rng(1).standard_normal(
         (3, cfg.num_heads, cfg.head_dim)), jnp.float32)
     before = paged_decode(inst.kv, sids, 0, q)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     keys = [k for s in sids for k in inst.kv.keys_for(s)]
     mgr.hib.fault(inst, inst.kv.nonresident_keys(keys))
     after = paged_decode(inst.kv, sids, 0, q)

@@ -4,6 +4,7 @@ import pytest
 
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.serving import Request, ServingEngine
+from repro.core.state import Rung
 
 
 @pytest.fixture()
@@ -38,7 +39,7 @@ def test_session_tokens_match_across_hibernate_cycles(eng):
                 eng2.record_sample("i", Request(
                     "i", f"p{turn}", np.asarray([9]), max_new_tokens=1,
                     close_session=True))
-                mgr2.deflate("i")
+                mgr2.descend("i", Rung.HIBERNATED)
             r = eng2.handle(Request("i", "chat", np.asarray([turn + 3]),
                                     max_new_tokens=2))
             out += r.tokens
@@ -79,6 +80,6 @@ def test_close_session_frees_on_next_deflate(eng):
     eng.handle(Request("i", "tmp", np.asarray([1, 2, 3, 4]),
                        max_new_tokens=2, close_session=True))
     assert mgr.pool.rss_bytes("i") > 0       # closed but not yet reclaimed
-    st = mgr.deflate("i")
+    st = mgr.descend("i", Rung.HIBERNATED)
     assert st.kv_pages_reclaimed > 0         # trim() returned them
     assert st.kv_pages_swapped == 0          # nothing live to swap

@@ -12,6 +12,7 @@ import pytest
 
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.store import StorePolicy, SwapStore
+from repro.core.state import Rung
 
 
 @pytest.fixture()
@@ -164,8 +165,8 @@ def test_manager_evict_isolated_between_tenants(tiny_factory, spool_dir):
     a = mgr.cold_start("a", "llama3.2-3b")
     b = mgr.cold_start("b", "llama3.2-3b")
     before = {k: v.copy() for k, v in b.weights.items()}
-    mgr.deflate("a")
-    mgr.deflate("b")
+    mgr.descend("a", Rung.HIBERNATED)
+    mgr.descend("b", Rung.HIBERNATED)
     # identical params -> the swap tier is stored once
     st = mgr.store.stats()
     assert st["stored_bytes"] < st["logical_bytes"]

@@ -10,6 +10,7 @@ from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.metrics import memory_report
 from repro.core.state import ContainerState
 from repro.serving import Platform, PlatformPolicy, Request, ServingEngine
+from repro.core.state import Rung
 
 S = ContainerState
 
@@ -94,7 +95,7 @@ def test_pss_accounting_states(platform):
     plat.step()
     inst = mgr.instances["fn-a"]
     warm = memory_report(inst, mgr.shared)
-    mgr.deflate("fn-a")
+    mgr.descend("fn-a", Rung.HIBERNATED)
     hib = memory_report(inst, mgr.shared)
     assert hib.pss_total < warm.pss_total
     assert hib.state == "hibernate"

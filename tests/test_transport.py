@@ -1,0 +1,419 @@
+"""Binary wire codec + socket transport: canonical round-trips, salt
+auth, socket-vs-loopback migration identity, and the crash matrix
+(kill-mid-transfer, vanished peer, commit-callback failure)."""
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import Node
+from repro.cluster.migrate import (MigrationError, StorePeer,
+                                   TransferStats, _export_bundle,
+                                   migrate_instance)
+from repro.cluster.transport import (AuthError, LoopbackTransport,
+                                     SocketTransport, TransportError)
+from repro.cluster import wire
+from repro.core.state import ContainerState, Rung
+from repro.core.store import UnitMeta
+
+from test_cluster import (ARCH, SALT, _assert_identical, _cluster,
+                          _full_wake, _snapshot, _tenant)
+
+S = ContainerState
+
+
+# ---------------------------------------------------------------- codec
+def test_codec_roundtrips_representative_values():
+    values = [
+        None, True, False, 0, -1, 1, 127, 128, -(1 << 63), (1 << 63) - 1,
+        0.0, -2.5, 1e300, "", "unit/key", "émoji ✓", b"", b"\x00\xff" * 9,
+        (), ("weights", "embed", 0), [], [1, "two", b"\x03", None],
+        {}, {"a": 1, "b": [True, ()]}, {("kv", "s", 0, 1): b"digest"},
+        frozenset(), frozenset({"x", "y", ("t", 1)}),
+        UnitMeta(digest=b"d" * 16, fill=-3, nbytes=4096,
+                 dtype="float32", shape=(32, 4)),
+        UnitMeta(digest=None, fill=0, nbytes=0, dtype="", shape=()),
+        {"nested": {"deep": [(frozenset({1, 2}), {"k": b"v"})]}},
+    ]
+    for v in values:
+        enc = wire.encode_value(v)
+        dec = wire.decode_value(enc)
+        assert dec == v, v
+        # canonical: decode is a left inverse AND a right inverse
+        assert wire.encode_value(dec) == enc, v
+
+
+def test_codec_canonicalises_numpy_scalars():
+    """Token ids / fills arrive as numpy scalars; the wire form is the
+    plain Python value (one canonical encoding per value)."""
+    assert wire.encode_value(np.int64(7)) == wire.encode_value(7)
+    assert wire.encode_value(np.int32(-2)) == wire.encode_value(-2)
+    assert wire.encode_value(np.float64(0.5)) == wire.encode_value(0.5)
+    assert wire.decode_value(wire.encode_value(np.int64(7))) == 7
+
+
+def test_codec_rejects_malformed_input():
+    with pytest.raises(wire.WireError):
+        wire.decode_value(b"")                       # empty
+    with pytest.raises(wire.WireError):
+        wire.decode_value(b"\xee")                   # unknown tag
+    with pytest.raises(wire.WireError):
+        wire.decode_value(wire.encode_value(1) + b"\x00")  # trailing
+    with pytest.raises(wire.WireError):
+        wire.decode_value(b"\x03\x80\x00")           # padded varint
+    with pytest.raises(wire.WireError):
+        wire.decode_value(b"\x05\x05ab")             # truncated str
+    # duplicate dict keys never decode (canonical form is unique)
+    dup = bytearray(wire.encode_value({"a": 1}))
+    dup[1] = 2                                       # claim two pairs
+    dup += wire.encode_value("a")[0:]               # same key again
+    dup += wire.encode_value(2)
+    with pytest.raises(wire.WireError):
+        wire.decode_value(bytes(dup))
+    # frozenset elements must arrive in sorted-encoding order
+    fs = wire.encode_value(frozenset({1, 2}))
+    a, b = wire.encode_value(1), wire.encode_value(2)
+    swapped = fs[:2] + (b + a if fs[2:] == a + b else a + b)
+    with pytest.raises(wire.WireError):
+        wire.decode_value(swapped)
+    with pytest.raises(wire.WireError):
+        wire.encode_value(object())                  # not wire-safe
+
+
+def test_codec_rejects_oversized_nesting():
+    v = [1]
+    for _ in range(wire.MAX_DEPTH + 2):
+        v = [v]
+    with pytest.raises(wire.WireError):
+        wire.encode_value(v)
+
+
+def test_frame_roundtrip():
+    payload = wire.encode_value({"x": 1})
+    frame = wire.pack_frame(wire.MSG_MISSING, payload)
+    buf = bytearray(frame)
+
+    def recv_exact(n):
+        out = bytes(buf[:n])
+        del buf[:n]
+        return out
+
+    mt, got = wire.read_frame(recv_exact)
+    assert mt == wire.MSG_MISSING and got == payload
+
+
+def test_segments_roundtrip():
+    items = [(b"d" * 16, 1, 4096, b"payload"), (b"e" * 16, 0, 0, b"")]
+    dec = wire.decode_segments(wire.encode_segments(items))
+    assert dec == items
+
+
+def test_bundle_roundtrip_drops_compiled(tiny_factory, spool_dir):
+    """A real exported bundle survives encode→decode with every wire
+    field intact; host-local executables stay behind."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "t0", seed=3)
+    inst.compiled["prefill"] = object()              # host-local stand-in
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    bundle = _export_bundle(n0, inst, ARCH)
+    dec = wire.decode_bundle(wire.encode_bundle(bundle))
+    for f in wire._BUNDLE_FIELDS:
+        got, want = getattr(dec, f), getattr(bundle, f)
+        if f == "kv_sessions":
+            # numpy token ids canonicalise to plain ints on the wire
+            want = [dict(sd, token_ids=[int(t) for t in sd["token_ids"]])
+                    for sd in want]
+        assert got == want, f
+    assert dec.compiled == {}
+    router.close()
+
+
+# ------------------------------------------------------------ orphan sweep
+def _mk_stores(tmp_path, salt=SALT):
+    from repro.core.store import SwapStore
+    a = SwapStore(str(tmp_path / "a"), salt=salt)
+    b = SwapStore(str(tmp_path / "b"), salt=salt)
+    return a, b
+
+
+def test_sweep_orphans_only_touches_unadopted(tmp_path):
+    src, dst = _mk_stores(tmp_path)
+    c = src.client("t")
+    c.write_units([("k1", np.arange(64, dtype=np.float32)),
+                   ("k2", np.ones(64, dtype=np.float32))])
+    meta = src.export_meta(c)
+    items = list(src.export_segments(
+        [m.digest for m in meta.values()]))
+    new = dst.import_segments(items)
+    assert sorted(new) == sorted(m.digest for m in meta.values())
+    assert sorted(dst.orphan_digests()) == sorted(new)
+
+    # adopt one key: its segment stops being an orphan, the other stays
+    (k1_meta,) = [m for k, m in meta.items() if k == "k1"]
+    dst.adopt_extents("mover", {"k1": k1_meta})
+    orphans = dst.orphan_digests()
+    assert k1_meta.digest not in orphans
+    freed = dst.sweep_orphans()
+    assert freed > 0
+    assert dst.orphan_digests() == []
+    # the adopted segment survived the sweep
+    assert dst.missing_digests([k1_meta.digest]) == []
+    src.close()
+    dst.close()
+
+
+def test_sweep_orphans_respects_age_gate(tmp_path):
+    src, dst = _mk_stores(tmp_path)
+    c = src.client("t")
+    c.write_units([("k", np.arange(32, dtype=np.float32))])
+    meta = src.export_meta(c)
+    dst.import_segments(list(src.export_segments(
+        [m.digest for m in meta.values()])))
+    assert dst.orphan_digests(max_age_s=3600.0) == []      # too young
+    assert dst.sweep_orphans(max_age_s=3600.0) == 0
+    assert dst.sweep_orphans(max_age_s=0.0) > 0            # now eligible
+    src.close()
+    dst.close()
+
+
+# ------------------------------------------------------------- socket path
+def test_socket_auth_rejects_wrong_salt(tiny_factory, spool_dir):
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    addr = n1.start_peer_server()
+    with pytest.raises(AuthError):
+        SocketTransport.connect(addr, b"some-other-deployment")
+    assert n1.peer_server.auth_failures == 1
+    # the real salt still works after a failed attempt
+    t = SocketTransport.connect(addr, SALT, node_id="n0")
+    assert t.target_node_id == "n1"
+    t.close()
+    router.close()
+
+
+def test_peer_refuses_unauthenticated_channel(tiny_factory, spool_dir):
+    """StorePeer re-checks the channel's deployment at construction:
+    a transport authenticated for salt A never ships salt-B digests."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    addr = n1.start_peer_server()
+    t = SocketTransport.connect(addr, SALT)
+    t._salt_fp = b"\x00" * 16          # channel from another deployment
+    with pytest.raises(MigrationError):
+        StorePeer(n0.manager.store, transport=t)
+    t.close()
+    router.close()
+
+
+def test_socket_migration_matches_loopback(tiny_factory, spool_dir):
+    """The tentpole acceptance: a migration over the real socket
+    protocol restores byte-identical tenant state — the twin tenant
+    (same seed, migrated over loopback) is the reference."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "sock", seed=11)
+    twin = _tenant(router, n0, "loop", seed=11)
+    snap = _snapshot(inst)
+    _assert_identical(twin, snap)
+    n0.manager.descend("sock", Rung.HIBERNATED)
+    n0.manager.descend("loop", Rung.HIBERNATED)
+
+    addr = n1.start_peer_server()
+    t = SocketTransport.connect(addr, SALT, node_id="n0", window=2)
+    try:
+        h = migrate_instance(n0, None, "sock", ARCH, transport=t)
+    finally:
+        t.close()
+    assert h.ok, h.error
+    assert h.target_node_id == "n1"
+    h2 = migrate_instance(n0, n1, "loop", ARCH)
+    assert h2.ok, h2.error
+
+    assert "sock" not in n0.manager.instances
+    assert n1.manager.instances["sock"].state == S.HIBERNATE
+    moved = _full_wake(n1, "sock")
+    _assert_identical(moved, snap)
+    ref = _full_wake(n1, "loop")
+    _assert_identical(ref, snap)
+    # dedup held across the wire: the twin's transfer shipped ~nothing
+    # beyond what the first move already parked in n1's store
+    assert h2.stats.bytes_shipped < h.stats.bytes_shipped
+    assert n1.peer_server.transfers == 1
+    router.close()
+
+
+def test_socket_transport_multiple_sequential_migrations(tiny_factory,
+                                                         spool_dir):
+    """One connection serves several migrations; the server's import
+    ledger resets at each bundle."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    for iid, seed in (("a", 1), ("b", 2)):
+        _tenant(router, n0, iid, seed=seed)
+        n0.manager.descend(iid, Rung.HIBERNATED)
+    addr = n1.start_peer_server()
+    t = SocketTransport.connect(addr, SALT)
+    try:
+        for iid in ("a", "b"):
+            assert migrate_instance(n0, None, iid, ARCH, transport=t).ok
+    finally:
+        t.close()
+    assert set(n1.manager.instances) == {"a", "b"}
+    assert n1.store.orphan_digests() == []
+    assert n1.peer_server.transfers == 2
+    router.close()
+
+
+# --------------------------------------------------------- fault injection
+class _FaultyTransport(LoopbackTransport):
+    """Dies after importing the first segment chunk — the window between
+    ``import_segments`` and ``adopt_extents`` the orphan sweep exists
+    for."""
+
+    def __init__(self, *a, fail_after: int = 1, **kw):
+        super().__init__(*a, **kw)
+        self.sent = 0
+        self.fail_after = fail_after
+        self.sweeps = 0
+
+    def send_segments(self, items):
+        n = super().send_segments(items)
+        self.sent += 1
+        if self.sent >= self.fail_after:
+            raise TransportError("injected: link died mid-transfer")
+        return n
+
+    def sweep_orphans(self, digests):
+        self.sweeps += 1
+        return super().sweep_orphans(digests)
+
+
+def _store_totals(store):
+    return store.live_bytes, len(store.orphan_digests())
+
+
+def test_kill_mid_transfer_leaves_both_stores_clean(tiny_factory,
+                                                    spool_dir):
+    """Satellite acceptance: a transfer killed between import and adopt
+    leaves zero orphans on the target, the source still owns every
+    byte, and the tenant remains servable at the source."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "t0", seed=5)
+    snap = _snapshot(inst)
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    src_before = _store_totals(n0.store)
+    dst_before = _store_totals(n1.store)
+
+    t = _FaultyTransport(dst_node=n1)
+    with pytest.raises(MigrationError) as ei:
+        migrate_instance(n0, n1, "t0", ARCH, transport=t)
+    assert ei.value.handle is not None          # transfer, not fence
+    assert not ei.value.handle.committed
+    assert t.sweeps >= 1                        # abort swept the target
+
+    # both stores GC-clean: target took nothing, source kept everything
+    assert _store_totals(n1.store) == dst_before
+    assert _store_totals(n0.store) == src_before
+    assert "t0" not in n1.manager.instances
+    # the source fell back to a plain hibernated tenant and still serves
+    inst = n0.manager.instances["t0"]
+    assert inst.state == S.HIBERNATE
+    assert inst.migration is None
+    _assert_identical(_full_wake(n0, "t0"), snap)
+    router.close()
+
+
+class _DyingSocketTransport(SocketTransport):
+    """Ships one chunk, then hard-closes the socket — the client
+    process crashing mid-transfer, no abort protocol runs."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.sent = 0
+
+    def send_segments(self, items):
+        n = super().send_segments(items)
+        self.sent += 1
+        if self.sent >= 1:
+            self.barrier()      # ack received: the import is on disk
+            self.sock.shutdown(socket.SHUT_RDWR)
+            self.sock.close()
+            raise TransportError("injected: peer crashed")
+        return n
+
+
+def test_socket_peer_crash_server_sweeps_orphans(tiny_factory, spool_dir):
+    """A peer that vanishes without aborting cannot leak refcount-zero
+    segments: the server's connection teardown sweeps them."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "t0", seed=9)
+    snap = _snapshot(inst)
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    dst_before = _store_totals(n1.store)
+
+    addr = n1.start_peer_server()
+    t = _DyingSocketTransport.connect(addr, SALT)
+    with pytest.raises(MigrationError) as ei:
+        migrate_instance(n0, n1, "t0", ARCH, transport=t)
+    assert ei.value.handle is not None
+
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline \
+            and _store_totals(n1.store) != dst_before:
+        time.sleep(0.02)
+    assert _store_totals(n1.store) == dst_before
+    assert n1.peer_server.orphans_swept >= 1
+    assert n0.manager.instances["t0"].state == S.HIBERNATE
+    _assert_identical(_full_wake(n0, "t0"), snap)
+    router.close()
+
+
+def test_abandoned_import_swept_on_disconnect(tiny_factory, spool_dir):
+    """Raw-protocol variant: import segments, never send a bundle, drop
+    the connection — the server reclaims every byte."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "t0", seed=4)
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    digests = [m.digest for m in
+               n0.store.export_meta(inst.swap_file).values()
+               if m.digest is not None]
+    dst_before = _store_totals(n1.store)
+
+    addr = n1.start_peer_server()
+    t = SocketTransport.connect(addr, SALT)
+    peer = StorePeer(n0.store, transport=t)
+    peer.ship(digests, TransferStats())
+    assert n1.store.orphan_digests() != []      # imported, not adopted
+    t.sock.close()                              # vanish without BYE
+
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline \
+            and _store_totals(n1.store) != dst_before:
+        time.sleep(0.02)
+    assert _store_totals(n1.store) == dst_before
+    router.close()
+
+
+def test_commit_callback_failure_does_not_strand_tenant(tiny_factory,
+                                                        spool_dir):
+    """Crash consistency past MIGRATE_DONE: the commit is irrevocable,
+    so a failing on_commit still leaves exactly one owner (the target)
+    and a GC-clean source."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "t0", seed=6)
+    snap = _snapshot(inst)
+    n0.manager.descend("t0", Rung.HIBERNATED)
+
+    def bad_commit():
+        raise RuntimeError("injected: placement map update crashed")
+
+    with pytest.raises(MigrationError) as ei:
+        migrate_instance(n0, n1, "t0", ARCH, on_commit=bad_commit)
+    h = ei.value.handle
+    assert h is not None and h.committed        # past the point of no return
+    # exactly one owner: the target
+    assert "t0" not in n0.manager.instances
+    assert n1.manager.instances["t0"].state == S.HIBERNATE
+    # source finalization ran to completion despite the callback error
+    assert n0.manager.migrated.get("t0") == "n1"
+    assert n0.store.orphan_digests() == []
+    router.placement["t0"] = "n1"               # what bad_commit skipped
+    _assert_identical(_full_wake(n1, "t0"), snap)
+    router.close()

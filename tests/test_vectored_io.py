@@ -7,6 +7,7 @@ import pytest
 
 from repro.core.manager import InstanceManager, ManagerConfig
 from repro.core.swap import ReapFile, SwapFile
+from repro.core.state import Rung
 
 
 def _units(n, sz=256, seed=0):
@@ -95,7 +96,7 @@ def test_instance_fault_path_is_vectored(tiny_factory, spool_dir):
         tiny_factory)
     inst = mgr.cold_start("i0", "llama3.2-3b")
     before = {k: v.copy() for k, v in inst.weights.items()}
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     reads0 = inst.swap_file.reads + inst.reap_file.reads
     st = mgr.hib.fault(inst, inst.nonresident_keys())
     syscalls = inst.swap_file.reads + inst.reap_file.reads - reads0

@@ -18,6 +18,7 @@ from repro.core.reap import ReapRecorder
 from repro.core.state import ContainerState
 from repro.core.swap import SwapFile
 from repro.serving.engine import Request, ServingEngine
+from repro.core.state import Rung
 
 S = ContainerState
 
@@ -68,7 +69,7 @@ def test_reap_file_written_in_touch_order(tiny_factory, spool_dir):
     inst = eng.start_instance("i0", "llama3.2-3b")
     eng.record_sample("i0", _req("i0", "probe", [1, 2, 3],
                                  close_session=True))
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     order = {k: i for i, k in
              enumerate(inst.recorder.ordered_working_set)}
     file_keys = [k for k in inst.reap_file.extents if k in order]
@@ -86,7 +87,7 @@ def test_critical_prefix_resident_at_wake_return(tiny_factory, spool_dir):
     eng.record_sample("i0", _req("i0", "probe", [1, 2, 3, 4],
                                  close_session=True))
     _record_everything(eng, inst)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
 
     st = mgr.ensure_awake("i0", trigger="sigcont", priority="high")
     assert st is not None and st.pipelined
@@ -123,7 +124,7 @@ def test_wake_storm_mid_stream(tiny_factory, spool_dir):
     eng_s.start_instance("i0", "arctic-480b")
     want = eng_s.handle(_req("i0", "s0", [7, 8, 9])).tokens
 
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     n = 6
     barrier = threading.Barrier(n)
     resps = [None] * n
@@ -157,13 +158,13 @@ def test_deflate_mid_stream_drains_safely(tiny_factory, spool_dir):
     eng.record_sample("i0", _req("i0", "probe", [1, 2],
                                  close_session=True))
     _record_everything(eng, inst)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
 
     # low-priority anticipatory wake -> immediately deflate mid-stream
     mgr.predictive_wake("i0")
     pipe = inst.wake_pipeline
     assert pipe is not None
-    mgr.deflate("i0")                        # cancels + drains + restores
+    mgr.descend("i0", Rung.HIBERNATED)                        # cancels + drains + restores
     assert not pipe.active
     assert inst.wake_pipeline is None
     assert inst.state == S.HIBERNATE
@@ -183,7 +184,7 @@ def test_partial_residency_deflate_loses_nothing(tiny_factory, spool_dir):
     inst = eng.start_instance("i0", "llama3.2-3b")
     before = {k: v.copy() for k, v in inst.weights.items()}
     _record_everything(eng, inst)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     assert inst.reap_file.extents
 
     # wake WITHOUT restoring (pagefault-style), fault in only a few units
@@ -192,7 +193,7 @@ def test_partial_residency_deflate_loses_nothing(tiny_factory, spool_dir):
     inst.fault_in([k for k in some if k[0] == "w"])
     assert len(inst.resident) < len(inst.units)
 
-    mgr.deflate("i0")                        # must restore leftovers first
+    mgr.descend("i0", Rung.HIBERNATED)                        # must restore leftovers first
     mgr.hib.wake(inst, mode="reap", trigger="sigcont")
     inst.ensure_all_resident()
     for k, v in before.items():
@@ -214,7 +215,7 @@ def test_lookahead_prefetch_matches_synchronous(tiny_factory, spool_dir):
         eng.record_sample("i0", _req("i0", "probe", [1, 2],
                                      close_session=True))
         _record_everything(eng, inst)
-        mgr.deflate("i0")
+        mgr.descend("i0", Rung.HIBERNATED)
         r = eng.handle(_req("i0", "chat", [30, 31], n=3))
         if inst.wake_pipeline is not None:
             assert inst.wake_pipeline.wait(60)
@@ -237,7 +238,7 @@ def test_demand_pull_from_another_thread(tiny_factory, spool_dir):
     inst = eng.start_instance("i0", "arctic-480b")
     before = {k: v.copy() for k, v in inst.weights.items()}
     _record_everything(eng, inst)
-    mgr.deflate("i0")
+    mgr.descend("i0", Rung.HIBERNATED)
     mgr.predictive_wake("i0")                # low priority: slow stream
     pipe = inst.wake_pipeline
     tail = [k for k in inst.reap_file.extents if not is_critical_key(k)]
@@ -276,7 +277,7 @@ def test_swap_file_streaming_iter(tmp_path):
 def test_store_client_streaming_iter(tiny_factory, spool_dir):
     eng, mgr = _mk(tiny_factory, spool_dir)
     inst = eng.start_instance("i0", "llama3.2-3b")
-    mgr.deflate("i0")                         # no working set -> all store
+    mgr.descend("i0", Rung.HIBERNATED)                         # no working set -> all store
     keys = list(inst.swap_file.extents)
     whole = inst.swap_file.read_units(keys)
     seen = {}
