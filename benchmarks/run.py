@@ -16,6 +16,8 @@
                      vectored fault IO
   cluster_density  — cluster fabric: 4 nodes, skewed tenant pile,
                      migration-on vs migration-off tenants-per-GB
+  prefix_density   — prefix registry: resident-KV dedup across tenants
+                     and nodes, adopted vs prefilled TTFT, sharing on/off
   gateway_latency  — network front door: streaming TTFT per SLO class
                      and container state over loopback HTTP, overload 429s
   roofline         — brief: per-(arch x shape x mesh) roofline table
@@ -44,8 +46,8 @@ def main(argv=None):
     from benchmarks import (allocator, cluster_density, concurrency,
                             dedup_store, density, gateway_latency,
                             governor_density, latency_states, memory_states,
-                            reap_ablation, roofline, sharing,
-                            swap_throughput, wake_latency)
+                            prefix_density, reap_ablation, roofline,
+                            sharing, swap_throughput, wake_latency)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
@@ -55,6 +57,7 @@ def main(argv=None):
         ("density", density),
         ("governor_density", governor_density),
         ("cluster_density", cluster_density),
+        ("prefix_density", prefix_density),
         ("gateway_latency", gateway_latency),
         ("dedup_store", dedup_store),
         ("sharing", sharing),

@@ -3,7 +3,9 @@
 The paper refcounts pages for process clone/COW (§3.3).  The LLM analogue:
 N sessions sharing a long system prompt hold ONE physical copy of its KV
 pages.  This example measures pool usage and per-session PSS with and
-without forking, and shows hibernation handles shared pages correctly.
+without forking, shows hibernation handles shared pages correctly, and
+finishes with the automatic path: the deployment-wide PrefixRegistry
+adopting a registered prompt across tenants — no fork calls, bit-exact.
 
 Run:  PYTHONPATH=src python examples/prefix_sharing.py
 """
@@ -30,22 +32,25 @@ def main():
         cfg = tiny_config(get_config(arch))
         return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
 
+    # --- baseline: registry disabled — every session pays a private
+    # prefill and holds its own copy of the prompt's KV pages
+    mgr_off = InstanceManager(
+        ManagerConfig(spool_dir=SPOOL + "_off", prefix_sharing=False),
+        factory)
+    eng_off = ServingEngine(mgr_off)
+    eng_off.start_instance("i0", "llama3.2-3b")
+    for j in range(N_SESSIONS):
+        eng_off.handle(Request("i0", f"private{j}",
+                               np.asarray(SYS_PROMPT, np.int32),
+                               max_new_tokens=1))
+    private_bytes = mgr_off.pool.rss_bytes("i0")
+    print(f"private prefills: {N_SESSIONS} sessions -> "
+          f"{private_bytes >> 10} KB of KV pages")
+
     mgr = InstanceManager(ManagerConfig(spool_dir=SPOOL), factory)
     eng = ServingEngine(mgr)
     inst = eng.start_instance("i0", "llama3.2-3b")
     pool = mgr.pool
-
-    # --- baseline: every session prefills the system prompt privately
-    for j in range(N_SESSIONS):
-        eng.handle(Request("i0", f"private{j}",
-                           np.asarray(SYS_PROMPT, np.int32),
-                           max_new_tokens=1))
-    private_bytes = pool.rss_bytes("i0")
-    print(f"private prefills: {N_SESSIONS} sessions -> "
-          f"{private_bytes >> 10} KB of KV pages")
-    for j in range(N_SESSIONS):
-        inst.kv.close_session(f"private{j}")
-    inst.kv.trim()
 
     # --- COW: prefill once, fork the page table N-1 times
     eng.handle(Request("i0", "base", np.asarray(SYS_PROMPT, np.int32),
@@ -73,6 +78,25 @@ def main():
     r = eng.handle(Request("i0", "fork1", np.asarray([5], np.int32),
                            max_new_tokens=2))
     print(f"woken, fork1 -> {r.tokens} (faults={r.faults})")
+
+    # --- the automatic path: the prefix registry.  fork_session shares
+    # within one tenant by hand; the registry does it deployment-wide.
+    # i0's very first prefill of SYS_PROMPT already registered it under
+    # its salted token-hash, so a brand-new tenant's sessions adopt the
+    # resident pages — first token emitted without a forward pass.
+    # (Memory caveat: this 48-token prompt spans one PARTIAL page, so a
+    # session's first appended decode token COW-breaks it back to a
+    # private copy; page-aligned prompts keep the pages shared for the
+    # session's whole life — benchmarks/prefix_density.py measures that.)
+    eng.start_instance("i1", "llama3.2-3b")
+    ra = eng.handle(Request("i1", "adopted", np.asarray(SYS_PROMPT, np.int32),
+                            max_new_tokens=1))
+    rb = eng.handle(Request("i0", "replay", np.asarray(SYS_PROMPT, np.int32),
+                            max_new_tokens=1))
+    st = mgr.prefix_registry.stats()
+    print(f"registry: adopted={ra.adopted_prefix} (cross-tenant, "
+          f"bit-exact first token: {ra.tokens == rb.tokens}); "
+          f"{st['registrations']} registered, {st['adoptions']} adoptions")
 
 
 if __name__ == "__main__":

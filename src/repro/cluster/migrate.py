@@ -58,6 +58,7 @@ from repro.cluster.transport import (AuthError, LoopbackTransport,
                                      Transport, TransportError)
 from repro.core.governor import MIGRATABLE_STATES
 from repro.core.instance import ModelInstance
+from repro.core.prefix import PREFIX_OWNER
 from repro.core.state import ContainerState, Event
 from repro.serving.paged_kv import KVSession, PagedKVCache
 
@@ -224,6 +225,13 @@ class _Bundle:
     compiled: Dict = field(default_factory=dict)
     arrival: Optional[Tuple] = None    # governor EWMA (last_ts, gap)
     wire_keys: int = 0
+    #: prefix-registry entries the tenant's sessions share, as pure
+    #: metadata records — the target rebuilds pages from its own
+    #: registry/store by digest, never from re-transferred payloads
+    prefix_records: List[Dict] = field(default_factory=list)
+    #: store extent table for the registry's CAS keys (pfx/pfxh) backing
+    #: those records; adopted under the target's ``__prefix__`` client
+    prefix_extents: Dict = field(default_factory=dict)
 
     def meta_bytes(self) -> int:
         return self.wire_keys * _META_BYTES_PER_KEY
@@ -257,14 +265,19 @@ def _export_bundle(src_node, inst: ModelInstance,
                 "num_tokens": s.num_tokens,
                 "token_ids": list(s.token_ids),
                 "closed": s.closed,
-                "last_page_fill": s.last_page_fill,
                 "page_counts": [len(layer) for layer in s.pages],
                 "host_shapes": dict(s.host_shapes),
                 "host_keys": list(s.host_units),
+                "prefix_digest": s.prefix_digest,
+                "prefix_tokens": s.prefix_tokens,
             })
 
     store = src_node.manager.store
     extents = store.export_meta(inst.swap_file)
+    reg = src_node.manager.prefix_registry
+    prefix_records, prefix_extents = (
+        reg.export_records(inst.instance_id) if reg is not None
+        else ([], {}))
     gov = src_node.manager.governor
     bundle = _Bundle(
         instance_id=inst.instance_id,
@@ -280,9 +293,12 @@ def _export_bundle(src_node, inst: ModelInstance,
         created_at=inst.created_at,
         compiled=dict(inst.compiled),
         arrival=gov.arrivals.get(inst.instance_id),
+        prefix_records=prefix_records,
+        prefix_extents=prefix_extents,
     )
     bundle.wire_keys = (len(extents) + len(bundle.stable)
-                        + len(bundle.misses)
+                        + len(bundle.misses) + len(prefix_extents)
+                        + len(prefix_records)
                         + sum(sum(sd["page_counts"]) + len(sd["host_keys"])
                               for sd in kv_sessions))
     return bundle
@@ -299,7 +315,8 @@ def _rebuild_on_target(dst_node, bundle: _Bundle) -> ModelInstance:
         shared_paths=bundle.shared_paths if shared_on else None,
         base_id=bundle.base_id if shared_on else None,
         store=mgr.store,
-        metadata_bytes=mgr.cfg.husk_metadata_bytes)
+        metadata_bytes=mgr.cfg.husk_metadata_bytes,
+        arch_key=bundle.arch_key)
     try:
         return _populate_target(mgr, inst, bundle)
     except BaseException:
@@ -337,7 +354,17 @@ def _populate_target(mgr, inst: ModelInstance,
         data = inst.swap_file.read_units(bundle.reap_order)
         inst.reap_file.write_batch([(k, data[k]) for k in bundle.reap_order])
 
-    inst.kv = PagedKVCache(bundle.instance_id, inst.cfg, mgr.pool)
+    # prefix registry: adopt the shipped pfx/pfxh extents (segment refs
+    # under the target's __prefix__ client) and install the records as
+    # spilled entries — pages revive lazily by digest, nothing prefills.
+    # Entries the target's registry already holds cost metadata only.
+    reg = mgr.prefix_registry
+    if reg is not None and bundle.prefix_records:
+        mgr.store.adopt_extents(PREFIX_OWNER, bundle.prefix_extents)
+        reg.install_records(bundle.prefix_records)
+
+    inst.kv = PagedKVCache(bundle.instance_id, inst.cfg, mgr.pool,
+                           registry=reg)
     for sd in bundle.kv_sessions:
         s = KVSession(
             sd["session_id"],
@@ -346,8 +373,14 @@ def _populate_target(mgr, inst: ModelInstance,
             pages=[[None] * c for c in sd["page_counts"]],
             host_units={k: None for k in sd["host_keys"]},
             host_shapes=dict(sd["host_shapes"]),
-            closed=sd["closed"],
-            last_page_fill=sd["last_page_fill"])
+            closed=sd["closed"])
+        digest = sd.get("prefix_digest")
+        if reg is not None and digest is not None \
+                and reg.get(digest) is not None:
+            s.prefix_digest = digest
+            s.prefix_tokens = int(sd.get("prefix_tokens", 0))
+            reg.attach_session(digest, bundle.instance_id,
+                               sd["session_id"])
         inst.kv.sessions[sd["session_id"]] = s
     if bundle.kv_sessions:
         inst.kv.dropped = True
@@ -439,8 +472,13 @@ def migrate_instance(src_node, dst_node, instance_id: str, arch_key: str,
             st.meta_bytes = bundle.meta_bytes()
             st.full_snapshot_bytes = sum(
                 m.nbytes for m in bundle.extents.values())
-            digests = sorted(m.digest for m in bundle.extents.values()
-                             if m.digest is not None)
+            digests = sorted(
+                {m.digest for m in bundle.extents.values()
+                 if m.digest is not None}
+                # prefix segments ride the same dedup-aware transfer: a
+                # target already holding the prompt's pages ships nothing
+                | {m.digest for m in bundle.prefix_extents.values()
+                   if m.digest is not None})
             peer.ship(digests, st)
             # commit: target first (the tenant must exist somewhere at
             # every instant), then the source forgets + GCs

@@ -80,6 +80,22 @@ class Node:
             return 0
         return self.store.stored_bytes_of(digests)
 
+    def prefix_inventory(self) -> Dict[bytes, int]:
+        """digest -> shareable bytes of every prefix this node's registry
+        can serve (resident or revivable-by-digest) — what the node
+        advertises to the router's prefix-affinity placement term."""
+        reg = self.manager.prefix_registry
+        return reg.inventory() if reg is not None else {}
+
+    def prefix_overlap_bytes(self, digests) -> int:
+        """Shareable bytes of ``digests`` already registered here: a new
+        tenant of the deployment placed on this node COW-adopts these
+        prompts instead of prefilling them."""
+        if not digests:
+            return 0
+        inv = self.prefix_inventory()
+        return sum(inv.get(d, 0) for d in digests)
+
     def imminent_wake_burden_s(self, now: float,
                                horizon_s: float = 5.0) -> float:
         """Summed predicted wake cost (seconds) of this node's deflated

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.cluster.migrate import (MigrationError, MigrationHandle,
                                    migrate_instance)
 from repro.cluster.node import Node
+from repro.core.prefix import PREFIX_OWNER
 from repro.core.state import ContainerState
 from repro.serving.engine import Request, Response, TenantMigrated
 from repro.serving.scheduler import PlatformPolicy
@@ -57,6 +58,11 @@ class ClusterPolicy:
     max_migrations_per_round: int = 2
     #: weight of digest-overlap affinity in placement scoring
     affinity_weight: float = 1.0
+    #: weight of resident-prefix affinity in placement scoring: a node
+    #: whose registry already serves the deployment's shared prompts lets
+    #: new sessions COW-adopt instead of prefilling (TTFT win), so it
+    #: outranks an equally-empty node without the prefixes
+    prefix_affinity_weight: float = 1.0
     #: placement looks this far ahead for imminent wakes (seconds)
     imminent_horizon_s: float = 5.0
     #: after migration fails to clear a sustained breach, TERMINATED
@@ -138,19 +144,38 @@ class ClusterRouter:
                            if getattr(m, "digest", None) is not None)
         return frozenset(out)
 
+    def deployment_prefix_digests(self, arch_key: str) -> frozenset:
+        """Union of prefix-registry digests for this arch cluster-wide —
+        the shared prompts a new tenant's sessions are likely to reuse."""
+        out = set()
+        for node in self.nodes.values():
+            reg = node.manager.prefix_registry
+            if reg is None:
+                continue
+            for d in reg.digests():
+                e = reg.get(d)
+                if e is not None and e.arch_key == arch_key:
+                    out.add(d)
+        return frozenset(out)
+
     def placement_score(self, node: Node, arch_key: str, now: float,
-                        digests: Optional[frozenset] = None) -> float:
+                        digests: Optional[frozenset] = None,
+                        prefix_digests: Optional[frozenset] = None) -> float:
         """Higher is better: budget headroom plus digest-overlap
-        affinity, discounted by the node's imminent wake burden.
-        ``digests`` lets callers scoring many nodes compute the
-        cluster-wide deployment inventory once."""
+        affinity plus resident-prefix affinity, discounted by the node's
+        imminent wake burden.  ``digests``/``prefix_digests`` let callers
+        scoring many nodes compute the cluster-wide inventories once."""
         if digests is None:
             digests = self.deployment_digests(arch_key)
+        if prefix_digests is None:
+            prefix_digests = self.deployment_prefix_digests(arch_key)
         affinity = node.digest_overlap_bytes(digests)
+        prefix_affinity = node.prefix_overlap_bytes(prefix_digests)
         headroom = max(node.headroom_bytes(), 0)
         burden = node.imminent_wake_burden_s(
             now, self.policy.imminent_horizon_s)
-        return (headroom + self.policy.affinity_weight * affinity) \
+        return (headroom + self.policy.affinity_weight * affinity
+                + self.policy.prefix_affinity_weight * prefix_affinity) \
             / (1.0 + burden)
 
     def place(self, instance_id: str, arch_key: str, *,
@@ -162,9 +187,11 @@ class ClusterRouter:
                 return self.nodes[self.placement[instance_id]]
             self.arch_of.setdefault(instance_id, arch_key)
             digests = self.deployment_digests(arch_key)
+            pfx = self.deployment_prefix_digests(arch_key)
             best = max(self.nodes.values(),
                        key=lambda n: self.placement_score(
-                           n, arch_key, now, digests=digests))
+                           n, arch_key, now, digests=digests,
+                           prefix_digests=pfx))
             self.placement[instance_id] = best.node_id
         best.engine.start_instance(instance_id, arch_key,
                                    shared_paths=shared_paths)
@@ -269,9 +296,23 @@ class ClusterRouter:
     def _tenant_digests(self, node: Node, inst) -> frozenset:
         if node.store is None or not hasattr(inst.swap_file, "extents"):
             return frozenset()
-        return frozenset(
-            m.digest for m in node.store.export_meta(inst.swap_file).values()
-            if m.digest is not None)
+        out = {m.digest
+               for m in node.store.export_meta(inst.swap_file).values()
+               if m.digest is not None}
+        # prefix segments the tenant's sessions share travel with the
+        # bundle (write-through content-addressed them at registration) —
+        # a target already holding them receives metadata only, so the
+        # dedup-aware transfer scoring must see their digests too
+        reg = node.manager.prefix_registry
+        if reg is not None:
+            wanted = set(reg.digests_for_instance(inst.instance_id))
+            if wanted:
+                client = node.store.client(PREFIX_OWNER)
+                out.update(
+                    m.digest
+                    for k, m in node.store.export_meta(client).items()
+                    if k[1] in wanted and m.digest is not None)
+        return frozenset(out)
 
     def _best_target(self, src: Node, inst, freed: int, idle: float,
                      now: float, exclude=()) -> Optional[Tuple[Node, float]]:

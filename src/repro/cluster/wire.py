@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.store import UnitMeta
 
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2
 
 #: hard ceiling on one frame (payloads are chunked well below this)
 MAX_FRAME_BYTES = 256 << 20
@@ -326,7 +326,7 @@ def decode_segments(buf) -> List[Tuple[bytes, int, int, bytes]]:
 _BUNDLE_FIELDS = ("instance_id", "arch_key", "base_id", "shared_paths",
                   "extents", "reap_order", "stable", "misses",
                   "kv_sessions", "last_used", "created_at", "arrival",
-                  "wire_keys")
+                  "wire_keys", "prefix_records", "prefix_extents")
 
 
 def encode_bundle(bundle) -> bytes:

@@ -190,8 +190,13 @@ class MemoryGovernor:
         return cands
 
     def _anon_resident_bytes(self, inst) -> int:
+        # PSS, not RSS: pages COW-shared with the prefix registry (or a
+        # forked sibling session) are charged proportionally — deflating
+        # one sharer neither frees nor double-counts bytes another tenant
+        # still maps
         return (inst.weight_bytes(resident_only=True, include_shared=False)
-                + (inst.pool.rss_bytes(inst.instance_id) if inst.pool else 0))
+                + (int(inst.pool.pss_bytes(inst.instance_id))
+                   if inst.pool else 0))
 
     # ------------------------------------------------------------- step
     def governed_bytes(self) -> int:
@@ -235,6 +240,17 @@ class MemoryGovernor:
         # allocations do not immediately re-breach
         target = int(budget * (1.0 - self.cfg.headroom))
         need = self.governed_bytes() - target
+        # rung 0, cheapest reclaim on the node: resident prefix-registry
+        # entries no live session currently maps are pure cache — spill
+        # them to the CAS tier first (revive is one vectored read; no
+        # tenant is touched, no wake cost is incurred)
+        reg = getattr(self.manager, "prefix_registry", None)
+        if reg is not None and need > 0:
+            for _, digest in sorted(reg.spill_candidates(), reverse=True):
+                if need <= 0:
+                    break
+                need -= reg.spill(digest)
+            need = self.governed_bytes() - target
         while need > 0 and len(applied) < self.cfg.max_actions_per_step:
             progress = False
             with self.manager._lock:

@@ -367,6 +367,11 @@ class HibernationManager:
                 st.inflate_seconds = time.monotonic() - t_inf
         # pagefault mode restores nothing here; units fault in on access
 
+        # shared-prefix slots are never swapped (the registry pins the
+        # pages); re-mapping them is a COW share, not IO — do it eagerly
+        # so the woken tenant decodes without compute-path remap faults
+        st.prefetched_bytes += self._reattach_prefixes(inst)
+
         inst.inflated = True
         if trigger == "sigcont":
             inst.sm.fire(Event.SIGCONT)
@@ -400,6 +405,7 @@ class HibernationManager:
                        pipelined=pipelined and self.inflator is not None)
         self.remap(inst)
         inst.inflated = True
+        st.prefetched_bytes += self._reattach_prefixes(inst)
         keys = partial_restore_keys(inst)
         if trigger == "sigcont":
             inst.sm.fire(Event.SIGCONT)          # -> WOKEN
@@ -421,6 +427,19 @@ class HibernationManager:
             st.critical_path_seconds = st.seconds
         self.log.append(("wake", inst.instance_id, st))
         return st
+
+    def _reattach_prefixes(self, inst: ModelInstance) -> int:
+        """Re-map a woken tenant's shared-prefix slots from the registry
+        (a COW re-share of resident pages; a spilled prefix revives from
+        the CAS store by digest first).  Returns bytes made resident."""
+        kv = inst.kv
+        if kv is None or kv.registry is None:
+            return 0
+        missing = kv.prefix_missing_keys()
+        if not missing:
+            return 0
+        with inst.install_lock:
+            return kv.fault_in(missing, inst.swap_file, inst.reap_file)
 
     # ------------------------------------------------------------- faults
     def fault(self, inst: ModelInstance, keys) -> WakeStats:

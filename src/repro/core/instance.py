@@ -57,10 +57,14 @@ class ModelInstance:
     def __init__(self, instance_id: str, cfg, params, *, pool,
                  spool_dir: str, shared_paths: Optional[Set[str]] = None,
                  base_id: Optional[str] = None, store=None,
-                 metadata_bytes: int = 1 << 16):
+                 metadata_bytes: int = 1 << 16,
+                 arch_key: Optional[str] = None):
         self.instance_id = instance_id
         self.cfg = cfg
         self.base_id = base_id
+        #: deployment model-identity key — the prefix registry partitions
+        #: on it (adoption is only sound between identical weights)
+        self.arch_key = arch_key
         self.pool = pool
         self.sm = StateMachine()
         self.recorder = ReapRecorder()

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import threading
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -30,6 +29,7 @@ from repro.core.pool import PagePool
 from repro.core.state import (DEFLATE_EVENT_FOR, ContainerState, Event,
                               Rung)
 from repro.core.store import StorePolicy, SwapStore
+from repro.core.prefix import PREFIX_OWNER, PrefixRegistry
 
 #: ladder states a wake (request-driven or predictive) climbs out of
 WAKEABLE_STATES = (ContainerState.HIBERNATE, ContainerState.PARTIAL,
@@ -117,6 +117,12 @@ class ManagerConfig:
     #: benchmarks raise it to paper-realistic husk/warm ratios so the
     #: TERMINATED/MIGRATING economics have teeth.
     husk_metadata_bytes: int = 1 << 16
+    #: deployment-wide resident KV prefix registry
+    #: (:mod:`repro.core.prefix`): sessions whose prompt token-hash is
+    #: registered COW-adopt the resident pages instead of prefilling
+    prefix_sharing: bool = True
+    #: prompts shorter than this never enter the registry
+    prefix_min_tokens: int = 4
 
 
 class InstanceManager:
@@ -136,6 +142,10 @@ class InstanceManager:
                                 policy=cfg.store_policy)
                       if cfg.dedup_store else None)
         self.inflator = InflatorPool(cfg.inflate_workers)
+        self.prefix_registry = (PrefixRegistry(
+            self.pool, self.store, salt=cfg.store_salt,
+            min_tokens=cfg.prefix_min_tokens)
+            if cfg.prefix_sharing else None)
         self.hib = HibernationManager(self.shared, inflator=self.inflator,
                                       wake_chunk_bytes=cfg.wake_chunk_bytes)
         self.instances: Dict[str, ModelInstance] = {}
@@ -177,7 +187,8 @@ class InstanceManager:
             shared_paths=shared_paths if self.shared else None,
             base_id=arch_key if self.shared else None,
             store=self.store,
-            metadata_bytes=self.cfg.husk_metadata_bytes)
+            metadata_bytes=self.cfg.husk_metadata_bytes,
+            arch_key=arch_key)
         if self.shared and inst.base_id and inst.shared_paths:
             self.shared.acquire(inst.base_id, inst)
         inst.sm.fire(Event.COLD_START)
@@ -222,31 +233,6 @@ class InstanceManager:
                         self.governor._partial_candidates(inst)]
             return self.hib.deflate_partial(inst, keys)
         return self.hib.deflate(inst)
-
-    # -- deprecated shims (pre-descend API) ------------------------------
-    def deflate(self, instance_id: str):
-        """Deprecated: use ``descend(instance_id, Rung.HIBERNATED)``."""
-        warnings.warn(
-            "InstanceManager.deflate is deprecated; use "
-            "descend(instance_id, Rung.HIBERNATED)",
-            DeprecationWarning, stacklevel=2)
-        return self.descend(instance_id, Rung.HIBERNATED)
-
-    def deflate_mmap(self, instance_id: str):
-        """Deprecated: use ``descend(instance_id, Rung.MMAP_CLEAN)``."""
-        warnings.warn(
-            "InstanceManager.deflate_mmap is deprecated; use "
-            "descend(instance_id, Rung.MMAP_CLEAN)",
-            DeprecationWarning, stacklevel=2)
-        return self.descend(instance_id, Rung.MMAP_CLEAN)
-
-    def deflate_partial(self, instance_id: str, keys):
-        """Deprecated: use ``descend(instance_id, Rung.PARTIAL, keys=...)``."""
-        warnings.warn(
-            "InstanceManager.deflate_partial is deprecated; use "
-            "descend(instance_id, Rung.PARTIAL, keys=keys)",
-            DeprecationWarning, stacklevel=2)
-        return self.descend(instance_id, Rung.PARTIAL, keys=keys)
 
     def ensure_awake(self, instance_id: str, trigger: str = "request",
                      priority: Optional[str] = None):
@@ -329,6 +315,8 @@ class InstanceManager:
             self._wake_locks.pop(instance_id, None)
             if target is not None:
                 self.migrated[instance_id] = target
+        if self.prefix_registry is not None:
+            self.prefix_registry.forget_owner(instance_id)
         self.governor.forget(instance_id)
         if self.on_evict is not None:
             self.on_evict(instance_id)
@@ -352,6 +340,11 @@ class InstanceManager:
         # deflate) already released the shared mmap; the flag knows
         self.hib._release_mmap(inst)
         inst.sm.fire(Event.EVICT)
+        # release the evicted tenant's prefix sharer slots BEFORE terminate
+        # frees its pool owner: a last-sharer-down spill must still find
+        # the registry's own refs alive to content-address the pages
+        if self.prefix_registry is not None:
+            self.prefix_registry.forget_owner(instance_id)
         inst.terminate()                       # swap files deleted (§3.4)
         self.governor.forget(instance_id)
         if self.on_evict is not None:
@@ -366,7 +359,13 @@ class InstanceManager:
             insts = list(self.instances.values())
         for inst in insts:
             tot += inst.weight_bytes(resident_only=True, include_shared=False)
-            tot += inst.pool.rss_bytes(inst.instance_id)
+            # PSS, not RSS: prefix pages COW-adopted by several tenants
+            # (and pinned by the registry itself) are charged one
+            # proportional share per mapper, never once per mapper in full
+            tot += int(inst.pool.pss_bytes(inst.instance_id))
+        if self.prefix_registry is not None:
+            tot += int(self.pool.pss_bytes(PREFIX_OWNER))
+        for inst in insts:
             if self.shared and inst.base_id and \
                     inst.base_id not in seen_shared and \
                     self.shared.is_loaded(inst.base_id) and inst.shared_paths:

@@ -115,6 +115,8 @@ def cluster_report(nodes) -> Dict[str, Dict[str, float]]:
         rungs = per_rung_report(node.manager)
         budget = node.governor.budget_bytes
         store = node.store
+        reg = getattr(node.manager, "prefix_registry", None)
+        pstats = reg.stats() if reg is not None else {}
         out[node.node_id] = {
             "tenants": sum(r["instances"] for r in rungs.values()),
             "governed_bytes": node.governed_bytes(),
@@ -122,6 +124,10 @@ def cluster_report(nodes) -> Dict[str, Dict[str, float]]:
             "pressure_bytes": node.pressure_bytes(),
             "rungs": {r: int(v["instances"]) for r, v in rungs.items()},
             "disk_stored_bytes": store.live_bytes if store else 0,
+            # prefix-registry surface the router's affinity term reads
+            "prefix_entries": pstats.get("entries", 0),
+            "prefix_resident_bytes": pstats.get("resident_bytes", 0),
+            "prefix_adoptions": pstats.get("adoptions", 0),
         }
     return out
 

@@ -73,6 +73,25 @@ class PagePool:
                 self.allocator.incref(p)
             self._owner_pages.setdefault(new_owner, set()).update(pages)
 
+    def refcount(self, page: int) -> int:
+        """How many owners/sessions currently map this page."""
+        with self._lock:
+            return self.allocator.refcount(page)
+
+    def break_cow(self, page: int, owner: str) -> int:
+        """Copy-on-write break: give ``owner`` a private copy of ``page``.
+
+        Allocates a fresh page, copies the physical contents, and drops
+        this owner's reference on the shared original (which stays alive
+        for its other sharers).  Returns the new page id.  The write-fault
+        analogue of a COW-mapped guest page being touched."""
+        with self._lock:
+            new = self.alloc(1, owner)[0]
+            src, dst = self._phys([page, new])
+            self.data[dst] = self.data[src]
+            self.free([page], owner)
+            return new
+
     def free(self, pages: Iterable[int], owner: str) -> int:
         """Decref pages for this owner; returns how many were truly freed."""
         freed = 0

@@ -147,8 +147,15 @@ class SwapStore:
             return c
 
     # ------------------------------------------------------------- hashing
-    def _digest(self, buf: bytes) -> bytes:
+    def keyed_digest(self, buf: bytes) -> bytes:
+        """The store's salted content hash (keyed BLAKE2b-16).  Public so
+        sibling subsystems that content-address by the same deployment
+        salt — the prefix registry's token-hash keys — share one digest
+        discipline instead of re-deriving it."""
         return hashlib.blake2b(buf, digest_size=16, key=self.salt).digest()
+
+    def _digest(self, buf: bytes) -> bytes:
+        return self.keyed_digest(buf)
 
     # ------------------------------------------------------------- extents
     def _alloc(self, n: int) -> int:

@@ -283,9 +283,7 @@ class ReapFile(_FileBase):
         self.bytes_read += len(blob)
         self.reads += 1
         mv = memoryview(blob)                 # zero-copy scatter
-        out = {}
-        for key, ext in self.extents.items():
-            out[key] = np.frombuffer(
-                mv[ext.offset:ext.offset + ext.nbytes],
-                ext.dtype).reshape(ext.shape)
-        return out
+        return {key: np.frombuffer(
+                    mv[ext.offset:ext.offset + ext.nbytes],
+                    ext.dtype).reshape(ext.shape)
+                for key, ext in self.extents.items()}

@@ -108,6 +108,9 @@ class Response:
     faulted_bytes: int = 0
     faults: int = 0
     prefetched_bytes: int = 0
+    #: True when prefill was skipped entirely: the prompt's KV pages were
+    #: COW-adopted from the deployment prefix registry
+    adopted_prefix: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +174,8 @@ class ServingEngine:
         with self.trace.span("cold_start"):
             inst = self.manager.cold_start(instance_id, arch_key,
                                            shared_paths=shared_paths)
-            inst.kv = PagedKVCache(instance_id, inst.cfg, self.manager.pool)
+            inst.kv = PagedKVCache(instance_id, inst.cfg, self.manager.pool,
+                                   registry=self.manager.prefix_registry)
         return inst
 
     def _compiled(self, inst: ModelInstance, kind: str, B: int, Sb: int,
@@ -317,9 +321,8 @@ class ServingEngine:
         for kind, rows in host.items():
             layers[kind] = np.stack(rows, axis=1)          # (L, B, ...)
         dtype = jnp.dtype(cfg.dtype)
-        jl = {}
-        for k, v in layers.items():
-            jl[k] = jnp.asarray(v, jnp.float32 if k == "state" else dtype)
+        jl = {k: jnp.asarray(v, jnp.float32 if k == "state" else dtype)
+              for k, v in layers.items()}
         return {"layers": jl,
                 "lengths": jnp.asarray(lengths),
                 "kv_positions": jnp.asarray(kv_positions)}
@@ -472,6 +475,8 @@ class ServingEngine:
         cfg = inst.cfg
         kv = inst.kv
         if req.session_id not in kv.sessions:
+            if self._try_adopt_prefix(inst, req, resp):
+                return
             kv.new_session(req.session_id)
         sess = kv.sessions[req.session_id]
 
@@ -537,6 +542,43 @@ class ServingEngine:
         sess.num_tokens = n0 + S_tot
         sess.token_ids += [int(t) for t in req.prompt]
         inst.recorder.record_many(touched)
+
+        # a fresh prompt that just paid full prefill becomes a shareable
+        # prefix: later sessions (any tenant of this arch, any node after
+        # migration) COW-adopt these pages instead of recomputing
+        registry = kv.registry
+        if registry is not None and n0 == 0 and inst.arch_key \
+                and req.embeds is None and req.frames is None:
+            registry.register(inst.arch_key, kv, req.session_id,
+                              resp.tokens[-1])
+
+    def _try_adopt_prefix(self, inst: ModelInstance, req: Request,
+                          resp: Response) -> bool:
+        """Cross-tenant prefix adoption: if the prompt's salted token-hash
+        is registered, map the existing KV pages by COW refcount and emit
+        the recorded first token — no prefill forward pass at all.  Static
+        weights still fault in (decode needs them); the prompt must be
+        pure tokens (embeds/frames make KV depend on more than token ids).
+        """
+        kv = inst.kv
+        registry = kv.registry
+        if registry is None or not inst.arch_key or \
+                req.embeds is not None or req.frames is not None or \
+                len(req.prompt) < registry.min_tokens:
+            return False
+        entry = registry.lookup(inst.arch_key,
+                                [int(t) for t in req.prompt])
+        if entry is None:
+            return False
+        static_keys = self._static_weight_keys(inst, req.prompt)
+        self._fault(inst, static_keys, resp)
+        inst.recorder.record_many(k for k in static_keys if k[0] == "w")
+        registry.adopt(entry.digest, kv, req.session_id)
+        resp.adopted_prefix = True
+        resp.tokens.append(entry.first_token)
+        req.emit(resp.tokens[-1])
+        inst.recorder.record_many(kv.keys_for(req.session_id))
+        return True
 
     def _decode_joint(self, inst: ModelInstance, reqs: List[Request],
                       resps: List[Response], sids: List[str]) -> None:

@@ -37,7 +37,12 @@ def kernel_view(kv: PagedKVCache, session_ids: Sequence[str], layer: int):
     for sid in session_ids:
         sess = kv.sessions[sid]
         row = []
-        for pid in sess.pages[layer]:
+        for pidx, pid in enumerate(sess.pages[layer]):
+            if pid is None:
+                # a shared-prefix slot can remap straight from the
+                # registry (COW reattach, no disk IO); anything else is a
+                # genuine swapped-out page the fault tier must restore
+                pid = kv.ensure_prefix_slot(sid, layer, pidx)
             if pid is None:
                 raise KeyError(("kv", sid, layer, "swapped"))
             if pid not in index_of:

@@ -34,18 +34,27 @@ class KVSession:
     host_units: Dict[Tuple, Optional[np.ndarray]] = field(default_factory=dict)
     host_shapes: Dict[Tuple, Tuple] = field(default_factory=dict)
     closed: bool = False
-    #: page idx -> tokens used in that page (last page may be partial)
-    last_page_fill: int = 0
+    #: registry digest when the leading tokens map a shared prefix
+    #: (:mod:`repro.core.prefix`); stable across hibernation cycles
+    prefix_digest: Optional[bytes] = None
+    #: tokens the shared prefix covers (<= num_tokens)
+    prefix_tokens: int = 0
+    #: True while the prefix slots map the registry's pages (cleared on
+    #: deflate, restored by reattach)
+    prefix_resident: bool = False
 
 
 class PagedKVCache:
     """Per-instance paged cache.  ``token_elems`` is the per-layer flattened
     KV element count per token (2*Hkv*D for GQA, r+rd for MLA)."""
 
-    def __init__(self, instance_id: str, cfg, pool):
+    def __init__(self, instance_id: str, cfg, pool, registry=None):
         self.instance_id = instance_id
         self.cfg = cfg
         self.pool = pool
+        #: deployment prefix registry (``repro.core.prefix``) — None
+        #: disables cross-tenant prefix adoption for this instance
+        self.registry = registry
         if cfg.attention == "mla":
             self.token_elems = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
         elif cfg.attention == "none":
@@ -78,7 +87,6 @@ class PagedKVCache:
         dst = self.new_session(dst_id)
         dst.num_tokens = src.num_tokens
         dst.token_ids = list(src.token_ids)
-        dst.last_page_fill = src.last_page_fill
         dst.pages = [list(layer) for layer in src.pages]
         shared = [p for layer in src.pages for p in layer if p is not None]
         self.pool.share(shared, self.instance_id)
@@ -86,6 +94,16 @@ class PagedKVCache:
             nk = (k[0], dst_id) + k[2:]
             dst.host_units[nk] = None if v is None else v.copy()
             dst.host_shapes[nk] = src.host_shapes[k]
+        if self.registry is not None and src.prefix_digest is not None:
+            # the fork maps the same registry pages: it is a sharer too
+            dst.prefix_digest = src.prefix_digest
+            dst.prefix_tokens = src.prefix_tokens
+            dst.prefix_resident = src.prefix_resident
+            e = self.registry.get(src.prefix_digest)
+            if e is not None:
+                e.sharers.add((self.instance_id, dst_id))
+                if dst.prefix_resident:
+                    e.resident_sharers.add((self.instance_id, dst_id))
         return dst
 
     # ------------------------------------------------------------- writes
@@ -109,6 +127,12 @@ class PagedKVCache:
             pid = s.pages[layer][pidx]
             if pid is None:                      # swapped-out page: fault first
                 raise KeyError(("kv", session_id, layer, pidx))
+            if self.pool.refcount(pid) > 1:
+                # COW write fault: the page is shared (prefix registry or
+                # a forked sibling) — never overwrite, break to a private
+                # copy first so every other sharer stays bit-exact
+                pid = self.pool.break_cow(pid, self.instance_id)
+                s.pages[layer][pidx] = pid
             n = min(self.page_tokens - off, T - t)
             phys = self.pool._phys([pid])[0]
             usable = self.page_tokens * self.token_elems
@@ -184,6 +208,71 @@ class PagedKVCache:
                 out.append(k)
         return out
 
+    # ------------------------------------------------------------- prefix
+    def _prefix_entry_pages(self, s: KVSession):
+        """The registry entry's resident page table for this session's
+        prefix, or None (no registry / no prefix / entry spilled)."""
+        if self.registry is None or s.prefix_digest is None:
+            return None
+        e = self.registry.get(s.prefix_digest)
+        return None if e is None else e.pages
+
+    def is_prefix_slot(self, s: KVSession, layer: int, pidx: int) -> bool:
+        """True when the slot still maps the registry's own page (COW-
+        broken slots hold a private copy and are the tenant's to swap)."""
+        ep = self._prefix_entry_pages(s)
+        return (ep is not None and layer < len(ep)
+                and pidx < len(ep[layer])
+                and s.pages[layer][pidx] == ep[layer][pidx])
+
+    def _prefix_page_count(self, s: KVSession) -> int:
+        """Pages per layer the session's prefix spans."""
+        return self._n_pages(s.prefix_tokens) if s.prefix_digest else 0
+
+    def export_prefix_page(self, pid: int, pidx: int,
+                           num_tokens: int) -> np.ndarray:
+        """Registry write-through export: one page with the same zero-tail
+        contract as :meth:`_export_page`, bounded by the *prefix* token
+        count (not a session's) so identical prefixes hash identically."""
+        phys = self.pool._phys([pid])[0]
+        data = self.pool.data[phys].copy()
+        used = min(max(num_tokens - pidx * self.page_tokens, 0),
+                   self.page_tokens) * self.token_elems
+        data[used:] = 0
+        return data
+
+    def prefix_missing_keys(self) -> List[Tuple]:
+        """Not-Present page slots inside each session's prefix range —
+        what a wake must either restore from swap (COW-broken copies) or
+        reattach from the registry."""
+        keys: List[Tuple] = []
+        for sid, s in self.sessions.items():
+            np_pages = self._prefix_page_count(s)
+            if not np_pages:
+                continue
+            for layer in range(len(s.pages)):
+                for pidx in range(min(np_pages, len(s.pages[layer]))):
+                    if s.pages[layer][pidx] is None:
+                        keys.append(("kv", sid, layer, pidx))
+        return keys
+
+    def ensure_prefix_slot(self, session_id: str, layer: int,
+                           pidx: int) -> Optional[int]:
+        """Last-chance remap for the compute path: re-share a Not-Present
+        prefix slot from the registry, but ONLY when the slot provably
+        never COW-broke (fully-covered page, or nothing was ever written
+        past the prefix) — a broken slot's bytes live in the swap tier and
+        must fault in from there.  Returns the page id or None."""
+        s = self.sessions[session_id]
+        if self.registry is None or s.prefix_digest is None or \
+                pidx >= self._prefix_page_count(s):
+            return None
+        fully_covered = (pidx + 1) * self.page_tokens <= s.prefix_tokens
+        if not (fully_covered or s.num_tokens == s.prefix_tokens):
+            return None
+        self.registry.reattach(self, session_id, [(layer, pidx)])
+        return s.pages[layer][pidx]
+
     # ------------------------------------------------------------- hibernate
     def trim(self) -> int:
         """Deflation step 2: return closed sessions' pages to the pool."""
@@ -193,6 +282,9 @@ class PagedKVCache:
             pages = [p for layer in s.pages for p in layer if p is not None]
             n += len(pages)
             self.pool.free(pages, self.instance_id)
+            if self.registry is not None and s.prefix_digest is not None:
+                self.registry.release_sharer(s.prefix_digest,
+                                             self.instance_id, sid)
         return n
 
     def _export_page(self, s: KVSession, pid: int, pidx: int) -> np.ndarray:
@@ -219,6 +311,12 @@ class PagedKVCache:
                 for pidx, pid in enumerate(s.pages[layer]):
                     if pid is None:
                         continue
+                    if self.is_prefix_slot(s, layer, pidx):
+                        # registry-backed page: already content-addressed
+                        # at registration; the wake reattaches by digest —
+                        # exporting it would double-swap another tenant's
+                        # (and the registry's) live mapping
+                        continue
                     key = ("kv", sid, layer, pidx)
                     data = self._export_page(s, pid, pidx)
                     (reap if key in working_set else swap).append((key, data))
@@ -236,7 +334,8 @@ class PagedKVCache:
         for sid, s in self.sessions.items():
             for layer in range(len(s.pages)):
                 for pidx, pid in enumerate(s.pages[layer]):
-                    if pid is not None:
+                    if pid is not None and \
+                            not self.is_prefix_slot(s, layer, pidx):
                         keys.append(("kv", sid, layer, pidx))
             keys += [k for k, a in s.host_units.items() if a is not None]
         return keys
@@ -269,7 +368,7 @@ class PagedKVCache:
                 if layer >= len(s.pages) or pidx >= len(s.pages[layer]):
                     continue
                 pid = s.pages[layer][pidx]
-                if pid is None:
+                if pid is None or self.is_prefix_slot(s, layer, pidx):
                     continue
                 items.append((key, self._export_page(s, pid, pidx)))
             elif key[0] == "kvh":
@@ -306,9 +405,17 @@ class PagedKVCache:
                     continue
                 pid = s.pages[layer][pidx]
                 if pid is not None:
+                    was_prefix = self.is_prefix_slot(s, layer, pidx)
                     self.pool.free([pid], self.instance_id)
                     s.pages[layer][pidx] = None
                     n += 1
+                    if was_prefix and s.prefix_resident:
+                        # partially detached counts as detached: the
+                        # registry must not treat this sharer as pinning
+                        # the resident copy anymore
+                        s.prefix_resident = False
+                        self.registry.note_detach(
+                            s.prefix_digest, self.instance_id, sid)
             elif key[0] == "kvh" and s.host_units.get(key) is not None:
                 s.host_units[key] = None
         return n
@@ -317,7 +424,7 @@ class PagedKVCache:
         """Deflation step 3 tail: free every physical page (madvise) but keep
         the logical page tables — the 'Not-Present' page-table entries."""
         n = 0
-        for s in self.sessions.values():
+        for sid, s in self.sessions.items():
             for layer in range(len(s.pages)):
                 for pidx, pid in enumerate(s.pages[layer]):
                     if pid is not None:
@@ -326,6 +433,13 @@ class PagedKVCache:
                         n += 1
             for key in s.host_units:
                 s.host_units[key] = None
+            if self.registry is not None and s.prefix_digest is not None \
+                    and s.prefix_resident:
+                # the session still *logically* maps the prefix (it will
+                # reattach by digest on wake); only the resident pin drops
+                s.prefix_resident = False
+                self.registry.note_detach(s.prefix_digest,
+                                          self.instance_id, sid)
         self.dropped = True
         return n
 
@@ -380,13 +494,28 @@ class PagedKVCache:
 
     def fault_in(self, keys: Sequence[Tuple], swap_file, reap_file) -> int:
         """Fault path: the key set is coalesced into one vectored batch
-        read per file (extent-sorted, adjacent extents merged)."""
+        read per file (extent-sorted, adjacent extents merged).
+
+        Keys in no swap tier but inside a session's shared-prefix range
+        remap from the registry instead (COW reattach — the prefix was
+        never exported, its bytes live as registry pages or CAS segments).
+        The swap tiers are consulted FIRST: a COW-broken prefix page's
+        private copy is in the swap file, and restoring the pristine
+        registry page there would clobber the session's divergent bytes.
+        """
         swap_keys, reap_keys = [], []
+        prefix_coords: Dict[str, List[Tuple[int, int]]] = {}
         for key in keys:
             if key in swap_file:
                 swap_keys.append(key)
             elif key in reap_file.extents:
                 reap_keys.append(key)
+            elif key[0] == "kv" and self.registry is not None and \
+                    (s := self.sessions.get(key[1])) is not None and \
+                    s.prefix_digest is not None and \
+                    key[3] < self._prefix_page_count(s):
+                prefix_coords.setdefault(key[1], []).append(
+                    (key[2], key[3]))
             else:
                 raise KeyError(f"kv unit {key} not in any swap file")
         n = 0
@@ -396,6 +525,8 @@ class PagedKVCache:
             # one vectored read + one pool scatter per file
             n += self.install_batch(list(f.read_units(ks).items()),
                                     mark=False)
+        for sid, coords in prefix_coords.items():
+            n += self.registry.reattach(self, sid, coords)
         return n
 
     # ------------------------------------------------------------- accounting

@@ -171,18 +171,3 @@ def test_descend_rejects_non_deflation_rungs(mgr):
         mgr.descend("i0", Rung.WARM)
 
 
-def test_deprecated_deflate_shims_still_work(mgr):
-    """The pre-descend API survives one release as warning shims with
-    identical behavior."""
-    inst = _start(mgr)
-    with pytest.warns(DeprecationWarning, match="descend"):
-        st = mgr.deflate_mmap("i0")
-    assert inst.state == ContainerState.MMAP_CLEAN and st is not None
-    victims = [k for _, _, k in mgr.governor._partial_candidates(inst)][:2]
-    with pytest.warns(DeprecationWarning, match="descend"):
-        mgr.deflate_partial("i0", victims)
-    assert inst.state == ContainerState.PARTIAL
-    with pytest.warns(DeprecationWarning, match="descend"):
-        st = mgr.deflate("i0")
-    assert inst.state == ContainerState.HIBERNATE
-    assert st.swap_bytes + st.reap_bytes > 0
