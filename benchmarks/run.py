@@ -20,6 +20,8 @@
                      and nodes, adopted vs prefilled TTFT, sharing on/off
   gateway_latency  — network front door: streaming TTFT per SLO class
                      and container state over loopback HTTP, overload 429s
+  recovery         — failure domain: kill a node, re-home MTTR from
+                     replicated segments, post-recovery wake p99
   roofline         — brief: per-(arch x shape x mesh) roofline table
 
 `python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`
@@ -46,8 +48,9 @@ def main(argv=None):
     from benchmarks import (allocator, cluster_density, concurrency,
                             dedup_store, density, gateway_latency,
                             governor_density, latency_states, memory_states,
-                            prefix_density, reap_ablation, roofline,
-                            sharing, swap_throughput, wake_latency)
+                            prefix_density, reap_ablation, recovery,
+                            roofline, sharing, swap_throughput,
+                            wake_latency)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
@@ -59,6 +62,7 @@ def main(argv=None):
         ("cluster_density", cluster_density),
         ("prefix_density", prefix_density),
         ("gateway_latency", gateway_latency),
+        ("recovery", recovery),
         ("dedup_store", dedup_store),
         ("sharing", sharing),
         ("reap_ablation", reap_ablation),

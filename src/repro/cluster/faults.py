@@ -1,0 +1,253 @@
+"""Deterministic fault injection for the cluster layer.
+
+The chaos tests and ``benchmarks/recovery.py`` need to kill a node *at
+a named point* ("after the segments shipped but before the bundle
+landed"), flip a byte inside a transport frame, or crash a store
+between import and adopt — reproducibly, from a seed.  This module is
+that harness:
+
+  * Cluster code calls :func:`checkpoint("migrate.shipped", ...)` at
+    interesting points.  With no injector armed it is a dict lookup and
+    a return — zero cost, always on, never imported by ``repro.core``
+    (the core stays fault-free; tests crash core paths by
+    monkeypatching ``os`` primitives instead).
+  * A test arms a :class:`FaultInjector` with actions bound to points:
+    ``inj.arm("migrate.shipped", kill_node("n0"))``.  Actions fire on
+    the Nth hit (default first), once or always, and draw any
+    randomness (which byte to corrupt, how long to delay) from the
+    injector's seeded ``random.Random`` — same seed, same chaos.
+  * :class:`FaultyTransport` wraps any :class:`~.transport.Transport`
+    and applies frame-level mutations (drop / delay / corrupt /
+    truncate) to the segment stream, exercising the server's
+    protocol-error hardening end to end.
+
+Everything is stdlib-only and in-process; "kill node" means
+``Node.kill()`` (fail pending work, close sockets), not ``os.kill``.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from .transport import Transport, TransportError
+
+
+class FaultError(RuntimeError):
+    """Raised by the ``crash`` action: simulates the process dying at a
+    checkpoint.  Deliberately NOT a subclass of TransportError — code
+    under test must survive it via its generic cleanup paths."""
+
+
+@dataclass
+class _Arm:
+    action: Callable[[Any], None]
+    hit: int = 1          # fire on the Nth time the point is reached
+    repeat: bool = False  # keep firing on every hit >= `hit`
+    count: int = 0        # times the point was reached
+    fired: int = 0        # times the action ran
+
+
+class FaultInjector:
+    """Seeded registry of (checkpoint -> action) arms.
+
+    Use as a context manager to install it as the process-wide active
+    injector::
+
+        inj = FaultInjector(seed=7)
+        inj.arm("migrate.shipped", inj.kill_node(node0))
+        with inj:
+            ... drive the cluster ...
+        assert inj.fired("migrate.shipped") == 1
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+        self.seed = seed
+        self._arms: Dict[str, List[_Arm]] = {}
+        self._hits: Dict[str, int] = {}        # every checkpoint reached
+        self.log: List[Tuple[str, int]] = []   # (point, hit#) of fired arms
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------- arming
+    def arm(self, point: str, action: Callable[[Any], None], *,
+            hit: int = 1, repeat: bool = False) -> "FaultInjector":
+        with self._lock:
+            self._arms.setdefault(point, []).append(
+                _Arm(action=action, hit=hit, repeat=repeat))
+        return self
+
+    def hits(self, point: str) -> int:
+        with self._lock:
+            return self._hits.get(point, 0)
+
+    def fired(self, point: str) -> int:
+        with self._lock:
+            return sum(a.fired for a in self._arms.get(point, []))
+
+    # ------------------------------------------------------------- actions
+    @staticmethod
+    def crash() -> Callable[[Any], None]:
+        """Simulate the process dying here: raises :class:`FaultError`
+        out of the checkpoint, abandoning whatever was in flight."""
+        def _act(payload):
+            raise FaultError("injected crash")
+        return _act
+
+    @staticmethod
+    def kill_node(node) -> Callable[[Any], None]:
+        """Hard-kill a node at the checkpoint (then lets the caller
+        continue — the *next* interaction with the node fails)."""
+        def _act(payload):
+            node.kill()
+        return _act
+
+    @staticmethod
+    def call(fn: Callable[[], None]) -> Callable[[Any], None]:
+        def _act(payload):
+            fn()
+        return _act
+
+    # ------------------------------------------------------------- firing
+    def fire(self, point: str, payload: Any = None) -> None:
+        acts: List[Callable[[Any], None]] = []
+        with self._lock:
+            self._hits[point] = self._hits.get(point, 0) + 1
+            for a in self._arms.get(point, ()):
+                a.count += 1
+                due = a.count == a.hit or (a.repeat and a.count >= a.hit)
+                if due:
+                    a.fired += 1
+                    self.log.append((point, a.count))
+                    acts.append(a.action)
+        for act in acts:       # outside the lock: actions may re-enter
+            act(payload)
+
+    def __enter__(self) -> "FaultInjector":
+        _install(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _install(None)
+
+
+# ---------------------------------------------------------------- hookup
+_active: Optional[FaultInjector] = None
+_active_lock = threading.Lock()
+
+
+def _install(inj: Optional[FaultInjector]) -> None:
+    global _active
+    with _active_lock:
+        if inj is not None and _active is not None:
+            raise RuntimeError("a FaultInjector is already active")
+        _active = inj
+
+
+def checkpoint(point: str, payload: Any = None) -> None:
+    """Named fault point.  No-op unless an injector is active AND armed
+    for this point; the armed action may raise (crash) or mutate
+    cluster state (kill_node) before control returns."""
+    inj = _active
+    if inj is not None:
+        inj.fire(point, payload)
+
+
+# ------------------------------------------------------------ transport
+@dataclass
+class FrameFaults:
+    """Per-call frame mutations for :class:`FaultyTransport`, applied to
+    the ``send_segments`` stream.  Probabilities are evaluated against
+    the owning injector's seeded RNG — deterministic per seed."""
+    drop_p: float = 0.0        # silently drop a segment (server sees a gap)
+    corrupt_p: float = 0.0     # flip one byte of the payload
+    truncate_p: float = 0.0    # cut the payload short
+    delay_p: float = 0.0       # sleep before forwarding
+    delay_s: float = 0.0
+    fail_after: Optional[int] = None   # raise TransportError after N sends
+
+
+class FaultyTransport(Transport):
+    """Wraps a transport and mutates the segment stream per
+    :class:`FrameFaults`.  Corruption happens *on the wire* (between
+    export and import), so the receiver's content verification — not
+    the sender's checksum — is what must catch it."""
+
+    def __init__(self, inner: Transport, injector: FaultInjector,
+                 faults: Optional[FrameFaults] = None):
+        self.inner = inner
+        self.injector = injector
+        self.faults = faults or FrameFaults()
+        self.sent = 0
+        self.dropped = 0
+        self.corrupted = 0
+        self.truncated = 0
+
+    # pass-throughs
+    @property
+    def target_node_id(self):
+        return self.inner.target_node_id
+
+    def __getattr__(self, name):
+        # StorePeer pokes transport internals (e.g. the socket path's
+        # salt fingerprint); forward anything we don't mutate
+        return getattr(self.inner, name)
+
+    def authenticate(self, salt: bytes) -> None:
+        self.inner.authenticate(salt)
+
+    def missing_digests(self, digests):
+        return self.inner.missing_digests(digests)
+
+    def barrier(self) -> None:
+        self.inner.barrier()
+
+    def send_bundle(self, bundle) -> None:
+        checkpoint("transport.send_bundle", bundle)
+        self.inner.send_bundle(bundle)
+
+    def sweep_orphans(self, digests) -> int:
+        return self.inner.sweep_orphans(digests)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    # the mutated path
+    def send_segments(self, segments: Iterable[Tuple[bytes, int, int, bytes]]
+                      ) -> int:
+        return self.inner.send_segments(list(self._mutate(segments)))
+
+    def _mutate(self, segments):
+        rng, f = self.injector.rng, self.faults
+        for digest, level, raw_nbytes, payload in segments:
+            self.sent += 1
+            if f.fail_after is not None and self.sent > f.fail_after:
+                raise TransportError("injected transport failure")
+            if f.delay_p and rng.random() < f.delay_p:
+                import time
+                time.sleep(f.delay_s)
+            if f.drop_p and rng.random() < f.drop_p:
+                self.dropped += 1
+                continue
+            if f.truncate_p and payload and rng.random() < f.truncate_p:
+                self.truncated += 1
+                payload = payload[:rng.randrange(len(payload))]
+            elif f.corrupt_p and payload and rng.random() < f.corrupt_p:
+                self.corrupted += 1
+                i = rng.randrange(len(payload))
+                b = bytearray(payload)
+                b[i] ^= 1 + rng.randrange(255)   # guaranteed bit flip
+                payload = bytes(b)
+            yield digest, level, raw_nbytes, payload
+
+
+def corrupt_one_byte(buf: bytes, rng: random.Random) -> bytes:
+    """Flip one byte of ``buf`` (never a no-op); helper for tests that
+    corrupt a store file on disk rather than a wire frame."""
+    if not buf:
+        return buf
+    i = rng.randrange(len(buf))
+    b = bytearray(buf)
+    b[i] ^= 1 + rng.randrange(255)
+    return bytes(b)

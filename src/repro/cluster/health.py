@@ -1,0 +1,225 @@
+"""Node failure detection: leases, heartbeats, and an enumerated
+ALIVE -> SUSPECT -> DEAD machine.
+
+The cluster router treats node liveness exactly like the container
+lifecycle: a small enumerated state machine whose every edge is in one
+table, so the chaos tests can assert the detector never leaves the
+graph.  Mirrors :mod:`repro.core.state`:
+
+    ALIVE --MISS--> SUSPECT --EXPIRE--> DEAD
+      ^                |                  |
+      +-----BEAT-------+   (hysteresis)   +--REINSTATE--> ALIVE
+
+  * **ALIVE** — the node's lease is fresh (a heartbeat arrived within
+    ``suspect_after_s``).  Placement and rebalance treat it normally.
+  * **SUSPECT** — the lease lapsed.  The node takes no *new* tenants
+    and is skipped as a migration/replication target, but nothing is
+    torn down: a transient stall (GC pause, network blip) must not
+    trigger a cluster-wide re-home.
+  * **DEAD** — the lease stayed lapsed past ``dead_after_s`` (or direct
+    failure evidence arrived: connection refused, dispatch error).
+    Crossing this edge is the expensive one — the router re-homes every
+    tenant the node held from replicated segments — so it is guarded by
+    both timers *and* hysteresis on the way back: a DEAD node never
+    rejoins implicitly; an operator (or the node-agent's re-register
+    path) must ``reinstate`` it, and a flapping node that beats once
+    while SUSPECT needs ``revive_beats`` *consecutive* beats to count.
+
+There is deliberately no ALIVE -> DEAD edge: even direct failure
+evidence walks MISS then EXPIRE, so the history always shows the
+SUSPECT observation and an illegal jump is impossible by construction.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class NodeHealth(enum.Enum):
+    ALIVE = "alive"
+    SUSPECT = "suspect"
+    DEAD = "dead"
+
+
+class HealthEvent(enum.Enum):
+    MISS = "miss"              # lease lapsed past suspect_after_s
+    BEAT = "beat"              # revive_beats consecutive heartbeats
+    EXPIRE = "expire"          # lease lapsed past dead_after_s
+    REINSTATE = "reinstate"    # explicit readmission of a DEAD node
+
+
+H, HE = NodeHealth, HealthEvent
+
+#: (state, event) -> (next_state, tag) — every legal edge; anything else
+#: raises :class:`InvalidHealthTransition` (enumeration-tested like the
+#: container ladder's TRANSITIONS table)
+HEALTH_TRANSITIONS: Dict[Tuple[NodeHealth, HealthEvent],
+                         Tuple[NodeHealth, str]] = {
+    (H.ALIVE, HE.MISS):        (H.SUSPECT, "(s)"),
+    (H.SUSPECT, HE.BEAT):      (H.ALIVE, "(r)"),
+    (H.SUSPECT, HE.EXPIRE):    (H.DEAD, "(d)"),
+    (H.DEAD, HE.REINSTATE):    (H.ALIVE, "(a)"),
+}
+
+
+class InvalidHealthTransition(RuntimeError):
+    pass
+
+
+@dataclass
+class NodeHealthMachine:
+    """One node's liveness machine (same shape as
+    :class:`repro.core.state.StateMachine`, kept separate so liveness
+    edges can never be confused with container-lifecycle edges)."""
+    node_id: str = ""
+    state: NodeHealth = NodeHealth.ALIVE
+    history: List[Tuple[float, NodeHealth, HealthEvent, NodeHealth, str]] = \
+        field(default_factory=list)
+
+    def can(self, event: HealthEvent) -> bool:
+        return (self.state, event) in HEALTH_TRANSITIONS
+
+    def fire(self, event: HealthEvent, now: float = 0.0) -> NodeHealth:
+        key = (self.state, event)
+        if key not in HEALTH_TRANSITIONS:
+            raise InvalidHealthTransition(
+                f"{self.node_id}: event {event.value!r} invalid in "
+                f"health state {self.state.value!r}")
+        new, tag = HEALTH_TRANSITIONS[key]
+        self.history.append((now, self.state, event, new, tag))
+        self.state = new
+        return new
+
+
+@dataclass
+class HealthPolicy:
+    #: expected heartbeat cadence (what ``check_health`` callers should
+    #: roughly tick at; the detector itself is cadence-agnostic)
+    heartbeat_interval_s: float = 1.0
+    #: lease: no beat for this long -> SUSPECT
+    suspect_after_s: float = 3.0
+    #: no beat for this long (total, from the last beat) -> DEAD
+    dead_after_s: float = 10.0
+    #: hysteresis: a SUSPECT node needs this many *consecutive* beats to
+    #: return to ALIVE — one lucky packet from a flapping node must not
+    #: re-admit it as a placement/replication target
+    revive_beats: int = 2
+    #: direct failure evidence (connection refused, dispatch raised)
+    #: short-circuits the lease timers: MISS then EXPIRE immediately.
+    #: False keeps even hard evidence on the timer path (debug knob).
+    fail_fast: bool = True
+
+
+class FailureDetector:
+    """Lease/heartbeat failure detector over a fixed node set.
+
+    Time is injected (``now``) so virtual-time benchmarks and the chaos
+    tests drive it deterministically.  A node's lease starts at its
+    first observation (beat or step) — mixing wall-clock construction
+    with virtual-time ticks can therefore never fabricate a lapse.
+
+    Transitions are reported back from :meth:`step` /
+    :meth:`observe_failure` and fanned out to ``on_transition``
+    subscribers; the router's DEAD subscriber is what triggers
+    recovery.
+    """
+
+    def __init__(self, node_ids, policy: Optional[HealthPolicy] = None):
+        self.policy = policy or HealthPolicy()
+        self.machines: Dict[str, NodeHealthMachine] = {
+            nid: NodeHealthMachine(nid) for nid in node_ids}
+        self._last_beat: Dict[str, Optional[float]] = {
+            nid: None for nid in self.machines}
+        self._revive_streak: Dict[str, int] = {
+            nid: 0 for nid in self.machines}
+        self.on_transition: List[Callable[[str, NodeHealth, NodeHealth],
+                                          None]] = []
+        self.ignored_beats = 0          # beats from DEAD nodes (no resurrect)
+        self._lock = threading.RLock()
+
+    # -------------------------------------------------------------- queries
+    def state(self, node_id: str) -> NodeHealth:
+        return self.machines[node_id].state
+
+    def is_dead(self, node_id: str) -> bool:
+        return self.machines[node_id].state is H.DEAD
+
+    def alive_ids(self) -> List[str]:
+        """Nodes usable as placement/replication targets (strictly
+        ALIVE — a SUSPECT node serves what it has but takes nothing
+        new)."""
+        return [nid for nid, m in self.machines.items()
+                if m.state is H.ALIVE]
+
+    # -------------------------------------------------------------- inputs
+    def beat(self, node_id: str, now: float) -> NodeHealth:
+        """A heartbeat (or any successful interaction) from the node."""
+        with self._lock:
+            m = self.machines[node_id]
+            if m.state is H.DEAD:
+                # no implicit resurrection: a partitioned node coming
+                # back after its tenants were re-homed must re-register
+                # (reinstate) so it never serves stale placements
+                self.ignored_beats += 1
+                return m.state
+            self._last_beat[node_id] = now
+            if m.state is H.SUSPECT:
+                self._revive_streak[node_id] += 1
+                if self._revive_streak[node_id] >= self.policy.revive_beats:
+                    self._fire(m, HE.BEAT, now)
+                    self._revive_streak[node_id] = 0
+            return m.state
+
+    def step(self, now: float) -> List[Tuple[str, NodeHealth, NodeHealth]]:
+        """One lease-expiry pass; returns ``(node_id, old, new)`` for
+        every transition it fired."""
+        out: List[Tuple[str, NodeHealth, NodeHealth]] = []
+        with self._lock:
+            for nid, m in self.machines.items():
+                last = self._last_beat[nid]
+                if last is None:             # first observation seeds lease
+                    self._last_beat[nid] = now
+                    continue
+                age = now - last
+                if m.state is H.ALIVE and \
+                        age >= self.policy.suspect_after_s:
+                    out.append((nid, m.state, self._fire(m, HE.MISS, now)))
+                    self._revive_streak[nid] = 0
+                if m.state is H.SUSPECT and \
+                        age >= self.policy.dead_after_s:
+                    out.append((nid, m.state, self._fire(m, HE.EXPIRE, now)))
+        return out
+
+    def observe_failure(self, node_id: str, now: float) -> NodeHealth:
+        """Direct failure evidence (connection refused, dispatch error).
+        With ``fail_fast`` this walks MISS -> EXPIRE immediately — both
+        edges fire, so the history still shows the enumerated path."""
+        with self._lock:
+            m = self.machines[node_id]
+            self._revive_streak[node_id] = 0
+            if m.state is H.ALIVE:
+                self._fire(m, HE.MISS, now)
+            if m.state is H.SUSPECT and self.policy.fail_fast:
+                self._fire(m, HE.EXPIRE, now)
+            return m.state
+
+    def reinstate(self, node_id: str, now: float) -> NodeHealth:
+        """Explicit readmission of a DEAD node (operator / re-register
+        path).  Its lease restarts fresh."""
+        with self._lock:
+            m = self.machines[node_id]
+            state = self._fire(m, HE.REINSTATE, now)
+            self._last_beat[node_id] = now
+            self._revive_streak[node_id] = 0
+            return state
+
+    # -------------------------------------------------------------- internal
+    def _fire(self, m: NodeHealthMachine, event: HealthEvent,
+              now: float) -> NodeHealth:
+        old = m.state
+        new = m.fire(event, now)
+        for fn in self.on_transition:
+            fn(m.node_id, old, new)
+        return new

@@ -54,6 +54,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.cluster.faults import checkpoint
 from repro.cluster.transport import (AuthError, LoopbackTransport,
                                      Transport, TransportError)
 from repro.core.governor import MIGRATABLE_STATES
@@ -390,6 +391,84 @@ def _populate_target(mgr, inst: ModelInstance,
     return inst
 
 
+def bundle_digests(bundle: _Bundle) -> frozenset:
+    """Every CAS digest a bundle's tenant references (unit extents plus
+    prefix-registry extents) — the content fingerprint replication and
+    recovery operate on."""
+    return frozenset(
+        {m.digest for m in bundle.extents.values() if m.digest is not None}
+        | {m.digest for m in bundle.prefix_extents.values()
+           if m.digest is not None})
+
+
+@dataclass
+class ReplicaRecord:
+    """One tenant's recovery replica as held by a non-home node: the
+    full metadata bundle plus the digest set pinned in the holder's
+    store.  ``receive_bundle(holder, rec.bundle)`` is the entire
+    recovery path — the same code migration commits through."""
+    bundle: _Bundle
+    digests: frozenset
+    source_node_id: str
+    stored_bytes: int = 0
+
+    @property
+    def instance_id(self) -> str:
+        return self.bundle.instance_id
+
+
+def replicate_instance(src_node, dst_node, instance_id: str,
+                       arch_key: str, *,
+                       transport: Optional[Transport] = None
+                       ) -> ReplicaRecord:
+    """Copy a hibernated tenant's recovery substrate onto ``dst_node``
+    without moving the tenant: ship the digests its bundle references
+    (dedup-aware — shared base weights usually cost zero bytes), pin
+    them in the holder's store so local GC cannot free them, and record
+    the bundle.  The source stays the home; the replica only ever
+    activates through :func:`receive_bundle` during crash recovery.
+
+    Only HIBERNATE tenants replicate: their disk state is complete and
+    frozen, so the bundle is a consistent snapshot by construction (a
+    PARTIAL tenant's next deflate would invalidate it immediately)."""
+    mgr = src_node.manager
+    if transport is None:
+        transport = LoopbackTransport(dst_node=dst_node)
+    peer = StorePeer(mgr.store, transport=transport)
+
+    lock = src_node.engine.instance_lock(instance_id)
+    if not lock.acquire(blocking=False):
+        raise MigrationError(f"{instance_id}: busy serving")
+    try:
+        inst = mgr.instances.get(instance_id)
+        if inst is None:
+            raise MigrationError(f"{instance_id}: not on node "
+                                 f"{src_node.node_id}")
+        if inst.state != S.HIBERNATE:
+            raise MigrationError(
+                f"{instance_id}: state {inst.state.value} — only "
+                f"HIBERNATE tenants replicate")
+        bundle = _export_bundle(src_node, inst, arch_key)
+    finally:
+        lock.release()
+
+    digests = bundle_digests(bundle)
+    stats = TransferStats()
+    try:
+        peer.ship(sorted(digests), stats)
+        checkpoint("replicate.shipped", instance_id)
+        stored = dst_node.store.pin_replicas(digests)
+    except BaseException:
+        peer.release_remote()
+        raise
+    peer.adopted()          # pinned: the pins are the references now
+    rec = ReplicaRecord(bundle=bundle, digests=digests,
+                        source_node_id=src_node.node_id,
+                        stored_bytes=stored)
+    dst_node.replicas[instance_id] = rec
+    return rec
+
+
 def receive_bundle(dst_node, bundle: _Bundle) -> ModelInstance:
     """Target-side bundle commit: rebuild the hibernated husk and admit
     it.  This is the single entry point both transports call — the
@@ -469,23 +548,25 @@ def migrate_instance(src_node, dst_node, instance_id: str, arch_key: str,
         st = handle.stats
         try:
             bundle = _export_bundle(src_node, inst, arch_key)
+            checkpoint("migrate.exported", instance_id)
             st.meta_bytes = bundle.meta_bytes()
             st.full_snapshot_bytes = sum(
                 m.nbytes for m in bundle.extents.values())
-            digests = sorted(
-                {m.digest for m in bundle.extents.values()
-                 if m.digest is not None}
-                # prefix segments ride the same dedup-aware transfer: a
-                # target already holding the prompt's pages ships nothing
-                | {m.digest for m in bundle.prefix_extents.values()
-                   if m.digest is not None})
+            # prefix segments ride the same dedup-aware transfer: a
+            # target already holding the prompt's pages ships nothing
+            digests = sorted(bundle_digests(bundle))
             peer.ship(digests, st)
+            # fault point between import and adopt: a crash here leaves
+            # refcount-zero imports on the target that the abort sweep
+            # (or the server's connection teardown) must reclaim
+            checkpoint("migrate.shipped", instance_id)
             # commit: target first (the tenant must exist somewhere at
             # every instant), then the source forgets + GCs
             peer.transport.send_bundle(bundle)
             peer.adopted()
             inst.sm.fire(Event.MIGRATE_DONE)
             handle.committed = True
+            checkpoint("migrate.committed", instance_id)
         except BaseException as e:
             # abort: the source's disk state was never mutated
             # destructively — fall back to a plain hibernated tenant;

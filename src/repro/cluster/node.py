@@ -48,6 +48,14 @@ class Node:
         self.engine = ServingEngine(self.manager)
         self.platform: Optional[AsyncPlatform] = None
         self.peer_server = None
+        #: liveness: flipped by :meth:`kill` (crash simulation) — the
+        #: router's failure detector turns missed :meth:`ping` beats into
+        #: SUSPECT/DEAD and triggers recovery
+        self.alive = True
+        #: tenant replicas this node holds for OTHER nodes:
+        #: instance_id -> :class:`~repro.cluster.migrate.ReplicaRecord`
+        #: (digests pinned in this node's store)
+        self.replicas: Dict[str, object] = {}
 
     # ------------------------------------------------------------- surface
     @property
@@ -151,6 +159,44 @@ class Node:
                 bundle_handler=lambda b: receive_bundle(self, b),
                 host=host, port=port)
         return self.peer_server.address
+
+    # ------------------------------------------------------------- liveness
+    def ping(self) -> bool:
+        """Heartbeat probe: does the node answer?  In-process stand-in
+        for the node-agent's lease renewal RPC."""
+        return self.alive
+
+    def kill(self) -> None:
+        """Crash simulation: the node stops answering *now*.
+
+        Everything in flight dies the way a real crash kills it — queued
+        and executing requests fail with ``NodeDownError`` (the gateway's
+        idempotent re-dispatch picks them up), the peer server stops
+        accepting, and the platform is stopped without drain.  The
+        node's disk state is left exactly as the crash found it; only
+        :meth:`ClusterRouter.recover_node` may touch it after this."""
+        if not self.alive:
+            return
+        self.alive = False
+        from repro.serving.engine import NodeDownError
+        if self.platform is not None:
+            self.platform.fail_pending(
+                NodeDownError(f"node {self.node_id} crashed"))
+            self.platform.stop(drain=False)
+            self.platform = None
+        if self.peer_server is not None:
+            self.peer_server.close()
+            self.peer_server = None
+
+    def drop_replica(self, instance_id: str) -> int:
+        """Forget a replica held for another node (tenant terminated,
+        holder rotated out, or the replica was just promoted by
+        adoption): unpin its digests so GC can reclaim whatever no local
+        tenant references.  Returns bytes reclaimed."""
+        rec = self.replicas.pop(instance_id, None)
+        if rec is None or self.store is None:
+            return 0
+        return self.store.unpin_replicas(rec.digests)
 
     def close(self) -> None:
         self.stop()

@@ -36,12 +36,17 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.cluster.health import (FailureDetector, HealthPolicy,
+                                  NodeHealth)
 from repro.cluster.migrate import (MigrationError, MigrationHandle,
-                                   migrate_instance)
+                                   migrate_instance, receive_bundle,
+                                   replicate_instance)
 from repro.cluster.node import Node
 from repro.core.prefix import PREFIX_OWNER
 from repro.core.state import ContainerState
-from repro.serving.engine import Request, Response, TenantMigrated
+from repro.core.store import CorruptSegmentError
+from repro.serving.engine import (NodeDownError, Request, Response,
+                                  TenantMigrated)
 from repro.serving.scheduler import PlatformPolicy
 
 S = ContainerState
@@ -87,6 +92,14 @@ class ClusterPolicy:
     #: segments older than this (a peer that died mid-transfer without
     #: aborting leaves them; see ``SwapStore.sweep_orphans``)
     orphan_max_age_s: float = 300.0
+    #: failure domain: how many stores must hold every hibernated
+    #: tenant's digests (home + k-1 replicas); 1 disables replication
+    replication_factor: int = 2
+    #: anti-entropy cap per round — replication rides the same link the
+    #: serve path uses, so it must not stampede either
+    max_replications_per_round: int = 4
+    #: lease/heartbeat tuning for the failure detector (None = defaults)
+    health: Optional[HealthPolicy] = None
 
 
 class ClusterRouter:
@@ -116,10 +129,124 @@ class ClusterRouter:
         self._blacklist: Dict[str, float] = {}
         self.cooldown_skips = 0
         self.migration_retries = 0
+        #: failure domain: lease detector over the node set; DEAD
+        #: transitions trigger :meth:`recover_node`
+        self.detector = FailureDetector(self.nodes,
+                                        self.policy.health)
+        self.tenants_rehomed = 0
+        self.tenants_lost = 0          # no complete replica anywhere
+        self.replications = 0
+        self.repairs_served = 0        # scrub/read repairs fed from peers
         self._lock = threading.RLock()
         for n in nodes:
             if n.platform is not None:
                 n.platform.reroute = self._reroute
+            if n.store is not None:
+                n.store.repair_source = self._make_repair_source(n)
+
+    # ------------------------------------------------------------ health
+    def alive_nodes(self) -> List[Node]:
+        """Nodes usable as placement/replication/migration targets:
+        detector-ALIVE and actually answering."""
+        return [self.nodes[nid] for nid in self.detector.alive_ids()
+                if self.nodes[nid].alive]
+
+    def check_health(self, now: Optional[float] = None) -> List[tuple]:
+        """One heartbeat + lease round: beat every node that answers,
+        expire lapsed leases, and run recovery for every node that
+        crossed into DEAD.  Returns the detector transitions."""
+        now = time.monotonic() if now is None else now
+        for nid, node in self.nodes.items():
+            if node.ping():
+                self.detector.beat(nid, now)
+        fired = self.detector.step(now)
+        for nid, old, new in fired:
+            self.log.append((now, "health", nid, old.value, new.value))
+            if new is NodeHealth.DEAD:
+                self.recover_node(nid, now)
+        return fired
+
+    def _node_down(self, nid: str, now: float) -> None:
+        """Direct failure evidence beats the lease timers: walk the
+        detector to DEAD and recover immediately."""
+        was_dead = self.detector.is_dead(nid)
+        state = self.detector.observe_failure(nid, now)
+        if state is NodeHealth.DEAD and not was_dead:
+            self.log.append((now, "health", nid, "evidence", "dead"))
+            self.recover_node(nid, now)
+
+    def _make_repair_source(self, node: Node):
+        """Wire a node store's ``repair_source`` hook: fetch a verified
+        copy of a digest from any *other* alive node's store.  The
+        store re-verifies the content address before installing, so this
+        only has to find bytes, not vouch for them."""
+        def fetch(digest: bytes):
+            for peer in self.alive_nodes():
+                if peer is node or peer.store is None:
+                    continue
+                try:
+                    items = peer.store.export_segments([digest])
+                except (KeyError, CorruptSegmentError):
+                    continue
+                if items:
+                    self.repairs_served += 1
+                    _, level, raw_nbytes, payload = items[0]
+                    return level, raw_nbytes, payload
+            return None
+        return fetch
+
+    # ------------------------------------------------------------ recovery
+    def recover_node(self, nid: str, now: Optional[float] = None
+                     ) -> List[tuple]:
+        """Re-home every tenant the dead node held onto survivors, from
+        replicated segments — never from the dead node's own disk.
+
+        For each tenant: the best-scoring alive holder of a *complete*
+        replica adopts the bundle through :func:`receive_bundle` (the
+        exact path migration commits through, so post-recovery wakes are
+        byte-identical to pre-crash wakes), then drops its replica pins —
+        the adoption's refcounts carry the segments now.  A tenant with
+        no complete replica anywhere is lost: its placement is cleared
+        and the next request cold-starts it fresh."""
+        now = time.monotonic() if now is None else now
+        dead = self.nodes[nid]
+        acts: List[tuple] = []
+        with self._lock:
+            homed = [iid for iid, home in self.placement.items()
+                     if home == nid]
+        for iid in homed:
+            holders: List[Tuple[Node, object]] = []
+            for peer in self.alive_nodes():
+                rec = peer.replicas.get(iid)
+                if rec is None or peer.store is None:
+                    continue
+                if peer.store.missing_digests(rec.digests):
+                    continue               # incomplete/corrupt: not a holder
+                holders.append((peer, rec))
+            if not holders:
+                with self._lock:
+                    self.placement.pop(iid, None)
+                self.tenants_lost += 1
+                acts.append(("lost", iid))
+                self.log.append((now, "tenant_lost", iid, nid))
+                continue
+            arch = self.arch_of.get(iid, "")
+            digests = self.deployment_digests(arch)
+            pfx = self.deployment_prefix_digests(arch)
+            holder, rec = max(
+                holders, key=lambda hr: self.placement_score(
+                    hr[0], arch, now, digests=digests, prefix_digests=pfx))
+            receive_bundle(holder, rec.bundle)
+            holder.drop_replica(iid)       # adoption's refs carry it now
+            with self._lock:
+                self.placement[iid] = holder.node_id
+            self.tenants_rehomed += 1
+            acts.append(("rehome", iid, holder.node_id))
+            self.log.append((now, "rehome", iid, nid, holder.node_id))
+        # replicas the dead node held FOR survivors are gone with its
+        # disk; the next anti-entropy round re-replicates those tenants
+        dead.replicas.clear()
+        return acts
 
     # ------------------------------------------------------------ placement
     def deployment_digests(self, arch_key: str) -> frozenset:
@@ -129,7 +256,7 @@ class ClusterRouter:
         out = set()
         for node in self.nodes.values():
             store = node.store
-            if store is None:
+            if store is None or not node.alive:
                 continue
             with node.manager._lock:
                 iids = list(node.manager.instances)
@@ -150,7 +277,7 @@ class ClusterRouter:
         out = set()
         for node in self.nodes.values():
             reg = node.manager.prefix_registry
-            if reg is None:
+            if reg is None or not node.alive:
                 continue
             for d in reg.digests():
                 e = reg.get(d)
@@ -188,7 +315,8 @@ class ClusterRouter:
             self.arch_of.setdefault(instance_id, arch_key)
             digests = self.deployment_digests(arch_key)
             pfx = self.deployment_prefix_digests(arch_key)
-            best = max(self.nodes.values(),
+            candidates = self.alive_nodes() or list(self.nodes.values())
+            best = max(candidates,
                        key=lambda n: self.placement_score(
                            n, arch_key, now, digests=digests,
                            prefix_digests=pfx))
@@ -215,6 +343,12 @@ class ClusterRouter:
             node = self.node_of(iid)
             if node is None:
                 node = self.place(iid, self.arch_of[iid], now=now)
+            if not node.alive:
+                # direct evidence: the home crashed — recovery re-homes
+                # the tenant from a replica (or clears the placement so
+                # the next loop iteration cold-starts it on a survivor)
+                self._node_down(node.node_id, now)
+                continue
             if not observed:
                 # exactly once per request: a handoff retry must not
                 # re-feed the same arrival (a zero gap would collapse
@@ -233,14 +367,19 @@ class ClusterRouter:
 
     def submit(self, req: Request):
         """Async serve path: enqueue on the tenant's node's platform."""
-        node = self.node_of(req.instance_id)
-        if node is None:
-            node = self.place(req.instance_id,
-                              self.arch_of[req.instance_id])
-        if node.platform is None:
-            raise RuntimeError(f"node {node.node_id} has no platform "
-                               "(call Node.start_platform)")
-        return node.platform.submit(req)
+        for _ in range(len(self.nodes) + 1):
+            node = self.node_of(req.instance_id)
+            if node is None:
+                node = self.place(req.instance_id,
+                                  self.arch_of[req.instance_id])
+            if not node.alive:
+                self._node_down(node.node_id, time.monotonic())
+                continue
+            if node.platform is None:
+                raise RuntimeError(f"node {node.node_id} has no platform "
+                                   "(call Node.start_platform)")
+            return node.platform.submit(req)
+        raise NodeDownError(f"no alive node for {req.instance_id}")
 
     def _reroute(self, iid: str, reqs, futs) -> bool:
         """AsyncPlatform hook: a worker hit ``TenantMigrated`` — chase
@@ -327,7 +466,7 @@ class ClusterRouter:
         # the typical HIBERNATED victim this term is zero
         unstored = gov._anon_resident_bytes(inst)
         best: Optional[Tuple[Node, float]] = None
-        for node in self.nodes.values():
+        for node in self.alive_nodes():
             if node is src or node.node_id in exclude:
                 continue
             if self._blacklist.get(node.node_id, -1e18) > now:
@@ -359,7 +498,11 @@ class ClusterRouter:
         resort, exactly one rung below MIGRATING."""
         now = time.monotonic() if now is None else now
         actions: List[tuple] = []
+        for nid, _old, new in self.check_health(now):
+            actions.append(("health", nid, new.value))
         for nid, node in self.nodes.items():
+            if not node.alive or self.detector.is_dead(nid):
+                continue
             gov = node.governor
             if node.store is not None:
                 node.store.sweep_orphans(
@@ -384,9 +527,89 @@ class ClusterRouter:
             if not migrated and gov.pressure_bytes() > 0 \
                     and self.policy.terminate_last_resort:
                 actions += self._terminate_for_pressure(node, now)
+        actions += self.anti_entropy(now)
         if actions:
             self.log.append((now, "rebalance", tuple(actions)))
         return actions
+
+    # ---------------------------------------------------------- replication
+    def _replica_holders(self, iid: str, home: Node) -> List[Node]:
+        """Alive peers currently holding a complete, verified replica of
+        the tenant (incomplete or quarantined copies don't count)."""
+        out = []
+        for peer in self.alive_nodes():
+            if peer is home:
+                continue
+            rec = peer.replicas.get(iid)
+            if rec is None or peer.store is None:
+                continue
+            if peer.store.missing_digests(rec.digests):
+                continue
+            out.append(peer)
+        return out
+
+    def anti_entropy(self, now: Optional[float] = None) -> List[tuple]:
+        """Replication repair round: every alive node's HIBERNATE
+        tenants end with >= ``replication_factor - 1`` complete replicas
+        on other alive stores.  Runs as part of :meth:`rebalance`, so a
+        holder dying is healed on the next round — and because holders
+        are re-verified (missing/corrupt digests disqualify), a replica
+        rotting on disk is re-shipped the same way.  Capped per round;
+        the sustained rounds finish the job."""
+        k = self.policy.replication_factor
+        if k <= 1:
+            return []
+        now = time.monotonic() if now is None else now
+        acts: List[tuple] = []
+        budget = self.policy.max_replications_per_round
+        for home in self.alive_nodes():
+            if budget <= 0:
+                break
+            with home.manager._lock:
+                tenants = [iid for iid, inst
+                           in home.manager.instances.items()
+                           if inst.state == S.HIBERNATE]
+            # stale replica GC: drop records for tenants that no longer
+            # exist anywhere, or that this node is now the home of
+            for iid, rec in list(home.replicas.items()):
+                if self.placement.get(iid) == home.node_id or \
+                        iid not in self.placement:
+                    home.drop_replica(iid)
+            for iid in tenants:
+                if budget <= 0:
+                    break
+                if self.placement.get(iid) != home.node_id:
+                    continue
+                holders = self._replica_holders(iid, home)
+                need = (k - 1) - len(holders)
+                if need <= 0:
+                    continue
+                arch = self.arch_of.get(iid, "")
+                digests = self.deployment_digests(arch)
+                pfx = self.deployment_prefix_digests(arch)
+                taken = {h.node_id for h in holders}
+                targets = sorted(
+                    (n for n in self.alive_nodes()
+                     if n is not home and n.node_id not in taken
+                     and n.store is not None),
+                    key=lambda n: self.placement_score(
+                        n, arch, now, digests=digests,
+                        prefix_digests=pfx),
+                    reverse=True)
+                for tgt in targets[:need]:
+                    if budget <= 0:
+                        break
+                    try:
+                        replicate_instance(home, tgt, iid, arch)
+                    except MigrationError:
+                        continue          # busy serving / state changed
+                    self.replications += 1
+                    budget -= 1
+                    acts.append(("replicate", iid, home.node_id,
+                                 tgt.node_id))
+                    self.log.append((now, "replicate", iid,
+                                     home.node_id, tgt.node_id))
+        return acts
 
     def _migrate_for_pressure(self, node: Node, now: float) -> List[tuple]:
         gov = node.governor
@@ -479,6 +702,16 @@ class ClusterRouter:
             "full_snapshot_bytes": sum(h.stats.full_snapshot_bytes
                                        for h in done),
             "link_seconds": sum(h.stats.link_seconds for h in done),
+            "tenants_rehomed": self.tenants_rehomed,
+            "tenants_lost": self.tenants_lost,
+            "replications": self.replications,
+            "repairs_served": self.repairs_served,
+            "nodes_dead": sum(
+                1 for nid in self.nodes
+                if self.detector.state(nid) == NodeHealth.DEAD),
+            "nodes_suspect": sum(
+                1 for nid in self.nodes
+                if self.detector.state(nid) == NodeHealth.SUSPECT),
         }
 
     def close(self) -> None:

@@ -49,6 +49,12 @@ class TransportError(RuntimeError):
     """The channel failed mid-transfer (connection loss, peer error)."""
 
 
+class ProtocolError(TransportError):
+    """The peer spoke garbage (oversized frame, undecodable payload).
+    Unlike an application error, the connection cannot be trusted to be
+    frame-aligned any more — the only safe handling is to close it."""
+
+
 class AuthError(TransportError):
     """The peer could not prove possession of the deployment salt."""
 
@@ -146,9 +152,14 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return bytes(buf)
 
 
-def _read_frame(sock: socket.socket) -> Tuple[int, bytes]:
+def _read_frame(sock: socket.socket,
+                max_bytes: int = wire.MAX_FRAME_BYTES
+                ) -> Tuple[int, bytes]:
     try:
-        return wire.read_frame(lambda n: _recv_exact(sock, n))
+        return wire.read_frame(lambda n: _recv_exact(sock, n), max_bytes)
+    except wire.WireError as e:
+        # a bad length prefix means framing is lost for good
+        raise ProtocolError(f"bad frame: {e}") from e
     except (OSError, struct.error) as e:
         raise TransportError(f"recv failed: {e}") from e
 
@@ -183,15 +194,21 @@ class SocketTransport(Transport):
     @classmethod
     def connect(cls, addr: Tuple[str, int], salt: bytes, *,
                 node_id: str = "", window: int = 4,
-                timeout: float = 30.0) -> "SocketTransport":
+                timeout: float = 30.0,
+                io_timeout_s: Optional[float] = None) -> "SocketTransport":
         """Dial a :class:`StoreServer` and run the salt handshake.
 
         Server sends ``HELLO{proto, node_id, nonce_s}``; we answer
         ``AUTH{node_id, nonce_c, proof}`` where the proof is
         keyed-BLAKE2b(salt, nonce_s‖nonce_c‖"client"); the server's
-        ``AUTH_OK`` carries the mirrored proof so auth is mutual."""
+        ``AUTH_OK`` carries the mirrored proof so auth is mutual.
+
+        ``timeout`` bounds the dial; ``io_timeout_s`` (default: same) is
+        the per-recv/send deadline for the channel's lifetime — a hung
+        or half-open peer raises :class:`TransportError` instead of
+        wedging a wake or migration thread forever."""
         sock = socket.create_connection(addr, timeout=timeout)
-        sock.settimeout(timeout)
+        sock.settimeout(timeout if io_timeout_s is None else io_timeout_s)
         try:
             t = cls(sock, window=window)
             mt, payload = _read_frame(sock)
@@ -312,10 +329,21 @@ class StoreServer:
 
     def __init__(self, store, *, node_id: str = "",
                  bundle_handler: Optional[Callable] = None,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 io_timeout_s: float = 60.0,
+                 max_frame_bytes: Optional[int] = None):
         self.store = store
         self.node_id = node_id
         self.bundle_handler = bundle_handler
+        #: per-recv/send deadline on every connection: a peer that stops
+        #: mid-frame is closed (and its orphan imports swept) instead of
+        #: pinning a server thread forever
+        self.io_timeout_s = io_timeout_s
+        #: bound on the *declared* frame length this server will honour
+        #: (clamped to the protocol cap) — rejected before allocation
+        self.max_frame_bytes = (wire.MAX_FRAME_BYTES
+                                if max_frame_bytes is None
+                                else max_frame_bytes)
         self._listener = socket.create_server((host, port))
         self.address: Tuple[str, int] = self._listener.getsockname()[:2]
         self._closing = threading.Event()
@@ -325,6 +353,7 @@ class StoreServer:
         self.auth_failures = 0
         self.transfers = 0
         self.orphans_swept = 0
+        self.protocol_errors = 0
         self._accept_thread = threading.Thread(
             target=self._accept_loop, daemon=True,
             name=f"store-server-{node_id or self.address[1]}")
@@ -350,22 +379,35 @@ class StoreServer:
     def _serve_conn(self, sock: socket.socket) -> None:
         imported: set = set()
         try:
-            sock.settimeout(60.0)
+            sock.settimeout(self.io_timeout_s)
             if not self._handshake(sock):
                 return
             while True:
                 try:
-                    mt, payload = _read_frame(sock)
+                    mt, payload = _read_frame(sock, self.max_frame_bytes)
+                except ProtocolError as e:
+                    # oversized/garbled length prefix: framing is gone —
+                    # protocol error, close (finally sweeps imports)
+                    self._protocol_error(sock, e)
+                    return
                 except TransportError:
                     return                  # peer vanished: finally sweeps
                 if mt == MSG_BYE:
                     return
                 try:
                     self._dispatch(sock, mt, payload, imported)
-                except (wire.WireError, KeyError, TransportError,
-                        RuntimeError) as e:
+                except (wire.WireError, ProtocolError) as e:
+                    # undecodable payload: the stream cannot be trusted
+                    # to be frame-aligned — same treatment
+                    self._protocol_error(sock, e)
+                    return
+                except (KeyError, TransportError, RuntimeError) as e:
+                    # application error: the frame itself was well-formed,
+                    # so reply and keep serving the connection
                     _write_frame(sock, MSG_ERR, wire.encode_value(
                         {"error": f"{type(e).__name__}: {e}"}))
+        except (wire.WireError, ProtocolError) as e:
+            self._protocol_error(sock, e)   # garbage during handshake
         except (OSError, TransportError):
             pass
         finally:
@@ -379,12 +421,24 @@ class StoreServer:
                 if sock in self._conns:
                     self._conns.remove(sock)
 
+    def _protocol_error(self, sock: socket.socket, e: Exception) -> None:
+        """Per-connection protocol failure: count it, best-effort tell
+        the peer, and let the caller close the connection.  The accept
+        loop is untouched — one garbage peer never takes the server
+        down."""
+        self.protocol_errors += 1
+        try:
+            _write_frame(sock, MSG_ERR, wire.encode_value(
+                {"error": f"protocol error: {e}"}))
+        except TransportError:
+            pass
+
     def _handshake(self, sock: socket.socket) -> bool:
         nonce_s = os.urandom(16)
         _write_frame(sock, MSG_HELLO, wire.encode_value({
             "proto": PROTOCOL_VERSION, "node_id": self.node_id,
             "nonce": nonce_s}))
-        mt, payload = _read_frame(sock)
+        mt, payload = _read_frame(sock, self.max_frame_bytes)
         if mt != MSG_AUTH:
             self.auth_failures += 1
             _write_frame(sock, MSG_ERR,

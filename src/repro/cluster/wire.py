@@ -361,10 +361,16 @@ def pack_frame(msg_type: int, payload: bytes) -> bytes:
     return _FRAME_HDR.pack(len(payload), msg_type) + payload
 
 
-def read_frame(recv_exact) -> Tuple[int, bytes]:
-    """Read one frame via ``recv_exact(n) -> bytes`` (raises on EOF)."""
+def read_frame(recv_exact, max_bytes: int = MAX_FRAME_BYTES
+               ) -> Tuple[int, bytes]:
+    """Read one frame via ``recv_exact(n) -> bytes`` (raises on EOF).
+
+    The declared length is bounded *before* any payload byte is read —
+    ``max_bytes`` lets a server clamp below the protocol-wide cap, so a
+    hostile or corrupt header can never make the receiver allocate
+    gigabytes."""
     hdr = recv_exact(_FRAME_HDR.size)
     length, msg_type = _FRAME_HDR.unpack(hdr)
-    if length > MAX_FRAME_BYTES:
+    if length > min(max_bytes, MAX_FRAME_BYTES):
         raise WireError(f"frame length {length}B exceeds cap")
     return msg_type, recv_exact(length)

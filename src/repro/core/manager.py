@@ -123,6 +123,13 @@ class ManagerConfig:
     prefix_sharing: bool = True
     #: prompts shorter than this never enter the registry
     prefix_min_tokens: int = 4
+    #: background store-scrub cadence: every ``scrub_interval_s`` the
+    #: store CRC-verifies up to ``scrub_bytes_per_round`` of segments,
+    #: quarantining corruption (and repairing it from replica peers when
+    #: the cluster router has installed a ``repair_source``).  None
+    #: disables the daemon; requires ``dedup_store``.
+    scrub_interval_s: Optional[float] = None
+    scrub_bytes_per_round: int = 64 << 20
 
 
 class InstanceManager:
@@ -141,6 +148,10 @@ class InstanceManager:
                                 salt=cfg.store_salt,
                                 policy=cfg.store_policy)
                       if cfg.dedup_store else None)
+        if self.store is not None and cfg.scrub_interval_s is not None:
+            self.store.start_scrubber(
+                interval_s=cfg.scrub_interval_s,
+                bytes_per_round=cfg.scrub_bytes_per_round)
         self.inflator = InflatorPool(cfg.inflate_workers)
         self.prefix_registry = (PrefixRegistry(
             self.pool, self.store, salt=cfg.store_salt,

@@ -92,6 +92,26 @@ class _Segment:
     #: between import and adopt leaves these, and the orphan sweep
     #: (:meth:`SwapStore.sweep_orphans`) reclaims them
     imported_at: Optional[float] = None
+    #: CRC32 of the *stored* payload, computed when the bytes were last
+    #: known-good (put/import/repair); every read path verifies it, so a
+    #: flipped bit on disk surfaces as :class:`CorruptSegmentError`
+    #: instead of silently feeding bad bytes to every sharer
+    crc: int = 0
+    #: replica pins (cluster anti-entropy): a pinned segment survives GC
+    #: even at refcount zero — it is another node's recovery substrate
+    pins: int = 0
+    #: quarantined: a read/scrub found the on-disk bytes disagree with
+    #: ``crc``.  The extent is kept (never handed back to the allocator)
+    #: until a repair overwrites it or GC frees it; readers refuse it
+    corrupt: bool = False
+
+
+class CorruptSegmentError(RuntimeError):
+    """On-disk payload failed its checksum and could not be repaired."""
+
+    def __init__(self, msg: str, digest: bytes = b""):
+        super().__init__(msg)
+        self.digest = digest
 
 
 @dataclass
@@ -129,6 +149,14 @@ class SwapStore:
         self._quarantine: List[Tuple[int, int]] = []
         self._clients: Dict[str, "StoreClient"] = {}
         self._lock = threading.RLock()
+        #: cluster hook: ``repair_source(digest) -> (level, raw_nbytes,
+        #: payload) | None`` fetches a known-good copy from a replica
+        #: peer; the router wires it.  Repairs verify the content digest
+        #: before installing, so a corrupt replica cannot "repair" us.
+        self.repair_source: Optional[
+            Callable[[bytes], Optional[Tuple[int, int, bytes]]]] = None
+        self._scrubber: Optional["StoreScrubber"] = None
+        self._scrub_cursor: bytes = b""
         # counters (store-wide; clients keep their own read/write counters)
         self.puts = 0
         self.dedup_hits = 0
@@ -137,6 +165,10 @@ class SwapStore:
         self.bytes_written = 0                        # on-disk bytes written
         self.writes = 0                               # write syscalls
         self.reads = 0                                # read syscalls
+        self.corruptions = 0                          # checksum failures seen
+        self.repairs = 0                              # segments restored
+        self.import_rejects = 0                       # wire frames that failed
+        #                                             # content verification
 
     # ------------------------------------------------------------- clients
     def client(self, owner: str) -> "StoreClient":
@@ -203,30 +235,97 @@ class SwapStore:
                 return comp, level
         return buf, 0
 
-    def _payload(self, seg: _Segment) -> bytes:
+    def _install_payload(self, seg: _Segment, payload: bytes,
+                         level: int) -> None:
+        """Write a known-good payload into a fresh extent and point the
+        segment at it (repair / sink commit).  The old extent is released
+        (quarantine-aware) — a crash between pwrite and the metadata flip
+        just leaves the new extent unreferenced; the old bytes are intact
+        because nothing ever overwrites a live extent in place."""
+        old_off, old_n = seg.offset, seg.stored_nbytes
+        seg.offset = self._alloc(len(payload))
+        seg.stored_nbytes = len(payload)
+        seg.level = level
+        seg.crc = zlib.crc32(payload)
+        seg.corrupt = False
+        os.pwrite(self.fd, payload, seg.offset)
+        self.bytes_written += len(payload)
+        self.writes += 1
+        self._release_extent(old_off, old_n)
+
+    def _repair_locked(self, digest: bytes, seg: _Segment) -> bool:
+        """Restore a quarantined segment from the replica peer hook.
+        The fetched payload is verified end-to-end (content digest over
+        the *decompressed* bytes), so a lying or equally-corrupt peer is
+        rejected rather than installed."""
+        src = self.repair_source
+        if src is None:
+            return False
+        got = src(digest)
+        if got is None:
+            return False
+        level, raw_nbytes, payload = got
+        try:
+            raw = zlib.decompress(payload) if level else payload
+        except zlib.error:
+            return False
+        if self._digest(raw) != digest or len(raw) != raw_nbytes:
+            return False
+        self._install_payload(seg, payload, level)
+        self.repairs += 1
+        return True
+
+    def _mark_corrupt(self, digest: bytes, seg: _Segment) -> None:
+        if not seg.corrupt:
+            seg.corrupt = True
+            self.corruptions += 1
+
+    def _restore_from_raw(self, seg: _Segment, raw: bytes) -> None:
+        """Repair a quarantined segment from raw bytes already in hand
+        (a dedup-hit writer is its own replica)."""
+        payload, level = self._encode(raw, seg.level or seg.tried_level)
+        self._install_payload(seg, payload, level)
+        self.repairs += 1
+
+    def _payload(self, seg: _Segment, digest: bytes = b"") -> bytes:
         blob = os.pread(self.fd, seg.stored_nbytes, seg.offset)
         self.reads += 1
+        if zlib.crc32(blob) != seg.crc:
+            self._mark_corrupt(digest, seg)
+            if not self._repair_locked(digest, seg):
+                raise CorruptSegmentError(
+                    f"segment {digest.hex()} failed checksum "
+                    f"({seg.stored_nbytes}B @ {seg.offset}); no replica "
+                    f"could repair it", digest)
+            blob = os.pread(self.fd, seg.stored_nbytes, seg.offset)
+            self.reads += 1
         return zlib.decompress(blob) if seg.level else blob
 
-    def _maybe_sink(self, seg: _Segment, want_level: int) -> None:
+    def _read_repaired(self, digest: bytes) -> bytes:
+        """Slow path for :meth:`read`: quarantine + replica repair +
+        re-read, under the lock."""
+        with self._lock:
+            seg = self._segments[digest]
+            self._mark_corrupt(digest, seg)
+            if not self._repair_locked(digest, seg):
+                raise CorruptSegmentError(
+                    f"segment {digest.hex()} failed checksum on read; "
+                    f"no replica could repair it", digest)
+            return self._payload(seg, digest)
+
+    def _maybe_sink(self, seg: _Segment, want_level: int,
+                    digest: bytes = b"") -> None:
         """Re-store a segment at a higher zlib level (cold payloads sink)."""
         if want_level <= max(seg.level, seg.tried_level) or \
                 seg.raw_nbytes < self.policy.min_size:
             return
-        raw = self._payload(seg)
+        raw = self._payload(seg, digest)
         seg.tried_level = want_level
         comp, level = self._encode(raw, want_level)
         if level == 0 or len(comp) >= seg.stored_nbytes:
             return                          # incompressible: stays put
-        old_off, old_n = seg.offset, seg.stored_nbytes
-        seg.offset = self._alloc(len(comp))
-        seg.stored_nbytes = len(comp)
-        seg.level = level
-        os.pwrite(self.fd, comp, seg.offset)
-        self.bytes_written += len(comp)
-        self.writes += 1
+        self._install_payload(seg, comp, level)
         self.sink_events += 1
-        self._release_extent(old_off, old_n)
 
     # ------------------------------------------------------------- put/get
     def put(self, client: "StoreClient", key: Hashable, arr: np.ndarray,
@@ -253,8 +352,13 @@ class SwapStore:
                 # no disk IO, no refcount change
                 self.dedup_hits += 1
                 r.dedup_bytes = len(buf)
-                self._maybe_sink(self._segments[digest],
-                                 self.policy.level_for(miss_count, len(buf)))
+                seg = self._segments[digest]
+                if seg.corrupt:
+                    # the writer holds the raw bytes: cheapest repair there is
+                    self._restore_from_raw(seg, buf)
+                self._maybe_sink(seg,
+                                 self.policy.level_for(miss_count, len(buf)),
+                                 digest)
                 client.extents[key] = UnitMeta(
                     digest, 0, len(buf), str(arr.dtype), arr.shape)
                 return r
@@ -265,7 +369,7 @@ class SwapStore:
                 payload, stored_level = self._encode(buf, level)
                 seg = _Segment(self._alloc(len(payload)), len(payload),
                                len(buf), stored_level, refs=0,
-                               tried_level=level)
+                               tried_level=level, crc=zlib.crc32(payload))
                 os.pwrite(self.fd, payload, seg.offset)
                 self.bytes_written += len(payload)
                 self.writes += 1
@@ -274,7 +378,9 @@ class SwapStore:
             else:
                 self.dedup_hits += 1
                 r.dedup_bytes = len(buf)
-                self._maybe_sink(seg, level)
+                if seg.corrupt:
+                    self._restore_from_raw(seg, buf)
+                self._maybe_sink(seg, level, digest)
             seg.refs += 1
             seg.imported_at = None      # a local writer now references it
             client.extents[key] = UnitMeta(
@@ -304,7 +410,8 @@ class SwapStore:
                     by_digest.setdefault(m.digest, []).append((key, m))
             plan = sorted(((d, self._segments[d].offset,
                             self._segments[d].stored_nbytes,
-                            self._segments[d].level) for d in by_digest),
+                            self._segments[d].level,
+                            self._segments[d].crc) for d in by_digest),
                           key=lambda p: p[1])
             self._active_reads += 1
         out: Dict[Hashable, np.ndarray] = {}
@@ -315,9 +422,19 @@ class SwapStore:
                     bytes([m.fill]) * m.nbytes if m.nbytes else b"",
                     m.dtype).reshape(m.shape).copy()
             bufs, calls = read_extents(self.fd,
-                                       [(off, n) for _, off, n, _ in plan])
-            for (d, _, _, level), buf in zip(plan, bufs):
-                raw = zlib.decompress(bytes(buf)) if level else buf
+                                       [(off, n) for _, off, n, _, _ in plan])
+            for (d, _, _, level, crc), buf in zip(plan, bufs):
+                # integrity gate: checksum verified before any sharer sees
+                # the bytes; a mismatch quarantines the extent and repairs
+                # from a replica peer inline (the wake then proceeds on
+                # the repaired bytes — no caller ever observes bad data)
+                if zlib.crc32(buf) != crc:
+                    raw = self._read_repaired(d)
+                else:
+                    try:
+                        raw = zlib.decompress(bytes(buf)) if level else buf
+                    except zlib.error:
+                        raw = self._read_repaired(d)
                 for key, m in by_digest[d]:
                     out[key] = np.frombuffer(
                         raw, m.dtype, count=m.nbytes
@@ -365,9 +482,11 @@ class SwapStore:
     def missing_digests(self, digests) -> List[bytes]:
         """Subset of ``digests`` this store does NOT hold — what a peer
         transfer must actually ship (dedup-aware migration: everything
-        else is already on this node's disk)."""
+        else is already on this node's disk).  Quarantined segments count
+        as missing: asking the peer to re-ship one IS the repair."""
         with self._lock:
-            return [d for d in digests if d not in self._segments]
+            return [d for d in digests
+                    if d not in self._segments or self._segments[d].corrupt]
 
     def stored_bytes_of(self, digests) -> int:
         """On-disk (post-compression) bytes of the given segments."""
@@ -387,6 +506,16 @@ class SwapStore:
                 seg = self._segments[d]
                 blob = os.pread(self.fd, seg.stored_nbytes, seg.offset)
                 self.reads += 1
+                if zlib.crc32(blob) != seg.crc:
+                    # never ship bad bytes: quarantine, repair, re-read —
+                    # or fail the export rather than poison the peer
+                    self._mark_corrupt(d, seg)
+                    if not self._repair_locked(d, seg):
+                        raise CorruptSegmentError(
+                            f"segment {d.hex()} failed checksum on "
+                            f"export; no replica could repair it", d)
+                    blob = os.pread(self.fd, seg.stored_nbytes, seg.offset)
+                    self.reads += 1
                 out.append((d, seg.level, seg.raw_nbytes, blob))
         return out
 
@@ -417,17 +546,40 @@ class SwapStore:
         share a salt (the router seeds every node from one deployment
         salt).  Newly installed segments are stamped ``imported_at`` and
         stay orphans until adopted; returns their digests so the transfer
-        channel can sweep them if the migration aborts mid-bundle."""
+        channel can sweep them if the migration aborts mid-bundle.
+
+        Every frame is verified end-to-end before install: the payload is
+        inflated and its salted content hash must equal the digest it
+        claims.  A frame corrupted or truncated on the wire is rejected
+        (counted in ``import_rejects``) — the transfer then aborts at
+        adopt time with the digest missing, instead of this store serving
+        poisoned bytes to every future sharer.  A verified frame whose
+        digest is already present *but quarantined* repairs it in place
+        (re-shipping IS the anti-entropy repair; refs and pins are
+        preserved)."""
         new: List[bytes] = []
         now = time.monotonic()
         with self._lock:
             for digest, level, raw_nbytes, payload in items:
-                if digest in self._segments:
-                    self.dedup_hits += 1
+                try:
+                    raw = zlib.decompress(payload) if level else payload
+                except zlib.error:
+                    self.import_rejects += 1
+                    continue
+                if self._digest(raw) != digest or len(raw) != raw_nbytes:
+                    self.import_rejects += 1
+                    continue
+                seg = self._segments.get(digest)
+                if seg is not None:
+                    if seg.corrupt:
+                        self._install_payload(seg, payload, level)
+                        self.repairs += 1
+                    else:
+                        self.dedup_hits += 1
                     continue
                 seg = _Segment(self._alloc(len(payload)), len(payload),
                                raw_nbytes, level, refs=0, tried_level=level,
-                               imported_at=now)
+                               imported_at=now, crc=zlib.crc32(payload))
                 os.pwrite(self.fd, payload, seg.offset)
                 self.bytes_written += len(payload)
                 self.writes += 1
@@ -465,13 +617,51 @@ class SwapStore:
                 c.extents[key] = meta
             return c
 
+    def pin_replicas(self, digests) -> int:
+        """Pin segments as another node's recovery replica: a pinned
+        segment survives GC even when every local tenant releases it —
+        until the router unpins (holder rotation, tenant termination, or
+        the replica being promoted by adoption).  ALL digests must be
+        present (a partial pin is a lying replica); raises ``KeyError``
+        otherwise.  Returns stored bytes pinned."""
+        nbytes = 0
+        with self._lock:
+            missing = [d for d in digests if d not in self._segments]
+            if missing:
+                raise KeyError(
+                    f"pin_replicas: {len(missing)} digests absent — "
+                    f"replica incomplete")
+            for d in digests:
+                seg = self._segments[d]
+                seg.pins += 1
+                seg.imported_at = None      # pinned: not an orphan
+                nbytes += seg.stored_nbytes
+        return nbytes
+
+    def unpin_replicas(self, digests) -> int:
+        """Drop replica pins; segments left at refcount zero with no
+        remaining pins are freed.  Returns on-disk bytes reclaimed."""
+        freed = 0
+        with self._lock:
+            for d in digests:
+                seg = self._segments.get(d)
+                if seg is None:
+                    continue
+                seg.pins -= 1
+                if seg.refs <= 0 and seg.pins <= 0:
+                    del self._segments[d]
+                    self._release_extent(seg.offset, seg.stored_nbytes)
+                    freed += seg.stored_nbytes
+        return freed
+
     def orphan_digests(self, max_age_s: float = 0.0) -> List[bytes]:
         """Imported-but-never-adopted segments at least ``max_age_s``
         old — what a dead transfer left behind."""
         cutoff = time.monotonic() - max_age_s
         with self._lock:
             return [d for d, s in self._segments.items()
-                    if s.refs <= 0 and s.imported_at is not None
+                    if s.refs <= 0 and s.pins <= 0
+                    and s.imported_at is not None
                     and s.imported_at <= cutoff]
 
     def sweep_orphans(self, digests=None, max_age_s: float = 0.0) -> int:
@@ -492,7 +682,7 @@ class SwapStore:
                            if s.imported_at is not None]
             for d in list(digests):
                 seg = self._segments.get(d)
-                if (seg is None or seg.refs > 0
+                if (seg is None or seg.refs > 0 or seg.pins > 0
                         or seg.imported_at is None
                         or seg.imported_at > cutoff):
                     continue
@@ -509,7 +699,7 @@ class SwapStore:
         if seg is None:
             return
         seg.refs -= 1
-        if seg.refs <= 0:
+        if seg.refs <= 0 and seg.pins <= 0:
             del self._segments[meta.digest]
             self._release_extent(seg.offset, seg.stored_nbytes)
 
@@ -525,7 +715,62 @@ class SwapStore:
             self._clients.pop(client.owner, None)
             return before - self.live_bytes
 
+    # ------------------------------------------------------------- scrub
+    def scrub(self, max_bytes: int = 64 << 20, repair: bool = True
+              ) -> Dict[str, int]:
+        """One bounded integrity pass: re-checksum up to ``max_bytes`` of
+        stored payload, quarantine mismatches, and (optionally) repair
+        them from the replica peer hook.  The cursor is resumable — the
+        next call continues where this one stopped, wrapping at the end —
+        so a background daemon covers the whole store in bounded slices
+        without ever stalling the serve path for long."""
+        scanned = segments = found = repaired = 0
+        with self._lock:
+            order = sorted(self._segments)
+            start = 0
+            for i, d in enumerate(order):
+                if d > self._scrub_cursor:
+                    start = i
+                    break
+            order = order[start:] + order[:start]
+            for d in order:
+                if scanned >= max_bytes:
+                    break
+                seg = self._segments.get(d)
+                if seg is None:
+                    continue
+                blob = os.pread(self.fd, seg.stored_nbytes, seg.offset)
+                self.reads += 1
+                scanned += seg.stored_nbytes
+                segments += 1
+                self._scrub_cursor = d
+                if zlib.crc32(blob) == seg.crc and not seg.corrupt:
+                    continue
+                self._mark_corrupt(d, seg)
+                found += 1
+                if repair and self._repair_locked(d, seg):
+                    repaired += 1
+        return {"scanned_bytes": scanned, "scanned_segments": segments,
+                "corrupt_found": found, "repaired": repaired}
+
+    def start_scrubber(self, interval_s: float = 30.0,
+                       bytes_per_round: int = 64 << 20) -> "StoreScrubber":
+        """Start (or return) the background scrub daemon."""
+        with self._lock:
+            if self._scrubber is None:
+                self._scrubber = StoreScrubber(self, interval_s,
+                                               bytes_per_round)
+                self._scrubber.start()
+            return self._scrubber
+
+    def stop_scrubber(self) -> None:
+        s = self._scrubber
+        if s is not None:
+            self._scrubber = None
+            s.stop()
+
     def close(self) -> None:
+        self.stop_scrubber()
         with self._lock:
             if self.fd is not None:
                 os.close(self.fd)
@@ -568,7 +813,55 @@ class SwapStore:
                 "elisions": self.elisions,
                 "sink_events": self.sink_events,
                 "free_bytes": sum(n for _, n in self._free),
+                "corruptions": self.corruptions,
+                "repairs": self.repairs,
+                "import_rejects": self.import_rejects,
+                "pinned_segments": sum(1 for s in segs if s.pins > 0),
+                "pinned_bytes": sum(s.stored_nbytes for s in segs
+                                    if s.pins > 0),
+                "quarantined": sum(1 for s in segs if s.corrupt),
             }
+
+
+class StoreScrubber:
+    """Background integrity daemon: periodically runs one bounded
+    :meth:`SwapStore.scrub` slice.  Stopped by :meth:`SwapStore.close`
+    (or explicitly); ``wake()`` forces an immediate pass (tests)."""
+
+    def __init__(self, store: SwapStore, interval_s: float,
+                 bytes_per_round: int):
+        self.store = store
+        self.interval_s = interval_s
+        self.bytes_per_round = bytes_per_round
+        self.rounds = 0
+        self.last: Dict[str, int] = {}
+        self._stop = threading.Event()
+        self._kick = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name=f"scrub:{store.path}", daemon=True)
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._kick.set()
+        self._thread.join(timeout=5.0)
+
+    def wake(self) -> None:
+        self._kick.set()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self._kick.wait(self.interval_s)
+            self._kick.clear()
+            if self._stop.is_set():
+                return
+            with self.store._lock:
+                if self.store.fd is None:
+                    return
+                self.last = self.store.scrub(self.bytes_per_round)
+                self.rounds += 1
 
 
 class StoreClient:

@@ -144,12 +144,14 @@ class _FileBase:
         self.writes = 0
 
     def delete(self) -> None:
-        """Sandbox termination: close and unlink (§3.4)."""
+        """Sandbox termination: close and unlink (§3.4).  Any ``.tmp``
+        left by a write that crashed pre-commit goes with it."""
         if self.fd is not None:
             os.close(self.fd)
             self.fd = None
-        if os.path.exists(self.path):
-            os.unlink(self.path)
+        for p in (self.path, self.path + ".tmp"):
+            if os.path.exists(p):
+                os.unlink(p)
         self.extents.clear()
 
     def __contains__(self, key) -> bool:
@@ -239,33 +241,52 @@ class ReapFile(_FileBase):
 
     def write_batch(self, items: Sequence[Tuple[Hashable, np.ndarray]]) -> None:
         """One vectored sequential write (``pwritev``) of the scatter
-        io-vectors, starting at offset 0.  The file is truncated to the new
-        blob length so ``file_bytes`` always reflects the real on-disk
-        footprint (a smaller rewrite must not leave stale trailing bytes)."""
-        self.extents.clear()
+        io-vectors, committed torn-write-safely.
+
+        The blob is written to ``<path>.tmp`` and ``os.rename``d over the
+        live file only once fully on disk — rename is atomic within a
+        filesystem, so a crash mid-write leaves the *previous* REAP
+        snapshot (file and extent table) fully intact instead of a
+        half-written scatter that would feed garbage into the next wake.
+        Extents are installed only after the rename for the same reason.
+        The tmp file is truncated-by-creation so ``file_bytes`` always
+        reflects the real on-disk footprint (a smaller rewrite must not
+        leave stale trailing bytes)."""
         bufs: List[bytes] = []
+        new_extents: Dict[Hashable, _Extent] = {}
         off = 0
         for key, arr in items:
             arr = np.ascontiguousarray(arr)
             b = arr.tobytes()
-            self.extents[key] = _Extent(off, len(b), str(arr.dtype), arr.shape)
+            new_extents[key] = _Extent(off, len(b), str(arr.dtype), arr.shape)
             bufs.append(b)
             off += len(b)
-        if bufs:
-            if _HAVE_PWRITEV:
-                pos, i = 0, 0
-                while i < len(bufs):
-                    chunk = bufs[i:i + IOV_MAX]
-                    want = sum(len(b) for b in chunk)
-                    n = os.pwritev(self.fd, chunk, pos)
-                    if n != want:          # pragma: no cover - short write
-                        os.pwrite(self.fd, b"".join(chunk)[n:], pos + n)
-                    pos += want
-                    i += IOV_MAX
-            else:                          # pragma: no cover - non-POSIX
-                os.pwrite(self.fd, b"".join(bufs), 0)
-            self.writes += 1
-        os.ftruncate(self.fd, off)
+        tmp = self.path + ".tmp"
+        tmp_fd = os.open(tmp, os.O_RDWR | os.O_CREAT | os.O_TRUNC, 0o600)
+        try:
+            if bufs:
+                if _HAVE_PWRITEV:
+                    pos, i = 0, 0
+                    while i < len(bufs):
+                        chunk = bufs[i:i + IOV_MAX]
+                        want = sum(len(b) for b in chunk)
+                        n = os.pwritev(tmp_fd, chunk, pos)
+                        if n != want:      # pragma: no cover - short write
+                            os.pwrite(tmp_fd, b"".join(chunk)[n:], pos + n)
+                        pos += want
+                        i += IOV_MAX
+                else:                      # pragma: no cover - non-POSIX
+                    os.pwrite(tmp_fd, b"".join(bufs), 0)
+                self.writes += 1
+            os.rename(tmp, self.path)      # the commit point
+        except BaseException:
+            os.close(tmp_fd)
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        os.close(self.fd)
+        self.fd = tmp_fd
+        self.extents = new_extents
         self._append_at = off
         self.bytes_written += off
 

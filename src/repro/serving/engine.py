@@ -63,6 +63,14 @@ class TenantMigrated(RuntimeError):
         self.target = target
 
 
+class NodeDownError(RuntimeError):
+    """The node serving (or queued to serve) this request crashed.  The
+    request itself may be retried elsewhere — the front door re-submits
+    under the same idempotency key once the router re-homes the tenant,
+    and the token stream deduplicates any tokens the first attempt
+    already emitted."""
+
+
 #: SLO classes the front door stamps on requests: interactive work
 #: drives high-priority wakes and is claimed first by the worker pool;
 #: batch work rides low-priority (yielding) wakes and is shed first

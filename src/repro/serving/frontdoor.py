@@ -33,14 +33,15 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.state import RUNG_OF, Rung
-from repro.serving.engine import SLO_BATCH, SLO_INTERACTIVE, Request
+from repro.serving.engine import (SLO_BATCH, SLO_INTERACTIVE, NodeDownError,
+                                  Request)
 from repro.serving.scheduler import AdmissionError
 
 _END = object()
@@ -67,6 +68,12 @@ class FrontDoorPolicy:
     #: shed batch requests to deflated tenants while the governor is
     #: under pressure (deflating faster than it wakes)
     shed_batch_under_pressure: bool = True
+    #: how many times a request killed by a node crash is re-dispatched
+    #: (the cluster router re-places the tenant on a survivor); the
+    #: stream dedups re-played tokens so the client never sees a repeat
+    redispatch_attempts: int = 1
+    #: completed idempotency keys remembered for replay (LRU bound)
+    idempotency_cache: int = 1024
 
 
 class TokenStream:
@@ -78,7 +85,13 @@ class TokenStream:
     (blocking, client threads) or installs a ``waker`` callback and
     drains with :meth:`drain_nowait` (asyncio bridge — the waker is
     called from the worker thread, typically
-    ``loop.call_soon_threadsafe``)."""
+    ``loop.call_soon_threadsafe``).
+
+    A stream survives node crashes: when the front door re-dispatches
+    the request (same idempotency key, surviving node) it calls
+    :meth:`new_attempt`, and :meth:`push` drops the re-played prefix —
+    the deterministic engine regenerates the same tokens, and the
+    client sees each position exactly once."""
 
     def __init__(self, instance_id: str, session_id: str, slo: str):
         self.instance_id = instance_id
@@ -89,6 +102,11 @@ class TokenStream:
         self.finished_at: Optional[float] = None
         self.response = None
         self.error: Optional[BaseException] = None
+        #: tokens actually delivered to the consumer (across attempts)
+        self.emitted = 0
+        #: dispatch attempts (1 = never re-dispatched)
+        self.attempts = 1
+        self._attempt_pos = 0
         self._q: deque = deque()
         self._cv = threading.Condition()
         self.waker: Optional[Callable[[], None]] = None
@@ -96,12 +114,24 @@ class TokenStream:
     # ------------------------------------------------------------- producer
     def push(self, token: int) -> None:
         with self._cv:
+            self._attempt_pos += 1
+            if self._attempt_pos <= self.emitted:
+                return                 # re-played prefix of a re-dispatch
+            self.emitted += 1
             if self.first_token_at is None:
                 self.first_token_at = time.monotonic()
             self._q.append(int(token))
             self._cv.notify_all()
         if self.waker is not None:
             self.waker()
+
+    def new_attempt(self) -> None:
+        """Reset the per-attempt position before a re-dispatch; already-
+        emitted tokens will be deduped as the replacement node re-plays
+        them."""
+        with self._cv:
+            self._attempt_pos = 0
+            self.attempts += 1
 
     def finish(self, response=None,
                error: Optional[BaseException] = None) -> None:
@@ -179,6 +209,12 @@ class FrontDoor:
         self.rejected = 0
         self.completed = 0
         self.errors = 0
+        self.redispatches = 0
+        self.idem_hits = 0
+        #: idempotency_key -> live stream (in-flight dedupe) and a
+        #: bounded LRU of finished streams (replay after completion)
+        self._idem_inflight: Dict[str, TokenStream] = {}
+        self._idem_done: "OrderedDict[str, TokenStream]" = OrderedDict()
 
     # ------------------------------------------------------------- helpers
     @property
@@ -278,10 +314,19 @@ class FrontDoor:
     def submit(self, instance_id: str, prompt, *, session_id: str,
                max_new_tokens: int = 8, slo: str = SLO_INTERACTIVE,
                arch_key: Optional[str] = None,
-               close_session: bool = False) -> TokenStream:
+               close_session: bool = False,
+               idempotency_key: Optional[str] = None) -> TokenStream:
         """Admit + dispatch one streaming request; returns immediately
         with a live :class:`TokenStream`.  Raises :class:`Backpressure`
-        on rejection (never queues unboundedly)."""
+        on rejection (never queues unboundedly).
+
+        ``idempotency_key`` makes the call safe to repeat across client
+        reconnects and node crashes: a key already in flight returns the
+        live stream, a completed key replays the finished stream, and a
+        request killed by :class:`NodeDownError` is re-dispatched (up to
+        ``policy.redispatch_attempts`` times) against the re-homed
+        tenant with re-played tokens deduped — the client never sees a
+        token twice."""
         if slo not in (SLO_INTERACTIVE, SLO_BATCH):
             raise ValueError(f"unknown SLO class {slo!r}")
         if arch_key is not None:
@@ -289,22 +334,82 @@ class FrontDoor:
         if instance_id not in self.target.arch_of:
             raise KeyError(f"tenant {instance_id} has no registered "
                            "architecture (pass arch_key once)")
+        if idempotency_key is not None:
+            with self._lock:
+                hit = self._idem_inflight.get(idempotency_key)
+                if hit is None:
+                    hit = self._idem_done.get(idempotency_key)
+                    if hit is not None:
+                        self._idem_done.move_to_end(idempotency_key)
+                if hit is not None:
+                    self.idem_hits += 1
+                    return hit
         self._admit(instance_id, slo)
         stream = TokenStream(instance_id, session_id, slo)
-        req = Request(
-            instance_id=instance_id, session_id=session_id,
-            prompt=np.asarray(prompt, np.int32),
-            max_new_tokens=int(max_new_tokens),
-            close_session=close_session, slo=slo,
-            on_token=stream.push)
+        if idempotency_key is not None:
+            with self._lock:
+                self._idem_inflight[idempotency_key] = stream
+
+        def _make_req():
+            return Request(
+                instance_id=instance_id, session_id=session_id,
+                prompt=np.asarray(prompt, np.int32),
+                max_new_tokens=int(max_new_tokens),
+                close_session=close_session, slo=slo,
+                on_token=stream.push)
+
+        def _settle(err, response=None, rejected=False):
+            self._release(instance_id, slo, ok=err is None,
+                          rejected=rejected)
+            if idempotency_key is not None:
+                with self._lock:
+                    self._idem_inflight.pop(idempotency_key, None)
+                    if err is None:
+                        self._idem_done[idempotency_key] = stream
+                        while len(self._idem_done) > \
+                                self.policy.idempotency_cache:
+                            self._idem_done.popitem(last=False)
+            stream.finish(response=response, error=err)
+
+        def _done(f):
+            err = f.exception()
+            if isinstance(err, NodeDownError) and \
+                    stream.attempts <= self.policy.redispatch_attempts:
+                # the tenant's node crashed mid-request; the router has
+                # (or will) re-home the tenant from replicated segments
+                # — re-play the identical request and dedup its tokens
+                stream.new_attempt()
+                with self._lock:
+                    self.redispatches += 1
+                try:
+                    f2 = self.target.submit(_make_req())
+                except BaseException as e2:     # noqa: BLE001 - surfaced
+                    _settle(e2)
+                    return
+                f2.add_done_callback(_done)
+                return
+            if isinstance(err, AdmissionError):
+                err = Backpressure(str(err),
+                                   getattr(err, "retry_after_s", 1.0))
+            if err is not None:
+                _settle(err)
+            else:
+                _settle(None, response=f.result())
+
         try:
-            fut = self.target.submit(req)
+            fut = self.target.submit(_make_req())
         except AdmissionError as e:
             self._release(instance_id, slo, ok=False, rejected=True)
+            if idempotency_key is not None:
+                with self._lock:
+                    self._idem_inflight.pop(idempotency_key, None)
             raise Backpressure(str(e), getattr(e, "retry_after_s", 1.0)) \
                 from e
         except BaseException:
             self._release(instance_id, slo, ok=False)
+            if idempotency_key is not None:
+                with self._lock:
+                    self._idem_inflight.pop(idempotency_key, None)
             raise
         if fut.done() and isinstance(fut.exception(), AdmissionError):
             # AsyncPlatform parks admission rejections on the future;
@@ -312,20 +417,11 @@ class FrontDoor:
             # instead of opening a stream that instantly errors
             err = fut.exception()
             self._release(instance_id, slo, ok=False, rejected=True)
+            if idempotency_key is not None:
+                with self._lock:
+                    self._idem_inflight.pop(idempotency_key, None)
             raise Backpressure(str(err),
                                getattr(err, "retry_after_s", 1.0)) from err
-
-        def _done(f, stream=stream, iid=instance_id, slo=slo):
-            err = f.exception()
-            if isinstance(err, AdmissionError):
-                err = Backpressure(str(err),
-                                   getattr(err, "retry_after_s", 1.0))
-            self._release(iid, slo, ok=err is None)
-            if err is not None:
-                stream.finish(error=err)
-            else:
-                stream.finish(response=f.result())
-
         fut.add_done_callback(_done)
         return stream
 
@@ -341,4 +437,8 @@ class FrontDoor:
                 "completed": self.completed,
                 "errors": self.errors,
                 "tenants_active": len(self._active),
+                "redispatches": self.redispatches,
+                "idem_hits": self.idem_hits,
+                "idem_inflight": len(self._idem_inflight),
+                "idem_cached": len(self._idem_done),
             }

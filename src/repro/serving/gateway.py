@@ -6,7 +6,9 @@ no external HTTP dependency — because the serving surface is small and
 the latency path matters:
 
 * ``POST /v1/generate`` — body ``{"tenant", "session", "prompt": [ids],
-  "max_new_tokens", "slo", "arch"?, "close"?}``; the response is
+  "max_new_tokens", "slo", "arch"?, "close"?, "idempotency_key"?}``
+  (the key makes retries safe across node crashes — the front door
+  re-dispatches and dedups re-played tokens); the response is
   ``Transfer-Encoding: chunked`` NDJSON, one ``{"token": t}`` line per
   generated token (flushed immediately — the client's TTFT is the
   engine's first-token time, which on a woken tenant tracks the wake
@@ -205,7 +207,8 @@ class Gateway:
             max_new_tokens=int(spec.get("max_new_tokens", 8)),
             slo=spec.get("slo", "interactive"),
             arch_key=spec.get("arch"),
-            close_session=bool(spec.get("close", False)))
+            close_session=bool(spec.get("close", False)),
+            idempotency_key=spec.get("idempotency_key"))
 
     async def _generate(self, writer, body: bytes) -> None:
         try:

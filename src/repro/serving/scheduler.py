@@ -200,6 +200,23 @@ class AsyncPlatform:
                 self.log.append((now, "predictive_wake", req.instance_id))
         return fut
 
+    def fail_pending(self, exc: BaseException) -> int:
+        """Crash path (``Node.kill``): resolve every queued future with
+        ``exc`` and empty the queues.  Requests already claimed by a
+        worker fail on their own when the engine call errors; the point
+        here is that nothing stays parked waiting for a node that will
+        never serve again.  Returns the number of requests failed."""
+        failed = 0
+        with self._cv:
+            for q in self.queues.values():
+                while q:
+                    _, fut = q.popleft()
+                    if not fut.done():
+                        fut.set_exception(exc)
+                    failed += 1
+            self._cv.notify_all()
+        return failed
+
     def _forget_tenant(self, iid: str) -> None:
         """Drop an evicted tenant's empty queue and serve lock; both are
         recreated on the next submit/cold-start."""

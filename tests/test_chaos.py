@@ -1,0 +1,456 @@
+"""Failure-domain chaos suite: node crashes, replicated recovery,
+corruption detection/repair, torn writes, and transport hardening —
+every fault injected deterministically from a fixed seed."""
+import os
+import socket
+import struct
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterPolicy
+from repro.cluster.faults import (FaultError, FaultInjector, FaultyTransport,
+                                  FrameFaults, corrupt_one_byte)
+from repro.cluster.health import HealthPolicy
+from repro.cluster.migrate import MigrationError, migrate_instance
+from repro.cluster.transport import (LoopbackTransport, SocketTransport,
+                                     StoreServer, TransportError)
+from repro.core.state import Rung
+from repro.core.store import CorruptSegmentError, SwapStore
+from repro.core.swap import ReapFile
+from repro.serving.engine import NodeDownError
+from repro.serving.frontdoor import FrontDoor, FrontDoorPolicy
+
+from test_cluster import (ARCH, SALT, _assert_identical, _cluster,
+                          _full_wake, _snapshot, _tenant)
+
+SEEDS = [7, 13, 29]          # the chaos-smoke seeds CI pins
+
+POLICY = ClusterPolicy(replication_factor=2, max_replications_per_round=64,
+                       health=HealthPolicy(suspect_after_s=3.0,
+                                           dead_after_s=10.0))
+
+
+def _hibernate_and_replicate(router, node, iids, now=0.0):
+    for iid in iids:
+        node.manager.descend(iid, Rung.HIBERNATED)
+    acts = router.anti_entropy(now)
+    assert len([a for a in acts if a[0] == "replicate"]) == len(iids)
+    return acts
+
+
+def _kill_and_detect(router, node, t0=0.0):
+    """Crash ``node`` and walk the lease detector to DEAD in virtual
+    time (SUSPECT at +suspect_after, DEAD at +dead_after) — recovery
+    fires inside check_health."""
+    router.check_health(t0)                  # seed every lease
+    node.kill()
+    assert router.check_health(t0 + 1.0) == []
+    sus = router.check_health(t0 + 4.0)
+    assert (node.node_id, *[s.value for s in sus[0][1:]]) == \
+        (node.node_id, "alive", "suspect")
+    dead = router.check_health(t0 + 11.0)
+    assert any(nid == node.node_id and new.value == "dead"
+               for nid, _old, new in dead)
+
+
+# ------------------------------------------------------------ acceptance
+def test_node_crash_rehomes_every_tenant_byte_identical(tiny_factory,
+                                                        spool_dir):
+    """Kill a node homing 8 hibernated tenants: every tenant is
+    re-homed onto survivors from replicated segments and wakes
+    byte-identical; the survivors' own tenants are untouched."""
+    router, (n0, n1, n2) = _cluster(tiny_factory, spool_dir, n=3,
+                                    policy=POLICY)
+    iids = [f"t{i}" for i in range(8)]
+    snaps = {}
+    for i, iid in enumerate(iids):
+        snaps[iid] = _snapshot(_tenant(router, n0, iid, seed=i))
+    bystander = _tenant(router, n1, "bystander", seed=99)
+    by_snap = _snapshot(bystander)
+    _hibernate_and_replicate(router, n0, iids)
+    # replicas landed on OTHER stores and are pinned there (digest
+    # affinity may cluster them on one survivor — that's fine)
+    assert sum(len(n.replicas) for n in (n1, n2)) == 8
+    assert any(n.store.stats()["pinned_segments"] > 0 for n in (n1, n2))
+
+    _kill_and_detect(router, n0)
+    assert router.tenants_lost == 0
+    assert router.tenants_rehomed == 8
+    for iid in iids:
+        home = router.node_of(iid)
+        assert home is not None and home.node_id != "n0"
+        assert home.manager.instances[iid].state.value == "hibernate"
+        _assert_identical(_full_wake(home, iid), snaps[iid])
+    # survivors: untouched bystander, GC-clean stores (no orphans, no
+    # quarantine, nothing left pinned for the recovered tenants)
+    _assert_identical(bystander, by_snap)
+    for n in (n1, n2):
+        assert n.store.orphan_digests(0.0) == []
+        assert n.store.stats()["quarantined"] == 0
+        assert not n.replicas
+    stats = router.migration_stats()
+    assert stats["tenants_rehomed"] == 8 and stats["nodes_dead"] == 1
+    router.close()
+
+
+def test_tenant_without_replica_is_lost_not_wedged(tiny_factory, spool_dir):
+    """replication_factor=1 (no replicas): a crash loses the tenant —
+    placement clears, the router says so, and nothing hangs."""
+    pol = ClusterPolicy(replication_factor=1,
+                        health=HealthPolicy(suspect_after_s=3.0,
+                                            dead_after_s=10.0))
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir, policy=pol)
+    _tenant(router, n0, "t0")
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    assert router.anti_entropy(0.0) == []
+    _kill_and_detect(router, n0)
+    assert router.tenants_lost == 1 and router.tenants_rehomed == 0
+    assert "t0" not in router.placement
+    router.close()
+
+
+def test_anti_entropy_reheals_after_holder_dies(tiny_factory, spool_dir):
+    """The anti-entropy round re-replicates when a *holder* (not the
+    home) dies: the tenant's replica count returns to k-1."""
+    router, (n0, n1, n2) = _cluster(tiny_factory, spool_dir, n=3,
+                                    policy=POLICY)
+    _tenant(router, n0, "t0")
+    _hibernate_and_replicate(router, n0, ["t0"])
+    holder = next(n for n in (n1, n2) if "t0" in n.replicas)
+    other = n2 if holder is n1 else n1
+    _kill_and_detect(router, holder)
+    assert router.node_of("t0") is n0         # home untouched
+    acts = router.anti_entropy(20.0)
+    assert ("replicate", "t0", "n0", other.node_id) in acts
+    assert "t0" in other.replicas
+    assert not other.store.missing_digests(other.replicas["t0"].digests)
+    router.close()
+
+
+# ------------------------------------------------------- mid-migration kill
+@pytest.mark.parametrize("point", ["migrate.exported", "migrate.shipped"])
+def test_crash_mid_migration_leaves_gc_clean_stores(tiny_factory, spool_dir,
+                                                    point):
+    """Crash the transfer between export and ship, and in the
+    import-vs-adopt window: the source falls back to a plain hibernated
+    tenant (wakes byte-identical) and the target sweeps everything it
+    imported — no refcount leak, no orphan bytes."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "t0", seed=3)
+    snap = _snapshot(inst)
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    inj = FaultInjector(seed=7).arm(point, FaultInjector.crash())
+    with inj, pytest.raises(MigrationError) as ei:
+        router.migrate("t0", "n1")
+    h = ei.value.handle
+    assert not h.ok and isinstance(h.error, FaultError)
+    assert inj.fired(point) == 1
+    assert "t0" in n0.manager.instances
+    assert "t0" not in n1.manager.instances
+    assert router.node_of("t0") is n0
+    assert n1.store.orphan_digests(0.0) == []       # swept on abort
+    _assert_identical(_full_wake(n0, "t0"), snap)
+    router.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_wire_corruption_rejected_at_import(tiny_factory, spool_dir, seed):
+    """Every segment corrupted on the wire: the receiver's content
+    verification rejects the frames, adoption aborts the migration, and
+    the source tenant is intact — no store ever holds poisoned bytes."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    inst = _tenant(router, n0, "t0", seed=seed)
+    snap = _snapshot(inst)
+    n0.manager.descend("t0", Rung.HIBERNATED)
+    inj = FaultInjector(seed=seed)
+    t = FaultyTransport(LoopbackTransport(dst_node=n1), inj,
+                        FrameFaults(corrupt_p=1.0))
+    with inj, pytest.raises(MigrationError):
+        migrate_instance(n0, None, "t0", ARCH, transport=t)
+    assert t.corrupted > 0
+    assert n1.store.import_rejects == t.corrupted
+    assert n1.store.stats()["quarantined"] == 0
+    assert "t0" in n0.manager.instances and "t0" not in n1.manager.instances
+    _assert_identical(_full_wake(n0, "t0"), snap)
+    router.close()
+
+
+# ------------------------------------------------------------- corruption
+def _corrupt_unit_segment(node, iid, rng_seed):
+    """Flip one byte of the stored payload backing one of the tenant's
+    swapped-out units; returns ``(client, key, digest)`` so the test can
+    force a read through the exact path a sharer would take."""
+    import random
+    rng = random.Random(rng_seed)
+    store = node.store
+    client = node.manager.instances[iid].swap_file
+    with store._lock:
+        key, digest = next(
+            (k, m.digest) for k, m in sorted(client.extents.items(),
+                                             key=lambda km: str(km[0]))
+            if m.digest is not None
+            and store._segments[m.digest].stored_nbytes > 0)
+        seg = store._segments[digest]
+        blob = os.pread(store.fd, seg.stored_nbytes, seg.offset)
+        os.pwrite(store.fd, corrupt_one_byte(blob, rng), seg.offset)
+    return client, key, digest
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_disk_corruption_detected_quarantined_repaired(tiny_factory,
+                                                       spool_dir, seed):
+    """A single flipped byte on the home store: the read path detects it
+    (CRC), quarantines the segment, repairs it from the replica peer,
+    and the wake is byte-identical — no sharer ever sees bad bytes."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir, policy=POLICY)
+    inst = _tenant(router, n0, "t0", seed=seed)
+    snap = _snapshot(inst)
+    _hibernate_and_replicate(router, n0, ["t0"])
+    client, key, digest = _corrupt_unit_segment(n0, "t0", seed)
+
+    # a sharer reads the unit: detection + quarantine + peer repair all
+    # happen inside this one read — it returns good bytes
+    n0.store.read(client, [key])
+    _assert_identical(_full_wake(n0, "t0"), snap)
+    assert n0.store.corruptions >= 1
+    assert n0.store.repairs >= 1
+    assert router.repairs_served >= 1
+    assert n0.store.stats()["quarantined"] == 0     # repaired, not parked
+    router.close()
+
+
+def test_scrub_finds_and_repairs_before_any_read(tiny_factory, spool_dir):
+    """The background scrub catches rot a reader hasn't hit yet and
+    repairs it from the replica — the later wake never sees it."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir, policy=POLICY)
+    inst = _tenant(router, n0, "t0", seed=5)
+    snap = _snapshot(inst)
+    _hibernate_and_replicate(router, n0, ["t0"])
+    _client, _key, digest = _corrupt_unit_segment(n0, "t0", 5)
+
+    res = n0.store.scrub(repair=True)
+    assert res["corrupt_found"] == 1 and res["repaired"] == 1
+    assert n0.store.missing_digests([digest]) == []
+    reads_before = n0.store.corruptions
+    _assert_identical(_full_wake(n0, "t0"), snap)
+    assert n0.store.corruptions == reads_before     # wake hit clean bytes
+    router.close()
+
+
+def test_unrepairable_corruption_quarantines_and_reship_repairs(spool_dir):
+    """Store-level: with no replica peer, a corrupt segment raises on
+    read and counts as missing; a later verified re-ship of the same
+    content repairs it in place (refs preserved)."""
+    import random
+    store = SwapStore(os.path.join(spool_dir, "solo", "store.cas"),
+                      salt=SALT)
+    c = store.client("t")
+    arr = np.arange(4096, dtype=np.float32) * 1.5
+    store.put(c, "k", arr)
+    digest = c.extents["k"].digest
+    with store._lock:
+        seg = store._segments[digest]
+        blob = os.pread(store.fd, seg.stored_nbytes, seg.offset)
+        os.pwrite(store.fd, corrupt_one_byte(blob, random.Random(1)),
+                  seg.offset)
+    with pytest.raises(CorruptSegmentError):
+        store.read(c, ["k"])
+    assert store.missing_digests([digest]) == [digest]
+    assert store.stats()["quarantined"] == 1
+    # re-ship IS the repair: a verified wire frame lands in place
+    store.import_segments([(digest, seg.level, seg.raw_nbytes, blob)])
+    got = store.read(c, ["k"])["k"]
+    np.testing.assert_array_equal(got.reshape(arr.shape), arr)
+    assert store.stats()["quarantined"] == 0
+    with store._lock:
+        assert store._segments[digest].refs == 1    # refs survived repair
+    store.close()
+
+
+def test_reapfile_write_batch_is_atomic(spool_dir, monkeypatch):
+    """A crash mid-rebuild (rename fails) leaves the previous REAP
+    snapshot fully intact — file, extents, and readable bytes."""
+    import repro.core.swap as swap
+    rf = ReapFile(os.path.join(spool_dir, "t", "reap.bin"))
+    a = np.arange(64, dtype=np.float32)
+    rf.write_batch([("a", a)])
+    before = dict(rf.extents)
+
+    def boom(src, dst):
+        raise OSError("injected crash at commit point")
+    monkeypatch.setattr(swap.os, "rename", boom)
+    with pytest.raises(OSError):
+        rf.write_batch([("a", a * 2), ("b", a * 3)])
+    monkeypatch.undo()
+
+    assert dict(rf.extents) == before               # old snapshot intact
+    assert not os.path.exists(rf.path + ".tmp")     # torn temp cleaned up
+    np.testing.assert_array_equal(rf.read_batch()["a"], a)
+    rf.write_batch([("a", a * 2), ("b", a * 3)])    # and recovery works
+    np.testing.assert_array_equal(rf.read_batch()["b"], a * 3)
+    rf.delete()
+
+
+# ------------------------------------------------------------- transport
+def test_server_survives_malformed_and_oversized_frames(spool_dir):
+    """Garbage and over-declared frames are per-connection protocol
+    errors: the connection dies, imported orphans are swept, and the
+    accept loop keeps serving fresh clients."""
+    store = SwapStore(os.path.join(spool_dir, "srv", "store.cas"),
+                      salt=SALT)
+    srv = StoreServer(store, node_id="srv", io_timeout_s=5.0,
+                      max_frame_bytes=1 << 20)
+    try:
+        from repro.cluster.wire import MSG_AUTH
+        bad = (
+            # well-framed AUTH whose payload is undecodable garbage
+            struct.pack(">IB", 4, MSG_AUTH) + b"\xee\xee\xee\xee",
+            # length prefix over the server's max_frame_bytes bound
+            struct.pack(">IB", 1 << 30, MSG_AUTH),
+            # a frame that isn't AUTH at all (auth failure, not a crash)
+            b"\x00" * 16,
+        )
+        for payload in bad:
+            s = socket.create_connection(srv.address, timeout=5.0)
+            s.sendall(payload)
+            assert s.recv(4096) is not None     # server answers or closes
+            s.close()
+        deadline = time.monotonic() + 5.0
+        while srv.protocol_errors < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert srv.protocol_errors >= 2
+        assert srv.auth_failures >= 1
+        # the accept loop survived: a real client still works
+        t = SocketTransport.connect(srv.address, SALT, node_id="c")
+        assert t.missing_digests([b"x" * 16]) == [b"x" * 16]
+        t.close()
+    finally:
+        srv.close()
+        store.close()
+
+
+def test_client_io_deadline_raises_instead_of_wedging(spool_dir):
+    """A peer that accepts but never speaks: the client's handshake hits
+    its io deadline and raises TransportError instead of blocking."""
+    silent = socket.socket()
+    silent.bind(("127.0.0.1", 0))
+    silent.listen(1)
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(TransportError):
+            SocketTransport.connect(silent.getsockname(), SALT,
+                                    io_timeout_s=0.3)
+        assert time.monotonic() - t0 < 5.0
+    finally:
+        silent.close()
+
+
+def test_server_io_deadline_reaps_stalled_connection(spool_dir):
+    """A client that connects and goes silent is reaped by the server's
+    io deadline; the slot frees and new clients still get served."""
+    store = SwapStore(os.path.join(spool_dir, "srv2", "store.cas"),
+                      salt=SALT)
+    srv = StoreServer(store, node_id="srv2", io_timeout_s=0.3)
+    try:
+        stalled = socket.create_connection(srv.address, timeout=5.0)
+        stalled.settimeout(5.0)
+        while stalled.recv(4096):               # drain HELLO, then EOF
+            pass                                # server closed it
+        stalled.close()
+        t = SocketTransport.connect(srv.address, SALT)
+        t.close()
+    finally:
+        srv.close()
+        store.close()
+
+
+# ------------------------------------------------------------- idempotency
+class _FlakyTarget:
+    """Stand-in dispatch surface: first attempt streams a partial prefix
+    then dies with NodeDownError; the retry replays the full sequence
+    (what a deterministic engine on the re-homed node does)."""
+
+    def __init__(self, tokens, die_after):
+        self.tokens = tokens
+        self.die_after = die_after
+        self.arch_of = {"t0": ARCH}
+        self.submits = 0
+
+    def submit(self, req):
+        self.submits += 1
+        fut = Future()
+        if self.submits == 1:
+            for t in self.tokens[:self.die_after]:
+                req.on_token(t)
+            fut.set_exception(NodeDownError("node n0 crashed"))
+        else:
+            for t in self.tokens:                # full deterministic replay
+                req.on_token(t)
+            fut.set_result({"tokens": list(self.tokens)})
+        return fut
+
+
+def test_frontdoor_redispatch_never_double_emits():
+    """The crash re-dispatch property: tokens 0..2 emitted, node dies,
+    retry replays 0..7 — the client stream sees each position exactly
+    once and completes normally."""
+    tokens = [10, 11, 12, 13, 14, 15, 16, 17]
+    tgt = _FlakyTarget(tokens, die_after=3)
+    door = FrontDoor(tgt, policy=FrontDoorPolicy(redispatch_attempts=1))
+    stream = door.submit("t0", [1, 2, 3], session_id="s0",
+                         max_new_tokens=8, idempotency_key="req-1")
+    assert list(stream) == tokens                # exactly once, in order
+    assert stream.attempts == 2 and stream.emitted == len(tokens)
+    assert tgt.submits == 2
+    st = door.stats()
+    assert st["redispatches"] == 1 and st["errors"] == 0
+    assert st["completed"] == 1
+    # the completed key replays the finished stream, no new dispatch
+    again = door.submit("t0", [1, 2, 3], session_id="s0",
+                        max_new_tokens=8, idempotency_key="req-1")
+    assert again is stream and tgt.submits == 2
+    assert door.stats()["idem_hits"] == 1
+
+
+def test_frontdoor_gives_up_after_redispatch_budget():
+    class _DeadTarget:
+        arch_of = {"t0": ARCH}
+
+        def submit(self, req):
+            fut = Future()
+            fut.set_exception(NodeDownError("everything is down"))
+            return fut
+
+    door = FrontDoor(_DeadTarget(),
+                     policy=FrontDoorPolicy(redispatch_attempts=1))
+    stream = door.submit("t0", [1], session_id="s0", idempotency_key="k")
+    with pytest.raises(NodeDownError):
+        list(stream)
+    assert stream.attempts == 2                  # original + one retry
+    assert door.stats()["errors"] == 1
+    # a failed key is NOT cached: a later retry re-dispatches fresh
+    assert door.stats()["idem_cached"] == 0
+
+
+def test_request_to_crashed_node_lands_on_survivor(tiny_factory, spool_dir):
+    """Synchronous serve path end to end: the home crashes, the next
+    request triggers evidence-based recovery and is answered by the
+    survivor from the replica — same tokens a healthy node produces."""
+    from benchmarks.common import request_for
+
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir, policy=POLICY)
+    inst = _tenant(router, n0, "t0", seed=2)
+    cfg = inst.cfg
+    ref = router.handle(request_for(cfg, "t0", "ref", 8, 4, seed=1,
+                                    close_session=True), now=0.0)
+    _hibernate_and_replicate(router, n0, ["t0"], now=1.0)
+    n0.kill()
+    got = router.handle(request_for(cfg, "t0", "ref2", 8, 4, seed=1,
+                                    close_session=True), now=2.0)
+    assert got.tokens == ref.tokens
+    assert router.node_of("t0") is n1
+    assert router.tenants_rehomed == 1
+    router.close()

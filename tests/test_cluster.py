@@ -280,7 +280,9 @@ def test_rebalance_migrates_before_terminating(tiny_factory, spool_dir):
         tiny_factory, spool_dir,
         ClusterPolicy(sustained_breach_rounds=2, migration=True))
     acts = router.rebalance(now=1000.0)
-    assert acts == []                          # first breach: not sustained
+    # first breach: not sustained — no pressure action yet (anti-entropy
+    # replication rides every round and is orthogonal to escalation)
+    assert [a for a in acts if a[0] != "replicate"] == []
     acts = router.rebalance(now=1001.0)
     kinds = {a[0] for a in acts}
     assert "migrate" in kinds
@@ -365,11 +367,17 @@ def test_breach_hysteresis_preserves_streak(tiny_factory, spool_dir):
         tiny_factory, spool_dir,
         ClusterPolicy(sustained_breach_rounds=2, migration=True,
                       breach_hysteresis=0.5, migration_cooldown_s=0.0))
+    def pressure_acts(now):
+        # anti-entropy replication rides every round; only pressure
+        # actions (migrate/terminate) are under test here
+        return [a for a in router.rebalance(now=now)
+                if a[0] != "replicate"]
+
     tight = n0.governor.budget_bytes
-    assert router.rebalance(now=1.0) == []       # breach: streak 1
+    assert pressure_acts(1.0) == []              # breach: streak 1
     # clear the breach by a sliver — far inside the 50% margin
     n0.governor.budget_bytes = int(tight * 1.3)
-    assert router.rebalance(now=2.0) == []       # streak survives
+    assert pressure_acts(2.0) == []              # streak survives
     assert router._breach["n0"] == 1
     n0.governor.budget_bytes = tight
     acts = router.rebalance(now=3.0)             # streak 2: escalate

@@ -1,0 +1,137 @@
+"""Failure detector: enumerated health machine + lease/hysteresis
+behaviour, driven entirely in virtual time."""
+import itertools
+
+import pytest
+
+from repro.cluster.health import (HEALTH_TRANSITIONS, FailureDetector,
+                                  HealthEvent, HealthPolicy,
+                                  InvalidHealthTransition, NodeHealth,
+                                  NodeHealthMachine)
+
+H, HE = NodeHealth, HealthEvent
+
+POL = HealthPolicy(heartbeat_interval_s=1.0, suspect_after_s=3.0,
+                   dead_after_s=10.0, revive_beats=2)
+
+
+# ------------------------------------------------------------ enumeration
+def test_every_state_event_pair_is_classified():
+    """The full |states| x |events| grid: every pair is either a legal
+    edge in HEALTH_TRANSITIONS (fires, lands on the declared state) or
+    raises InvalidHealthTransition — no edge exists outside the table."""
+    for state, event in itertools.product(NodeHealth, HealthEvent):
+        m = NodeHealthMachine("n0", state=state)
+        if (state, event) in HEALTH_TRANSITIONS:
+            want, _tag = HEALTH_TRANSITIONS[(state, event)]
+            assert m.can(event)
+            assert m.fire(event, now=1.0) is want
+            assert m.state is want
+            assert m.history[-1][1:4] == (state, event, want)
+        else:
+            assert not m.can(event)
+            with pytest.raises(InvalidHealthTransition):
+                m.fire(event, now=1.0)
+            assert m.state is state          # failed fire mutates nothing
+            assert m.history == []
+
+
+def test_no_alive_to_dead_shortcut():
+    """There is deliberately no ALIVE->DEAD edge: even hard evidence
+    must walk MISS then EXPIRE."""
+    assert (H.ALIVE, HE.EXPIRE) not in HEALTH_TRANSITIONS
+    det = FailureDetector(["n0"], POL)
+    det.observe_failure("n0", now=5.0)
+    assert det.is_dead("n0")
+    hist = det.machines["n0"].history
+    assert [(old, ev, new) for _, old, ev, new, _ in hist] == [
+        (H.ALIVE, HE.MISS, H.SUSPECT),
+        (H.SUSPECT, HE.EXPIRE, H.DEAD)]
+
+
+# ------------------------------------------------------------ lease timers
+def test_lease_lapse_walks_suspect_then_dead():
+    det = FailureDetector(["n0", "n1"], POL)
+    det.beat("n0", 0.0)
+    det.beat("n1", 0.0)
+    for t in (1.0, 2.0):
+        det.beat("n1", t)
+        assert det.step(t) == []
+    # n0 silent past suspect_after_s
+    trans = det.step(3.5)
+    assert trans == [("n0", H.ALIVE, H.SUSPECT)]
+    assert det.alive_ids() == ["n1"]         # SUSPECT is not a target
+    # still silent past dead_after_s (from last beat)
+    trans = det.step(10.5)
+    assert ("n0", H.SUSPECT, H.DEAD) in trans
+    assert det.is_dead("n0")
+    assert not det.is_dead("n1")
+
+
+def test_long_gap_fires_both_edges_in_one_step():
+    """A single late step after a long silence still walks the
+    enumerated path: MISS and EXPIRE both fire, in order."""
+    det = FailureDetector(["n0"], POL)
+    det.beat("n0", 0.0)
+    trans = det.step(100.0)
+    assert trans == [("n0", H.ALIVE, H.SUSPECT),
+                     ("n0", H.SUSPECT, H.DEAD)]
+
+
+def test_first_observation_seeds_lease():
+    """A detector constructed at virtual t=0 but first stepped at
+    t=1e6 must not declare everyone dead: the first step seeds the
+    lease instead of comparing against a time nobody ever beat at."""
+    det = FailureDetector(["n0"], POL)
+    assert det.step(1e6) == []
+    assert det.state("n0") is H.ALIVE
+    assert det.step(1e6 + 1.0) == []          # fresh lease, not lapsed
+    assert det.step(1e6 + 50.0) != []         # but it does lapse eventually
+
+
+def test_revive_needs_consecutive_beats():
+    det = FailureDetector(["n0"], POL)
+    det.beat("n0", 0.0)
+    det.step(4.0)
+    assert det.state("n0") is H.SUSPECT
+    det.beat("n0", 4.1)                       # one lucky packet
+    assert det.state("n0") is H.SUSPECT
+    # a lapse resets the streak: the beats must be consecutive
+    det.step(8.0)
+    det.beat("n0", 8.1)
+    det.beat("n0", 8.2)                       # second consecutive beat
+    assert det.state("n0") is H.ALIVE
+    assert det.alive_ids() == ["n0"]
+
+
+def test_no_implicit_resurrection():
+    """Beats from a DEAD node are counted and ignored; only an explicit
+    reinstate readmits it (with a fresh lease)."""
+    det = FailureDetector(["n0"], POL)
+    det.observe_failure("n0", 1.0)
+    assert det.is_dead("n0")
+    for t in (2.0, 3.0, 4.0):
+        assert det.beat("n0", t) is H.DEAD
+    assert det.ignored_beats == 3
+    assert det.reinstate("n0", 5.0) is H.ALIVE
+    assert det.step(5.5) == []                # lease restarted at reinstate
+
+
+def test_observe_failure_without_fail_fast_stops_at_suspect():
+    det = FailureDetector(["n0"], HealthPolicy(fail_fast=False))
+    assert det.observe_failure("n0", 1.0) is H.SUSPECT
+    assert not det.is_dead("n0")
+
+
+def test_transition_subscribers_see_every_edge():
+    seen = []
+    det = FailureDetector(["n0"], POL)
+    det.on_transition.append(lambda nid, old, new: seen.append((nid, old,
+                                                                new)))
+    det.beat("n0", 0.0)
+    det.step(4.0)
+    det.step(11.0)
+    det.reinstate("n0", 12.0)
+    assert seen == [("n0", H.ALIVE, H.SUSPECT),
+                    ("n0", H.SUSPECT, H.DEAD),
+                    ("n0", H.DEAD, H.ALIVE)]
