@@ -5,6 +5,9 @@
   density          — deployment-density conclusion
   governor_density — memory governor: tenants-per-GB vs p99 TTFT under a
                      shrinking budget (rung ladder vs warm/hibernate)
+  forecast_density — predictive control plane: seasonal + flash-crowd
+                     pre-inflate vs the reactive governor, p99 TTFT at
+                     equal tenants-per-GB
   dedup_store      — content-addressed swap store: cross-tenant dedup,
                      zero-page elision, compression tiers
   wake_latency     — streamed wake pipeline: synchronous vs pipelined
@@ -46,11 +49,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (allocator, cluster_density, concurrency,
-                            dedup_store, density, gateway_latency,
-                            governor_density, latency_states, memory_states,
-                            prefix_density, reap_ablation, recovery,
-                            roofline, sharing, swap_throughput,
-                            wake_latency)
+                            dedup_store, density, forecast_density,
+                            gateway_latency, governor_density,
+                            latency_states, memory_states, prefix_density,
+                            reap_ablation, recovery, roofline, sharing,
+                            swap_throughput, wake_latency)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
@@ -59,6 +62,7 @@ def main(argv=None):
         ("memory_states", memory_states),
         ("density", density),
         ("governor_density", governor_density),
+        ("forecast_density", forecast_density),
         ("cluster_density", cluster_density),
         ("prefix_density", prefix_density),
         ("gateway_latency", gateway_latency),

@@ -113,7 +113,11 @@ class HealthPolicy:
 
 
 class FailureDetector:
-    """Lease/heartbeat failure detector over a fixed node set.
+    """Lease/heartbeat failure detector over a (mostly) fixed node set.
+
+    Cluster elasticity grows and shrinks the set through
+    :meth:`add_node` / :meth:`remove_node`; everything else treats the
+    membership as fixed between those explicit calls.
 
     Time is injected (``now``) so virtual-time benchmarks and the chaos
     tests drive it deterministically.  A node's lease starts at its
@@ -138,6 +142,27 @@ class FailureDetector:
                                           None]] = []
         self.ignored_beats = 0          # beats from DEAD nodes (no resurrect)
         self._lock = threading.RLock()
+
+    # ----------------------------------------------------------- membership
+    def add_node(self, node_id: str, now: Optional[float] = None) -> None:
+        """Admit a new node (cluster scale-out): starts ALIVE with a
+        fresh lease.  Re-adding a known node id is an error — a DEAD
+        node re-joining must go through :meth:`reinstate`, never a
+        fresh machine (its history would vanish)."""
+        with self._lock:
+            if node_id in self.machines:
+                raise ValueError(f"node {node_id!r} already tracked")
+            self.machines[node_id] = NodeHealthMachine(node_id)
+            self._last_beat[node_id] = now
+            self._revive_streak[node_id] = 0
+
+    def remove_node(self, node_id: str) -> None:
+        """Forget a node entirely (drained + decommissioned): its id may
+        be reused later as a brand-new member."""
+        with self._lock:
+            self.machines.pop(node_id, None)
+            self._last_beat.pop(node_id, None)
+            self._revive_streak.pop(node_id, None)
 
     # -------------------------------------------------------------- queries
     def state(self, node_id: str) -> NodeHealth:

@@ -28,13 +28,22 @@ the missing degrees of freedom:
     handle (``ensure_awake`` on a MIGRATING tenant), then reroute to the
     tenant's new node; the async platforms get a ``reroute`` hook so
     queued work follows the tenant too.
+  * **Elasticity** — with ``ClusterPolicy.elastic`` and a
+    ``node_factory``, the router grows and shrinks the node set:
+    scale-out spins up a node when the forecast aggregate demand (bytes
+    deflated tenants are predicted to re-occupy within the horizon)
+    exceeds cluster headroom, warming its CAS store with the hottest
+    deployments' digests so digest-affinity placement lands near-free;
+    scale-in drains the emptiest node by mass-migrating its tenants
+    through the normal migration path before decommission, fenced by
+    the failure detector so drain and dead-node recovery never race.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.cluster.health import (FailureDetector, HealthPolicy,
                                   NodeHealth)
@@ -42,8 +51,9 @@ from repro.cluster.migrate import (MigrationError, MigrationHandle,
                                    migrate_instance, receive_bundle,
                                    replicate_instance)
 from repro.cluster.node import Node
+from repro.core.governor import MIGRATABLE_STATES
 from repro.core.prefix import PREFIX_OWNER
-from repro.core.state import ContainerState
+from repro.core.state import ContainerState, Rung
 from repro.core.store import CorruptSegmentError
 from repro.serving.engine import (NodeDownError, Request, Response,
                                   TenantMigrated)
@@ -54,6 +64,11 @@ S = ContainerState
 
 @dataclass
 class ClusterPolicy:
+    """Cluster-tier policy: rebalance escalation, placement weights,
+    replication, failure detection, and elasticity knobs.  One instance
+    per :class:`ClusterRouter`; every field has a safe default, so
+    callers override only what their deployment tunes."""
+
     #: consecutive rebalance rounds a node must breach before escalation
     sustained_breach_rounds: int = 2
     #: master switch: False reproduces the single-node evict-only world
@@ -100,6 +115,33 @@ class ClusterPolicy:
     max_replications_per_round: int = 4
     #: lease/heartbeat tuning for the failure detector (None = defaults)
     health: Optional[HealthPolicy] = None
+    #: master switch for cluster elasticity: with it on (and a
+    #: ``node_factory`` wired), :meth:`ClusterRouter.rebalance` runs an
+    #: :meth:`ClusterRouter.autoscale` pass each round
+    elastic: bool = False
+    #: demand window: deflated tenants predicted to wake within this
+    #: horizon contribute their inflate-footprint to aggregate demand
+    scale_horizon_s: float = 10.0
+    #: scale out when demand exceeds cluster headroom by this margin
+    #: (bytes); a small positive margin avoids spinning up a node for a
+    #: rounding error
+    scale_out_margin_bytes: int = 0
+    #: scale in only while (headroom - demand - emptiest node's budget)
+    #: stays above this reserve — the cluster must still absorb the
+    #: forecast after losing the node
+    scale_in_reserve_bytes: int = 0
+    #: consecutive low-utilization autoscale rounds before a drain
+    #: actually starts (scale-in is expensive and hard to undo cheaply,
+    #: so it gets the same sustained-signal treatment as migration)
+    scale_in_sustained_rounds: int = 3
+    #: elasticity floor/ceiling on the node count (0 = unbounded ceiling)
+    min_nodes: int = 1
+    max_nodes: int = 0
+    #: pre-ship the hottest deployments' CAS digests to a fresh node so
+    #: digest-affinity placement/migration lands near-free
+    warm_on_scale_out: bool = True
+    #: cap on warm-shipped stored bytes per scale-out
+    warm_bytes_limit: int = 256 << 20
 
 
 class ClusterRouter:
@@ -108,12 +150,16 @@ class ClusterRouter:
 
     def __init__(self, nodes: Sequence[Node],
                  arch_of: Optional[Dict[str, str]] = None,
-                 policy: Optional[ClusterPolicy] = None):
+                 policy: Optional[ClusterPolicy] = None,
+                 node_factory: Optional[Callable[[str], Node]] = None):
         if not nodes:
             raise ValueError("a cluster needs at least one node")
         self.nodes: Dict[str, Node] = {n.node_id: n for n in nodes}
         self.arch_of: Dict[str, str] = dict(arch_of or {})
         self.policy = policy or ClusterPolicy()
+        #: builds a fresh :class:`Node` for scale-out (None = no
+        #: elasticity even with ``policy.elastic``)
+        self.node_factory = node_factory
         #: tenant -> node_id (updated at placement and migration commit)
         self.placement: Dict[str, str] = {}
         self.handles: List[MigrationHandle] = []
@@ -137,6 +183,17 @@ class ClusterRouter:
         self.tenants_lost = 0          # no complete replica anywhere
         self.replications = 0
         self.repairs_served = 0        # scrub/read repairs fed from peers
+        #: nodes mid-drain: still serving what they have, but excluded
+        #: as placement/migration/replication targets
+        self._draining: Set[str] = set()
+        #: digests warm-shipped to a scale-out node, pinned in its store
+        #: until tenants adopt them (node_id -> digests)
+        self._warm_pins: Dict[str, Set[bytes]] = {}
+        self._scale_seq = 0
+        self._low_util_rounds = 0
+        self.scale_outs = 0
+        self.scale_ins = 0
+        self.warm_bytes_shipped = 0
         self._lock = threading.RLock()
         for n in nodes:
             if n.platform is not None:
@@ -150,6 +207,14 @@ class ClusterRouter:
         detector-ALIVE and actually answering."""
         return [self.nodes[nid] for nid in self.detector.alive_ids()
                 if self.nodes[nid].alive]
+
+    def target_nodes(self) -> List[Node]:
+        """Alive nodes that may *receive* new work: a draining node keeps
+        serving and keeps its replicas readable (recovery still counts
+        it as a holder), but takes no new tenants, migrations, or
+        replicas — otherwise the drain chases its own tail."""
+        return [n for n in self.alive_nodes()
+                if n.node_id not in self._draining]
 
     def check_health(self, now: Optional[float] = None) -> List[tuple]:
         """One heartbeat + lease round: beat every node that answers,
@@ -315,7 +380,8 @@ class ClusterRouter:
             self.arch_of.setdefault(instance_id, arch_key)
             digests = self.deployment_digests(arch_key)
             pfx = self.deployment_prefix_digests(arch_key)
-            candidates = self.alive_nodes() or list(self.nodes.values())
+            candidates = self.target_nodes() or self.alive_nodes() \
+                or list(self.nodes.values())
             best = max(candidates,
                        key=lambda n: self.placement_score(
                            n, arch_key, now, digests=digests,
@@ -327,6 +393,7 @@ class ClusterRouter:
         return best
 
     def node_of(self, instance_id: str) -> Optional[Node]:
+        """The tenant's current home node (None if never placed)."""
         nid = self.placement.get(instance_id)
         return self.nodes.get(nid) if nid is not None else None
 
@@ -411,6 +478,9 @@ class ClusterRouter:
     # ------------------------------------------------------------ migration
     def migrate(self, instance_id: str, target_node_id: str, *,
                 block: bool = True) -> MigrationHandle:
+        """Ship one tenant to a named node through the three-phase
+        transfer (placement commits with the bundle; see
+        :func:`repro.cluster.migrate.migrate_instance`)."""
         src = self.node_of(instance_id)
         if src is None:
             raise MigrationError(f"{instance_id}: unknown tenant")
@@ -466,7 +536,7 @@ class ClusterRouter:
         # the typical HIBERNATED victim this term is zero
         unstored = gov._anon_resident_bytes(inst)
         best: Optional[Tuple[Node, float]] = None
-        for node in self.alive_nodes():
+        for node in self.target_nodes():
             if node is src or node.node_id in exclude:
                 continue
             if self._blacklist.get(node.node_id, -1e18) > now:
@@ -482,6 +552,310 @@ class ClusterRouter:
             if best is None or score > best[1]:
                 best = (node, score)
         return best
+
+    # ------------------------------------------------------------ elasticity
+    def add_node(self, node: Node, now: Optional[float] = None) -> None:
+        """Admit a node into the fabric: failure-detector lease (starts
+        ALIVE, fresh), breach counter, reroute + repair-source hooks.
+        Used by scale-out, and directly by operators pre-provisioning
+        capacity."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            if node.node_id in self.nodes:
+                raise ValueError(f"node {node.node_id!r} already in "
+                                 "cluster")
+            self.nodes[node.node_id] = node
+            self._breach[node.node_id] = 0
+            self.detector.add_node(node.node_id, now)
+        if node.platform is not None:
+            node.platform.reroute = self._reroute
+        if node.store is not None:
+            node.store.repair_source = self._make_repair_source(node)
+        self.log.append((now, "add_node", node.node_id))
+
+    def scale_out(self, now: Optional[float] = None) -> Optional[Node]:
+        """Spin up one node through ``node_factory`` and admit it; with
+        ``warm_on_scale_out`` its CAS store is pre-shipped the hottest
+        deployments' digests so digest-affinity placement/migration to
+        it is near-free.  Returns None when no factory is wired or the
+        ``max_nodes`` ceiling is hit."""
+        now = time.monotonic() if now is None else now
+        if self.node_factory is None:
+            return None
+        if self.policy.max_nodes and len(self.nodes) >= \
+                self.policy.max_nodes:
+            return None
+        with self._lock:
+            while True:
+                self._scale_seq += 1
+                nid = f"scale{self._scale_seq}"
+                if nid not in self.nodes:
+                    break
+        node = self.node_factory(nid)
+        self.add_node(node, now)
+        # match the fleet: if peers run event-driven, the new node must
+        # too, or submit() to a tenant placed there has no queue
+        peer = next((n for n in self.nodes.values()
+                     if n is not node and n.platform is not None), None)
+        if peer is not None and node.platform is None:
+            node.start_platform(peer.platform.policy, self.arch_of)
+            node.platform.reroute = self._reroute
+        if self.policy.warm_on_scale_out:
+            self._warm_node(node, now)
+        self.scale_outs += 1
+        self.log.append((now, "scale_out", nid))
+        return node
+
+    def _warm_node(self, node: Node, now: float) -> int:
+        """CAS-warm a fresh node: ship every deployment's segments from
+        whichever peers hold them (capped by ``warm_bytes_limit``) and
+        pin them as replicas — pins survive GC until tenants adopt the
+        content, so the orphan sweeper never undoes the warm-up."""
+        if node.store is None:
+            return 0
+        budget = self.policy.warm_bytes_limit
+        shipped = 0
+        pins = self._warm_pins.setdefault(node.node_id, set())
+        for arch in sorted(set(self.arch_of.values())):
+            if budget <= 0:
+                break
+            missing = set(node.store.missing_digests(
+                self.deployment_digests(arch)))
+            for peer in self.alive_nodes():
+                if not missing or budget <= 0:
+                    break
+                if peer is node or peer.store is None:
+                    continue
+                have = missing - set(peer.store.missing_digests(missing))
+                take: List[bytes] = []
+                for d in sorted(have):
+                    nb = peer.store.stored_bytes_of([d])
+                    if nb > budget:
+                        continue
+                    take.append(d)
+                    budget -= nb
+                if not take:
+                    continue
+                try:
+                    items = peer.store.export_segments(take)
+                except (KeyError, CorruptSegmentError):
+                    continue
+                installed = node.store.import_segments(items)
+                node.store.pin_replicas(installed)
+                pins.update(installed)
+                nb = node.store.stored_bytes_of(installed)
+                shipped += nb
+                self.warm_bytes_shipped += nb
+                missing -= set(installed)
+        if shipped:
+            self.log.append((now, "warm", node.node_id, shipped))
+        return shipped
+
+    def forecast_demand_bytes(self, now: Optional[float] = None,
+                              horizon_s: Optional[float] = None) -> int:
+        """Aggregate inflate demand: bytes the cluster's deflated
+        tenants are predicted to bring back resident within the horizon
+        (each tenant's wake footprint, gated on its predicted gap — with
+        forecasting on, the gap is the seasonal/flash-crowd blend, so a
+        learned burst shows up here *before* its requests arrive)."""
+        now = time.monotonic() if now is None else now
+        horizon = self.policy.scale_horizon_s if horizon_s is None \
+            else horizon_s
+        demand = 0
+        for node in self.alive_nodes():
+            gov = node.governor
+            with node.manager._lock:
+                insts = list(node.manager.instances.values())
+            for inst in insts:
+                if inst.state not in MIGRATABLE_STATES:
+                    continue
+                gap = gov.predicted_gap(inst.instance_id, now,
+                                        last_used=inst.last_used)
+                if gap <= horizon:
+                    demand += gov.inflate_bytes_estimate(inst.instance_id)
+        return demand
+
+    def cluster_headroom_bytes(self) -> int:
+        """Spare budget across nodes still accepting work."""
+        return sum(max(n.headroom_bytes(), 0) for n in self.target_nodes())
+
+    def autoscale(self, now: Optional[float] = None) -> List[tuple]:
+        """One elasticity decision, run from :meth:`rebalance` when
+        ``policy.elastic``: scale out when forecast demand exceeds
+        cluster headroom (plus margin), drain the emptiest node after
+        ``scale_in_sustained_rounds`` consecutive rounds in which the
+        cluster could lose it and still hold the forecast plus reserve.
+        At most one scale action per round — elasticity must never
+        thrash."""
+        now = time.monotonic() if now is None else now
+        acts: List[tuple] = []
+        if not self.policy.elastic or self._draining:
+            return acts
+        demand = self.forecast_demand_bytes(now)
+        headroom = self.cluster_headroom_bytes()
+        if demand > headroom + self.policy.scale_out_margin_bytes:
+            node = self.scale_out(now)
+            if node is not None:
+                self._low_util_rounds = 0
+                acts.append(("scale_out", node.node_id))
+                return acts
+        candidates = self.target_nodes()
+        if len(candidates) <= max(1, self.policy.min_nodes) or \
+                any(n.governor.budget_bytes is None for n in candidates):
+            return acts
+
+        def _used(n: Node) -> int:
+            return (n.governor.budget_bytes or 0) - n.headroom_bytes()
+
+        emptiest = min(candidates, key=_used)
+        spare_after = headroom - demand \
+            - (emptiest.governor.budget_bytes or 0)
+        if spare_after >= self.policy.scale_in_reserve_bytes:
+            self._low_util_rounds += 1
+            if self._low_util_rounds >= \
+                    self.policy.scale_in_sustained_rounds:
+                self._low_util_rounds = 0
+                acts += self.drain_node(emptiest.node_id, now)
+        else:
+            self._low_util_rounds = 0
+        return acts
+
+    def drain_node(self, node_id: str,
+                   now: Optional[float] = None) -> List[tuple]:
+        """Scale-in: re-heal the replicas this node holds for peers,
+        mass-migrate every tenant homed here through the normal
+        migration path, verify nothing is left, then decommission.
+
+        Fencing against dead-node recovery: drain starts only on a
+        detector-ALIVE node, the node is marked draining (no new
+        placements/migrations/replicas land on it), and every step
+        re-checks liveness — if the node dies mid-drain the drain stops
+        immediately, walks the detector to DEAD, and lets
+        :meth:`recover_node` re-home the remainder from replicas.  Each
+        tenant is also re-checked against ``placement`` before moving,
+        so the two paths can never both ship the same tenant."""
+        now = time.monotonic() if now is None else now
+        node = self.nodes[node_id]
+        with self._lock:
+            if node_id in self._draining:
+                raise MigrationError(f"drain {node_id}: already draining")
+            if self.detector.state(node_id) is not NodeHealth.ALIVE \
+                    or not node.alive:
+                raise MigrationError(f"drain {node_id}: node is not ALIVE")
+            if not [n for n in self.target_nodes() if n is not node]:
+                raise MigrationError(f"drain {node_id}: no other node "
+                                     "can absorb its tenants")
+            self._draining.add(node_id)
+        acts: List[tuple] = [("drain_start", node_id)]
+        self.log.append((now, "drain_start", node_id))
+        try:
+            # replicas held FOR peers go first: drop + re-heal elsewhere,
+            # so the failure domain never thins out mid-drain
+            held = sorted(node.replicas)
+            for iid in held:
+                node.drop_replica(iid)
+            per_round = max(1, self.policy.max_replications_per_round)
+            for _ in range(len(held) // per_round + 1):
+                if not self.anti_entropy(now):
+                    break
+            with self._lock:
+                homed = [iid for iid, h in self.placement.items()
+                         if h == node_id]
+            for iid in homed:
+                if not node.alive or self.detector.is_dead(node_id):
+                    self._node_down(node_id, now)
+                    acts.append(("drain_aborted", node_id))
+                    return acts
+                if self.placement.get(iid) != node_id:
+                    continue         # recovery/handoff already moved it
+                inst = node.manager.instances.get(iid)
+                if inst is None:
+                    with self._lock:
+                        self.placement.pop(iid, None)
+                    continue
+                gov = node.governor
+                if inst.state is S.WARM:
+                    # drain is deliberate: block on the tenant lock and
+                    # walk it down to a migratable (content-addressed)
+                    # rung so the transfer is dedup-aware
+                    with node.engine.instance_lock(iid):
+                        if inst.state is S.WARM:
+                            node.manager.descend(iid, Rung.HIBERNATED)
+                if inst.state not in MIGRATABLE_STATES:
+                    acts.append(("drain_stuck", iid))
+                    continue
+                freed = (gov._anon_resident_bytes(inst)
+                         + gov._mmap_benefit(inst)
+                         + inst.metadata_bytes())
+                idle = gov.predicted_gap(iid, now,
+                                         last_used=inst.last_used)
+                tried: set = set()
+                moved = False
+                for _attempt in range(self.policy.migration_retries + 1):
+                    pick = self._best_target(node, inst, freed, idle,
+                                             now, exclude=tried)
+                    if pick is None:
+                        break
+                    target, _score = pick
+                    try:
+                        h = self.migrate(iid, target.node_id, block=True)
+                    except MigrationError as e:
+                        if not node.alive:
+                            break     # source died: loop head aborts
+                        if getattr(e, "handle", None) is None:
+                            break     # raced a request: retry next drain
+                        self._blacklist[target.node_id] = \
+                            now + self.policy.blacklist_cooldown_s
+                        tried.add(target.node_id)
+                        self.migration_retries += 1
+                        continue
+                    if h.ok or h.committed:
+                        moved = True
+                        acts.append(("drain_migrate", iid, node_id,
+                                     target.node_id))
+                    break
+                if not moved and node.alive:
+                    acts.append(("drain_stuck", iid))
+            if not node.alive or self.detector.is_dead(node_id):
+                self._node_down(node_id, now)
+                acts.append(("drain_aborted", node_id))
+                return acts
+            with self._lock:
+                left = [iid for iid, h in self.placement.items()
+                        if h == node_id]
+            if left:
+                # stuck tenants keep the node up; the next autoscale
+                # round (or the operator) retries the drain
+                acts.append(("drain_incomplete", node_id, len(left)))
+                self.log.append((now, "drain_incomplete", node_id,
+                                 len(left)))
+                return acts
+            self.decommission_node(node_id, now)
+            self.scale_ins += 1
+            acts.append(("scale_in", node_id))
+            return acts
+        finally:
+            self._draining.discard(node_id)
+
+    def decommission_node(self, node_id: str,
+                          now: Optional[float] = None) -> None:
+        """Remove a fully-drained node from the fabric and release its
+        resources.  Refuses while any tenant is still homed there —
+        decommission never loses data; that is what makes scale-in safe
+        to automate."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            if any(h == node_id for h in self.placement.values()):
+                raise MigrationError(
+                    f"decommission {node_id}: still homes tenants")
+            node = self.nodes.pop(node_id)
+            self._breach.pop(node_id, None)
+            self._blacklist.pop(node_id, None)
+            self._warm_pins.pop(node_id, None)
+            self._draining.discard(node_id)
+        self.detector.remove_node(node_id)
+        node.close()
+        self.log.append((now, "decommission", node_id))
 
     # ------------------------------------------------------------ rebalance
     def rebalance(self, now: Optional[float] = None) -> List[tuple]:
@@ -528,6 +902,8 @@ class ClusterRouter:
                     and self.policy.terminate_last_resort:
                 actions += self._terminate_for_pressure(node, now)
         actions += self.anti_entropy(now)
+        if self.policy.elastic:
+            actions += self.autoscale(now)
         if actions:
             self.log.append((now, "rebalance", tuple(actions)))
         return actions
@@ -589,7 +965,7 @@ class ClusterRouter:
                 pfx = self.deployment_prefix_digests(arch)
                 taken = {h.node_id for h in holders}
                 targets = sorted(
-                    (n for n in self.alive_nodes()
+                    (n for n in self.target_nodes()
                      if n is not home and n.node_id not in taken
                      and n.store is not None),
                     key=lambda n: self.placement_score(
@@ -682,6 +1058,9 @@ class ClusterRouter:
 
     # ------------------------------------------------------------ accounting
     def migration_stats(self) -> Dict[str, float]:
+        """Cluster-tier counters: migrations, replication, recovery,
+        elasticity, and wire accounting (one flat dict for benchmark
+        tables)."""
         done = [h for h in self.handles if h.ok]
         now = time.monotonic()
         return {
@@ -712,8 +1091,14 @@ class ClusterRouter:
             "nodes_suspect": sum(
                 1 for nid in self.nodes
                 if self.detector.state(nid) == NodeHealth.SUSPECT),
+            "nodes": len(self.nodes),
+            "nodes_draining": len(self._draining),
+            "scale_outs": self.scale_outs,
+            "scale_ins": self.scale_ins,
+            "warm_bytes_shipped": self.warm_bytes_shipped,
         }
 
     def close(self) -> None:
+        """Tear down every node (platforms, peer servers, spools)."""
         for node in self.nodes.values():
             node.close()

@@ -1,0 +1,495 @@
+"""Traffic forecasting: the predictive half of the autoscaling control plane.
+
+The governor's per-tenant EWMA of inter-arrival gaps is *memoryless*: it
+answers "how often does this tenant arrive" but not "when will it arrive
+next".  A diurnal tenant that sleeps all night looks permanently idle at
+07:59 and pays a cold wake at 08:00 — exactly the leading-edge latency
+the deflation ladder exists to hide.  This module upgrades the signal:
+
+  * **Seasonal bins** — each tenant accumulates arrivals into
+    ``n_bins`` phase bins of a repeating ``season_period_s`` window
+    (diurnal by default, virtual-time scale in benchmarks).  Completed
+    periods fold into a per-bin rate EWMA, so the model learns *where in
+    the period* the tenant is active.
+  * **Trend + flash-crowd detection** — short-window vs long-window
+    arrival rates; a short rate ``burst_ratio`` times the background
+    rate (with a minimum arrival count, so two packets are not a crowd)
+    flags an active burst.
+  * **Confidence-weighted blend** — the seasonal prediction is mixed
+    with the caller's memoryless EWMA gap by a confidence weight built
+    from sample count, observed periods, and per-bin consistency
+    (signal-to-noise of the bin's rate EWMA vs its absolute-error EWMA).
+    A sparse or anti-seasonal tenant degrades gracefully to the reactive
+    EWMA — never below it.
+
+:class:`ForecastDaemon` is the actuator: it walks deflated tenants whose
+blended prediction says a request is due within the pre-inflate margin
+and wakes them through the existing low-priority wake pipeline
+(``InstanceManager.predictive_wake``), and revives a deployment's
+spilled KV prefixes by digest ahead of the burst so the first request
+COW-adopts instead of paying revive + prefill.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+__all__ = [
+    "ForecastConfig",
+    "TenantModel",
+    "TrafficForecaster",
+    "ForecastDaemon",
+]
+
+
+@dataclass
+class ForecastConfig:
+    """Knobs for :class:`TrafficForecaster` and :class:`ForecastDaemon`.
+
+    The defaults are wall-clock diurnal; virtual-time benchmarks shrink
+    ``season_period_s`` to their trace period.  All windows are in the
+    same (virtual or wall) clock the caller feeds to ``observe``.
+    """
+
+    #: length of one repeating seasonal window (default: one day)
+    season_period_s: float = 86400.0
+    #: phase bins per period (48 = half-hour bins at the default period)
+    n_bins: int = 48
+    #: cross-period EWMA smoothing for per-bin arrival rates
+    bin_alpha: float = 0.4
+    #: flash-crowd short window (the "now" rate)
+    short_window_s: float = 5.0
+    #: background window the short rate is compared against
+    long_window_s: float = 60.0
+    #: short rate must exceed ``burst_ratio`` x background to flag a burst
+    burst_ratio: float = 4.0
+    #: ... and at least this many arrivals must land inside the short
+    #: window (two packets are not a crowd)
+    burst_min_arrivals: int = 6
+    #: a bin's seasonal rate only earns trust after this many completed
+    #: periods with data
+    min_periods: int = 2
+    #: arrivals needed for full sample-count confidence
+    confidence_arrivals: int = 32
+    #: arrival timestamps kept per tenant for the rate windows (bounds
+    #: memory at hundreds-of-tenants scale)
+    history: int = 256
+    #: pre-inflate lead: the daemon wakes a tenant whose blended
+    #: prediction puts its next request within this margin
+    preinflate_margin_s: float = 5.0
+    #: minimum blend confidence before the daemon acts on a seasonal
+    #: prediction (bursts bypass this — they are direct observations)
+    preinflate_min_confidence: float = 0.25
+    #: revive the deployment's spilled KV prefixes ahead of the burst too
+    preinflate_prefixes: bool = True
+    #: per-pass cap on daemon wakes (a forecast must not stampede IO)
+    max_preinflates_per_pass: int = 8
+
+
+@dataclass
+class TenantModel:
+    """Per-tenant forecast state (one per observed key)."""
+
+    #: recent arrival timestamps (bounded; newest right)
+    history: Deque[float] = field(default_factory=deque)
+    #: per-bin arrival-rate EWMA (arrivals/sec), folded at period rollover
+    bin_rate: List[float] = field(default_factory=list)
+    #: per-bin EWMA of |observed - predicted| rate (consistency signal)
+    bin_dev: List[float] = field(default_factory=list)
+    #: completed periods each bin has folded
+    bin_periods: List[int] = field(default_factory=list)
+    #: arrivals accumulated in the bin's *current* period
+    bin_pending: List[int] = field(default_factory=list)
+    #: absolute period index each bin last folded/accumulated in
+    bin_stamp: List[int] = field(default_factory=list)
+    total_arrivals: int = 0
+
+
+class TrafficForecaster:
+    """Per-key seasonal + trend arrival model.
+
+    Keys are opaque strings — per-tenant instance ids in the governor,
+    but any stream of timestamped events works.  Time is always injected
+    (``now``), so virtual-time benchmarks and tests drive it
+    deterministically; the forecaster never reads a clock.
+
+    Thread-safe: the governor observes from request threads while the
+    platform daemon reads predictions.
+    """
+
+    def __init__(self, cfg: Optional[ForecastConfig] = None):
+        self.cfg = cfg or ForecastConfig()
+        if self.cfg.n_bins < 1:
+            raise ValueError("n_bins must be >= 1")
+        self._tenants: Dict[str, TenantModel] = {}
+        self._lock = threading.RLock()
+        self.observations = 0
+        self.bursts_flagged = 0
+
+    # ------------------------------------------------------------- helpers
+    def _bin_width(self) -> float:
+        return self.cfg.season_period_s / self.cfg.n_bins
+
+    def _bin_of(self, now: float) -> Tuple[int, int]:
+        """(absolute period index, bin index) of a timestamp."""
+        period = int(now // self.cfg.season_period_s)
+        phase = now - period * self.cfg.season_period_s
+        b = min(int(phase / self._bin_width()), self.cfg.n_bins - 1)
+        return period, b
+
+    def _model(self, key: str) -> TenantModel:
+        m = self._tenants.get(key)
+        if m is None:
+            n = self.cfg.n_bins
+            m = TenantModel(
+                history=deque(maxlen=self.cfg.history),
+                bin_rate=[0.0] * n, bin_dev=[0.0] * n,
+                bin_periods=[0] * n, bin_pending=[0] * n,
+                bin_stamp=[-1] * n)
+            self._tenants[key] = m
+        return m
+
+    def _fold(self, m: TenantModel, b: int, period: int) -> None:
+        """Fold a bin's pending count into its rate EWMA when a *newer*
+        period touches it; the observed rate's deviation from the prior
+        EWMA feeds the consistency signal."""
+        if m.bin_stamp[b] < 0 or m.bin_stamp[b] >= period:
+            return
+        a = self.cfg.bin_alpha
+        observed = m.bin_pending[b] / self._bin_width()
+        err = abs(observed - m.bin_rate[b])
+        if m.bin_periods[b] == 0:
+            m.bin_rate[b] = observed
+            m.bin_dev[b] = 0.0
+        else:
+            m.bin_rate[b] = a * observed + (1 - a) * m.bin_rate[b]
+            m.bin_dev[b] = a * err + (1 - a) * m.bin_dev[b]
+        m.bin_periods[b] += 1
+        m.bin_pending[b] = 0
+
+    def _rate_of_bin(self, m: TenantModel, b: int, period: int) -> float:
+        """Best estimate of a bin's seasonal rate, including a pending
+        count from a *completed* earlier period that never folded
+        (tenant skipped the bin since)."""
+        rate = m.bin_rate[b]
+        if 0 <= m.bin_stamp[b] < period and m.bin_pending[b] > 0:
+            pend = m.bin_pending[b] / self._bin_width()
+            rate = pend if m.bin_periods[b] == 0 else \
+                self.cfg.bin_alpha * pend + (1 - self.cfg.bin_alpha) * rate
+        return rate
+
+    # ------------------------------------------------------------- inputs
+    def observe(self, key: str, now: float) -> None:
+        """Record one arrival for ``key`` at (virtual) time ``now``."""
+        with self._lock:
+            m = self._model(key)
+            period, b = self._bin_of(now)
+            self._fold(m, b, period)
+            if m.bin_stamp[b] != period:
+                # entering the bin in a new period starts a fresh count
+                m.bin_pending[b] = 0
+            m.bin_pending[b] += 1
+            m.bin_stamp[b] = period
+            m.history.append(now)
+            m.total_arrivals += 1
+            self.observations += 1
+
+    def forget(self, key: str) -> None:
+        """Drop all state for a key (tenant evicted/terminated)."""
+        with self._lock:
+            self._tenants.pop(key, None)
+
+    # ------------------------------------------------------------- trend
+    def _window_count(self, m: TenantModel, now: float,
+                      window_s: float) -> int:
+        cutoff = now - window_s
+        n = 0
+        for ts in reversed(m.history):
+            if ts < cutoff:
+                break
+            n += 1
+        return n
+
+    def burst_factor(self, key: str, now: float) -> float:
+        """Short-window rate over background rate (1.0 = steady state).
+
+        The background floor is one arrival per long window, so a tenant
+        arriving from total silence still registers as bursting rather
+        than dividing by zero."""
+        with self._lock:
+            m = self._tenants.get(key)
+            if m is None:
+                return 1.0
+            short = self._window_count(m, now, self.cfg.short_window_s) \
+                / max(self.cfg.short_window_s, 1e-9)
+            long_ = self._window_count(m, now, self.cfg.long_window_s) \
+                / max(self.cfg.long_window_s, 1e-9)
+            floor = 1.0 / max(self.cfg.long_window_s, 1e-9)
+            return short / max(long_, floor)
+
+    def in_burst(self, key: str, now: float) -> bool:
+        """True while a flash crowd is hitting the key *right now*:
+        enough arrivals inside the short window, at a rate
+        ``burst_ratio`` above the background."""
+        with self._lock:
+            m = self._tenants.get(key)
+            if m is None:
+                return False
+            if self._window_count(m, now, self.cfg.short_window_s) \
+                    < self.cfg.burst_min_arrivals:
+                return False
+        hot = self.burst_factor(key, now) >= self.cfg.burst_ratio
+        if hot:
+            self.bursts_flagged += 1
+        return hot
+
+    # ------------------------------------------------------------- seasonal
+    def confidence(self, key: str, now: float) -> float:
+        """Blend weight in [0, 1] for the seasonal prediction at ``now``.
+
+        Three multiplicative terms, each in [0, 1]: sample count
+        (``total_arrivals / confidence_arrivals``), period coverage of
+        the judged bin (``bin_periods / min_periods``), and bin
+        consistency (rate EWMA vs absolute-error EWMA — an anti-seasonal
+        tenant whose bins disagree period-to-period scores near zero).
+        The judged bin is the *highest-rate* bin on the path from
+        ``now`` to the predicted next arrival, not where ``now`` sits:
+        the prediction being blended is about that arrival, and a
+        diurnal tenant is judged in its learned hot bin even while the
+        current phase is (correctly) silent.  (Judging strictly where
+        :meth:`seasonal_gap`'s integral completes would be wrong — one
+        expected arrival accumulates at the *end* of the hot bin's
+        mass, often a phase step past it, so a sharp one-bin spike
+        would be judged at the empty bin after the spike.)  Zero
+        history or a never-observed path means 0.0 — the pure reactive
+        fallback."""
+        with self._lock:
+            m = self._tenants.get(key)
+            if m is None or m.total_arrivals == 0:
+                return 0.0
+        gap = self.seasonal_gap(key, now)
+        with self._lock:
+            period, b0 = self._bin_of(now)
+            if gap is None:
+                b = b0
+            else:
+                _, b_end = self._bin_of(now + gap)
+                span = (b_end - b0) % self.cfg.n_bins
+                b = max(((b0 + i) % self.cfg.n_bins
+                         for i in range(span + 1)),
+                        key=lambda bb: m.bin_rate[bb])
+            samples = min(1.0, m.total_arrivals
+                          / max(self.cfg.confidence_arrivals, 1))
+            periods = min(1.0, m.bin_periods[b]
+                          / max(self.cfg.min_periods, 1))
+            rate, dev = m.bin_rate[b], m.bin_dev[b]
+            consistency = rate / (rate + dev + 1e-12) if rate > 0 else 0.0
+        return samples * periods * consistency
+
+    def seasonal_gap(self, key: str, now: float) -> Optional[float]:
+        """Expected seconds to the next arrival from the seasonal model:
+        integrate the per-bin rate forward from ``now`` until one
+        expected arrival accumulates (non-homogeneous Poisson).  Sitting
+        in a quiet bin just before a learned hot bin therefore predicts
+        "due when the hot bin starts" — the signal pre-inflate needs.
+        ``None`` when the model expects less than one arrival over a
+        full period (no seasonal signal)."""
+        with self._lock:
+            m = self._tenants.get(key)
+            if m is None or m.total_arrivals == 0:
+                return None
+            width = self._bin_width()
+            period, b0 = self._bin_of(now)
+            phase_in_bin = (now % self.cfg.season_period_s) - b0 * width
+            expected, t = 0.0, 0.0
+            for i in range(self.cfg.n_bins + 1):
+                b = (b0 + i) % self.cfg.n_bins
+                p = period + (b0 + i) // self.cfg.n_bins
+                span = width - phase_in_bin if i == 0 else width
+                rate = self._rate_of_bin(m, b, p)
+                if rate > 0:
+                    need = (1.0 - expected) / rate
+                    if need <= span:
+                        return t + need
+                    expected += rate * span
+                t += span
+            return None
+
+    def rate(self, key: str, now: float) -> float:
+        """Current blended arrival rate (arrivals/sec): the seasonal
+        bin's rate weighted by confidence, plus the short-window
+        observed rate weighted by the remainder."""
+        with self._lock:
+            m = self._tenants.get(key)
+            if m is None:
+                return 0.0
+            period, b = self._bin_of(now)
+            seasonal = self._rate_of_bin(m, b, period)
+            short = self._window_count(m, now, self.cfg.long_window_s) \
+                / max(self.cfg.long_window_s, 1e-9)
+        w = self.confidence(key, now)
+        return w * seasonal + (1 - w) * short
+
+    def expected_arrivals(self, key: str, now: float,
+                          horizon_s: float) -> float:
+        """Expected arrivals for ``key`` within ``horizon_s`` — the
+        cluster-elasticity demand signal (scale-out sums this across
+        tenants against cluster headroom)."""
+        gap = self.predicted_gap(key, now, None)
+        if gap is None or gap <= 0:
+            return 0.0
+        return horizon_s / gap
+
+    # ------------------------------------------------------------- blend
+    def predicted_gap(self, key: str, now: float,
+                      fallback_gap: Optional[float]) -> Optional[float]:
+        """Expected seconds to the next arrival, blended.
+
+        ``fallback_gap`` is the caller's memoryless estimate (the
+        governor's inter-arrival EWMA).  An active flash crowd
+        short-circuits to the observed short-window gap; otherwise the
+        seasonal prediction mixes with the fallback by
+        :meth:`confidence`.  With no seasonal signal the fallback is
+        returned unchanged — including ``None``, so callers can tell
+        "no prediction at all" from "predicted far away".
+
+        A seasonal prediction confident enough to *act on* (past
+        ``preinflate_min_confidence``, the bar the
+        :class:`ForecastDaemon` pre-inflates at) also lower-bounds the
+        blend: a once-a-period crowd tenant's "due in 2s" must not be
+        diluted by its ~period-long memoryless EWMA into a gap that
+        tells the governor to immediately descend what the daemon just
+        pre-inflated."""
+        if self.in_burst(key, now):
+            with self._lock:
+                m = self._tenants[key]
+                short = self._window_count(m, now, self.cfg.short_window_s)
+            return max(1e-3, self.cfg.short_window_s / max(short, 1))
+        seasonal = self.seasonal_gap(key, now)
+        if seasonal is None:
+            return fallback_gap
+        w = self.confidence(key, now)
+        if fallback_gap is None:
+            return seasonal if w > 0 else None
+        blended = w * seasonal + (1 - w) * fallback_gap
+        if w >= self.cfg.preinflate_min_confidence:
+            blended = min(blended, seasonal)
+        return blended
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        """Counters for dashboards and the benchmarks' tables."""
+        with self._lock:
+            return {
+                "tenants": len(self._tenants),
+                "observations": self.observations,
+                "bursts_flagged": self.bursts_flagged,
+            }
+
+
+class ForecastDaemon:
+    """Pre-inflates tenants (and their deployment's spilled prefixes)
+    ahead of predicted bursts.
+
+    Pure policy over existing mechanisms: wakes go through
+    ``InstanceManager.predictive_wake`` (the low-priority streamed wake
+    pipeline — a real request landing mid-stream absorbs it via
+    demand-pull), prefix revival through
+    ``PrefixRegistry.revive``.  Drive it from the platform's policy
+    daemon (wall clock) or directly with virtual time in benchmarks.
+    """
+
+    def __init__(self, manager, arch_of: Optional[Dict[str, str]] = None,
+                 cfg: Optional[ForecastConfig] = None):
+        self.manager = manager
+        self.arch_of = arch_of if arch_of is not None else {}
+        fc = getattr(manager.governor, "forecaster", None)
+        self.cfg = cfg or (fc.cfg if fc is not None else ForecastConfig())
+        self.prewarmed_tenants = 0
+        self.prewarmed_prefixes = 0
+        self.log: List[tuple] = []
+        self._last_preinflate: Dict[str, float] = {}
+
+    def _forecaster(self) -> Optional[TrafficForecaster]:
+        return getattr(self.manager.governor, "forecaster", None)
+
+    def step(self, now: float) -> List[str]:
+        """One pre-inflate pass at (virtual) time ``now``; returns the
+        tenant ids acted on.  No-op when the governor has no forecaster
+        (reactive mode)."""
+        fc = self._forecaster()
+        if fc is None:
+            return []
+        acted: List[str] = []
+        margin = self.cfg.preinflate_margin_s
+        with self.manager._lock:
+            insts = list(self.manager.instances.values())
+        from repro.core.manager import WAKEABLE_STATES
+        for inst in insts:
+            if len(acted) >= self.cfg.max_preinflates_per_pass:
+                break
+            if inst.state not in WAKEABLE_STATES:
+                continue
+            iid = inst.instance_id
+            burst = fc.in_burst(iid, now)
+            if not burst and \
+                    fc.confidence(iid, now) \
+                    < self.cfg.preinflate_min_confidence:
+                continue
+            # deliberately NOT the governor's confidence-weighted blend:
+            # a confident "due in 2s" seasonal signal diluted by a ~60s
+            # memoryless EWMA would never clear the margin, and the
+            # confidence gate above already guards acting on the model
+            gap = fc.predicted_gap(iid, now, None) if burst \
+                else fc.seasonal_gap(iid, now)
+            if gap is None or gap > margin:
+                continue
+            # one shot per prediction: if this tenant was pre-inflated
+            # within the margin and is deflated *again*, the governor
+            # reclaimed it under pressure — re-inflating every pass
+            # would ping-pong the same bytes (and the arrival, if the
+            # prediction was right, will wake it anyway)
+            if now - self._last_preinflate.get(iid, -1e18) < margin:
+                continue
+            # never pre-inflate into pressure: if the wake's footprint
+            # would breach the budget, the governor would reclaim it
+            # right back (possibly descending this very tenant).
+            # Instead, make room ahead of the predicted arrival — run a
+            # governor pass against a budget tightened by the incoming
+            # footprint, displacing the coldest tenants now, off the
+            # request path.  Only if nothing is reclaimable (every other
+            # tenant is hotter than this prediction) is the pre-inflate
+            # skipped.
+            gov = self.manager.governor
+            if gov.budget_bytes is not None:
+                need = gov.inflate_bytes_estimate(iid)
+                if gov.pressure_bytes() + need > 0:
+                    gov.step(now=now,
+                             budget_bytes=gov.budget_bytes - need)
+                    if gov.pressure_bytes() + need > 0:
+                        continue
+            if self.cfg.preinflate_prefixes:
+                self._revive_prefixes(iid)
+            if self.manager.predictive_wake(iid) is not None:
+                self.prewarmed_tenants += 1
+                self._last_preinflate[iid] = now
+                self.log.append((now, "forecast_wake", iid,
+                                 "burst" if burst else "seasonal"))
+                acted.append(iid)
+        return acted
+
+    def _revive_prefixes(self, instance_id: str) -> None:
+        """Revive the spilled prefixes of the tenant's deployment by
+        digest, so the burst's first sessions COW-adopt resident pages
+        instead of paying revive + prefill on the serve path."""
+        reg = getattr(self.manager, "prefix_registry", None)
+        if reg is None:
+            return
+        arch = self.arch_of.get(instance_id)
+        for digest in reg.spilled_digests(arch):
+            if reg.revive(digest):
+                self.prewarmed_prefixes += 1
+                self.log.append((None, "prefix_prewarm", instance_id,
+                                 digest))

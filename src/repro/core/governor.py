@@ -30,6 +30,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.forecast import ForecastConfig, TrafficForecaster
 from repro.core.inflate import is_critical_key
 from repro.core.state import ContainerState, Rung
 
@@ -84,6 +85,11 @@ class GovernorConfig:
     )
     #: safety valve: max ladder actions per ``step`` call
     max_actions_per_step: int = 64
+    #: traffic-forecast model (seasonal bins + flash-crowd detection)
+    #: blended into ``predicted_gap``; None keeps the governor purely
+    #: reactive (the memoryless EWMA — the pre-PR-9 behaviour and the
+    #: benchmark baseline)
+    forecast: Optional[ForecastConfig] = None
 
 
 @dataclass
@@ -109,6 +115,15 @@ class MemoryGovernor:
         self.arrivals: Dict[str, Tuple[float, Optional[float]]] = {}
         #: measured wake cost per rung name ("mmap_clean"/"partial"/...)
         self.wake_cost_ewma: Dict[str, float] = {}
+        #: seasonal/trend forecaster blended into ``predicted_gap``
+        #: (None = reactive-only)
+        self.forecaster: Optional[TrafficForecaster] = \
+            TrafficForecaster(self.cfg.forecast) \
+            if self.cfg.forecast is not None else None
+        #: per-tenant wake footprint: bytes the last deflation freed —
+        #: what a pre-inflate (or the elasticity demand model) expects
+        #: the tenant to re-occupy on wake
+        self.footprint: Dict[str, int] = {}
         self.actions: List[GovernorAction] = []
         self.steps = 0
 
@@ -123,6 +138,8 @@ class MemoryGovernor:
             gap = (now - last) if gap is None else \
                 a * (now - last) + (1 - a) * gap
         self.arrivals[instance_id] = (now, gap)
+        if self.forecaster is not None:
+            self.forecaster.observe(instance_id, now)
 
     def observe_wake(self, instance_id: str, stats) -> None:
         """Fed by ``InstanceManager.ensure_awake`` after every wake."""
@@ -131,9 +148,16 @@ class MemoryGovernor:
         cost = stats.critical_path_seconds
         self.wake_cost_ewma[stats.rung] = cost if prev is None else \
             a * cost + (1 - a) * prev
+        # the wake restored the deflated bytes: the tenant's pre-inflate
+        # footprint estimate resets until the next descent re-measures it
+        self.footprint.pop(instance_id, None)
 
     def forget(self, instance_id: str) -> None:
+        """Drop all per-tenant model state (tenant evicted/migrated)."""
         self.arrivals.pop(instance_id, None)
+        self.footprint.pop(instance_id, None)
+        if self.forecaster is not None:
+            self.forecaster.forget(instance_id)
 
     # ------------------------------------------------------------- models
     def predicted_gap(self, instance_id: str, now: float, *,
@@ -144,13 +168,33 @@ class MemoryGovernor:
         Poisson arrivals have no deadline, so an overdue tenant is *not*
         imminent and a recently-served one gets no extra protection.
         With a single observed arrival: the silence since it.  With
-        none: idle time — the LRU fallback."""
+        none: idle time — the LRU fallback.
+
+        With a forecaster configured, the memoryless estimate is blended
+        with the seasonal/flash-crowd prediction by the forecaster's
+        confidence — a sparse or anti-seasonal tenant gets exactly the
+        reactive estimate above, a learned-diurnal tenant is protected
+        ahead of its active window and released during its quiet one."""
         last, gap = self.arrivals.get(instance_id, (None, None))
         if last is None:
-            return max(1e-3, now - last_used)
-        if gap is None:
-            return max(1e-3, now - last)
-        return max(1e-3, gap)
+            reactive: float = max(1e-3, now - last_used)
+        elif gap is None:
+            reactive = max(1e-3, now - last)
+        else:
+            reactive = max(1e-3, gap)
+        if self.forecaster is not None:
+            blended = self.forecaster.predicted_gap(instance_id, now,
+                                                    reactive)
+            if blended is not None:
+                return max(1e-3, blended)
+        return reactive
+
+    def inflate_bytes_estimate(self, instance_id: str) -> int:
+        """Bytes a wake of this (deflated) tenant is expected to bring
+        back resident: the sum its ladder descents freed since the last
+        wake.  Zero for a tenant that never deflated — the cluster
+        elasticity demand model sums this across imminent tenants."""
+        return self.footprint.get(instance_id, 0)
 
     def wake_cost(self, rung: Rung) -> float:
         """Measured (EWMA) seconds to climb back out of a rung, falling

@@ -237,13 +237,22 @@ class InstanceManager:
             self.evict(instance_id)
             return None
         if rung == Rung.MMAP_CLEAN:
-            return self.hib.deflate_mmap(inst)
-        if rung == Rung.PARTIAL:
+            st = self.hib.deflate_mmap(inst)
+        elif rung == Rung.PARTIAL:
             if keys is None:
                 keys = [k for _, _, k in
                         self.governor._partial_candidates(inst)]
-            return self.hib.deflate_partial(inst, keys)
-        return self.hib.deflate(inst)
+            st = self.hib.deflate_partial(inst, keys)
+        else:
+            st = self.hib.deflate(inst)
+        # every descent path (governor pressure, keep-alive, router)
+        # accumulates the tenant's wake footprint — what a pre-inflate
+        # or the elasticity demand model expects the wake to re-occupy;
+        # observe_wake resets it when the bytes come back
+        gov = self.governor
+        gov.footprint[instance_id] = gov.footprint.get(instance_id, 0) \
+            + st.swap_bytes + st.shared_bytes_released
+        return st
 
     def ensure_awake(self, instance_id: str, trigger: str = "request",
                      priority: Optional[str] = None):

@@ -347,6 +347,28 @@ class PrefixRegistry:
                     if e.pages is not None and not e.resident_sharers
                     and self.store is not None]
 
+    def spilled_digests(self, arch_key: Optional[str] = None
+                        ) -> List[bytes]:
+        """Digests of spilled (non-resident, revivable) entries,
+        optionally filtered to one deployment arch — what the forecast
+        daemon revives ahead of a predicted burst."""
+        with self._lock:
+            return [d for d, e in self._entries.items()
+                    if e.pages is None
+                    and (arch_key is None or e.arch_key == arch_key)]
+
+    def revive(self, digest: bytes) -> bool:
+        """Rebuild a spilled entry's resident pages from the CAS store by
+        digest (pre-inflate path: the next ``adopt``/``reattach`` finds
+        the pages already resident instead of paying the revive on the
+        serve path).  Returns True if a revive happened."""
+        with self._lock:
+            e = self._entries.get(digest)
+            if e is None or e.pages is not None or self.store is None:
+                return False
+            self._revive(e)
+            return True
+
     def _revive(self, e: PrefixEntry) -> None:
         """Rebuild the resident copy from the CAS store by digest — the
         whole point of write-through: no prefill, one vectored read."""

@@ -57,6 +57,9 @@ class Backpressure(RuntimeError):
 
 @dataclass
 class FrontDoorPolicy:
+    """Gateway admission knobs: session caps, batch shedding, and
+    crash-redispatch behaviour."""
+
     #: gateway-wide cap on concurrently open streams
     max_sessions: int = 256
     #: per-tenant cap on concurrently open streams
@@ -68,6 +71,14 @@ class FrontDoorPolicy:
     #: shed batch requests to deflated tenants while the governor is
     #: under pressure (deflating faster than it wakes)
     shed_batch_under_pressure: bool = True
+    #: shed batch requests to a tenant the traffic forecaster has
+    #: flagged as mid flash-crowd once the gateway is busier than
+    #: ``burst_session_share`` — the reserved slots absorb the burst's
+    #: interactive leading edge instead of background work
+    shed_batch_during_burst: bool = True
+    #: session-occupancy fraction above which a flash-crowd tenant's
+    #: batch work is shed (only with a forecaster configured)
+    burst_session_share: float = 0.5
     #: how many times a request killed by a node crash is re-dispatched
     #: (the cluster router re-places the tenant on a survivor); the
     #: stream dedups re-played tokens so the client never sees a repeat
@@ -113,6 +124,8 @@ class TokenStream:
 
     # ------------------------------------------------------------- producer
     def push(self, token: int) -> None:
+        """Producer side (``Request.on_token``): append one token,
+        stamping TTFT on the first and deduping re-played prefixes."""
         with self._cv:
             self._attempt_pos += 1
             if self._attempt_pos <= self.emitted:
@@ -135,6 +148,8 @@ class TokenStream:
 
     def finish(self, response=None,
                error: Optional[BaseException] = None) -> None:
+        """Terminate the stream exactly once (with a response or a
+        terminal error); consumers observe the end-of-stream marker."""
         with self._cv:
             if self.finished_at is not None:
                 return
@@ -149,9 +164,11 @@ class TokenStream:
     # ------------------------------------------------------------- consumer
     @property
     def done(self) -> bool:
+        """True once :meth:`finish` ran (response or error is set)."""
         return self.finished_at is not None
 
     def ttft_s(self) -> Optional[float]:
+        """Time to first token (None until one arrives)."""
         if self.first_token_at is None:
             return None
         return self.first_token_at - self.submitted_at
@@ -211,6 +228,7 @@ class FrontDoor:
         self.errors = 0
         self.redispatches = 0
         self.idem_hits = 0
+        self.burst_sheds = 0
         #: idempotency_key -> live stream (in-flight dedupe) and a
         #: bounded LRU of finished streams (replay after completion)
         self._idem_inflight: Dict[str, TokenStream] = {}
@@ -219,6 +237,7 @@ class FrontDoor:
     # ------------------------------------------------------------- helpers
     @property
     def arch_of(self) -> Dict[str, str]:
+        """Tenant -> architecture registrations (owned by the target)."""
         return self.target.arch_of
 
     def register(self, instance_id: str, arch_key: str) -> None:
@@ -238,6 +257,8 @@ class FrontDoor:
         return plat.engine.manager if plat is not None else None
 
     def retry_after_s(self, instance_id: str) -> float:
+        """Honest backoff hint for a rejection: the tenant platform's
+        wake-cost + queue estimate, floored at ``min_retry_after_s``."""
         plat = self._platform_for(instance_id)
         if plat is not None and hasattr(plat, "retry_after_s"):
             hint = plat.retry_after_s(instance_id)
@@ -283,6 +304,23 @@ class FrontDoor:
                         f"node under memory pressure: batch wake of "
                         f"{instance_id} shed",
                         self.retry_after_s(instance_id))
+        if slo == SLO_BATCH and pol.shed_batch_during_burst:
+            mgr = self._manager_for(instance_id)
+            fc = mgr.governor.forecaster if mgr is not None else None
+            if fc is not None and \
+                    self._active_total >= pol.burst_session_share * \
+                    pol.max_sessions and \
+                    fc.in_burst(instance_id, time.monotonic()):
+                # a flash crowd is hitting this tenant and the gateway
+                # is filling: keep the remaining session slots for the
+                # burst's interactive leading edge — background work
+                # retries after the spike
+                with self._lock:
+                    self.rejected += 1
+                    self.burst_sheds += 1
+                raise Backpressure(
+                    f"tenant {instance_id} mid flash-crowd: batch "
+                    "session shed", self.retry_after_s(instance_id))
         with self._lock:
             self._active_total += 1
             self._active_batch += 1 if slo == SLO_BATCH else 0
@@ -427,6 +465,7 @@ class FrontDoor:
 
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict[str, float]:
+        """Gateway counters (admissions, sheds, redispatches, replay)."""
         with self._lock:
             return {
                 "active_sessions": self._active_total,
@@ -439,6 +478,7 @@ class FrontDoor:
                 "tenants_active": len(self._active),
                 "redispatches": self.redispatches,
                 "idem_hits": self.idem_hits,
+                "burst_sheds": self.burst_sheds,
                 "idem_inflight": len(self._idem_inflight),
                 "idem_cached": len(self._idem_done),
             }

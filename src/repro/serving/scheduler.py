@@ -30,6 +30,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
+from repro.core.forecast import ForecastDaemon
 from repro.core.state import RUNG_OF, ContainerState, Rung
 from repro.serving.engine import (SLO_BATCH, Request, Response,
                                   ServingEngine, TenantMigrated)
@@ -115,6 +116,10 @@ class AsyncPlatform:
         #: the futures against the target node).  Without it, stragglers
         #: fail with :class:`TenantMigrated` on their futures.
         self.reroute = None
+        #: forecast control plane: created lazily on the first policy
+        #: pass that sees the governor running a TrafficForecaster
+        #: (``GovernorConfig.forecast``); None in the reactive world
+        self._forecast_daemon: Optional[ForecastDaemon] = None
 
     @property
     def arrivals(self) -> Dict[str, tuple]:
@@ -385,6 +390,17 @@ class AsyncPlatform:
                                         priority="low") is not None:
                         self.log.append((now, "anticipated_wake", iid))
                         acted.append(iid)
+        # forecast-driven pre-inflate: with a TrafficForecaster on the
+        # governor, seasonal/flash-crowd predictions wake tenants (and
+        # revive their spilled prefixes) *ahead* of the memoryless EWMA
+        # above — the daemon rides the same policy cadence and the same
+        # low-priority streamed wake pipeline
+        if mgr.governor.forecaster is not None:
+            if self._forecast_daemon is None:
+                self._forecast_daemon = ForecastDaemon(mgr, self.arch_of)
+            for iid in self._forecast_daemon.step(now):
+                self.log.append((now, "forecast_wake", iid))
+                acted.append(iid)
         return acted
 
 

@@ -1,0 +1,190 @@
+"""Cluster elasticity: scale-out with CAS warm-ship, forecast-demand
+autoscaling, and scale-in drains that lose nothing — including the
+drain-vs-node-death race, fenced by the failure detector."""
+import pytest
+
+from repro.cluster import ClusterPolicy, MigrationError, Node
+from repro.cluster.faults import FaultInjector
+from repro.cluster.health import HealthPolicy, NodeHealth
+from repro.core.state import Rung
+
+from test_cluster import (ARCH, SALT, _assert_identical, _cluster,
+                          _full_wake, _snapshot, _tenant)
+from test_chaos import POLICY, _hibernate_and_replicate
+
+
+def _factory(tiny_factory, spool_dir):
+    """node_factory wired onto the router for scale-out tests."""
+    return lambda nid: Node(nid, tiny_factory, spool_dir=spool_dir,
+                            salt=SALT)
+
+
+# ------------------------------------------------------------- scale-out
+def test_scale_out_admits_and_cas_warms_node(tiny_factory, spool_dir):
+    """A scaled-out node joins detector-ALIVE with the fleet's
+    deployment digests already in its store (pinned, so GC cannot undo
+    the warm-up), making the first migration to it mostly dedup."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    snap = _snapshot(_tenant(router, n0, "t0", seed=3))
+    _tenant(router, n0, "t1", seed=4)
+    for iid in ("t0", "t1"):
+        n0.manager.descend(iid, Rung.HIBERNATED)
+    router.node_factory = _factory(tiny_factory, spool_dir)
+
+    node = router.scale_out(now=0.0)
+    assert node is not None and node.node_id in router.nodes
+    assert router.detector.state(node.node_id) is NodeHealth.ALIVE
+    digests = router.deployment_digests(ARCH)
+    assert digests and not node.store.missing_digests(digests)
+    assert node.store.stats()["pinned_segments"] > 0
+    stats = router.migration_stats()
+    assert stats["scale_outs"] == 1 and stats["warm_bytes_shipped"] > 0
+
+    # the warm-up pays off: the first migration there is mostly dedup,
+    # and the tenant wakes byte-identical on the new node
+    h = router.migrate("t0", node.node_id)
+    assert h.ok and h.stats.bytes_dedup > 0
+    assert h.stats.bytes_shipped < h.stats.full_snapshot_bytes
+    _assert_identical(_full_wake(node, "t0"), snap)
+    router.close()
+
+
+def test_scale_out_respects_ceiling_and_missing_factory(tiny_factory,
+                                                        spool_dir):
+    router, _ = _cluster(tiny_factory, spool_dir)
+    assert router.scale_out(now=0.0) is None        # no factory wired
+    router.node_factory = _factory(tiny_factory, spool_dir)
+    router.policy.max_nodes = 2
+    assert router.scale_out(now=0.0) is None        # already at ceiling
+    assert router.migration_stats()["scale_outs"] == 0
+    router.close()
+
+
+def test_autoscale_scales_out_on_forecast_demand(tiny_factory, spool_dir):
+    """Deflated tenants predicted to wake within the horizon add up to
+    more than the budgeted headroom: the elastic round spawns a node."""
+    policy = ClusterPolicy(elastic=True, scale_horizon_s=30.0,
+                           max_nodes=4)
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir, budget=1 << 20,
+                                policy=policy)
+    router.node_factory = _factory(tiny_factory, spool_dir)
+    for i in range(4):
+        _tenant(router, n0, f"t{i}", seed=i)
+        n0.manager.descend(f"t{i}", Rung.HIBERNATED)
+        # two tight arrivals: the reactive EWMA predicts "due in ~1s"
+        n0.governor.observe_arrival(f"t{i}", now=0.0)
+        n0.governor.observe_arrival(f"t{i}", now=1.0)
+
+    demand = router.forecast_demand_bytes(now=2.0)
+    assert demand > router.cluster_headroom_bytes()
+    acts = router.autoscale(now=2.0)
+    assert [a[0] for a in acts] == ["scale_out"]
+    assert len(router.nodes) == 3
+    # one action per round: the same round never also drains
+    assert not router._draining
+    router.close()
+
+
+def test_autoscale_idle_without_demand(tiny_factory, spool_dir):
+    """No deflated tenant due within the horizon: the elastic round
+    does nothing — elasticity must not thrash on an idle cluster."""
+    policy = ClusterPolicy(elastic=True, scale_in_sustained_rounds=1000)
+    router, _ = _cluster(tiny_factory, spool_dir, budget=256 << 20,
+                         policy=policy)
+    router.node_factory = _factory(tiny_factory, spool_dir)
+    assert router.forecast_demand_bytes(now=100.0) == 0
+    for r in range(3):
+        assert router.autoscale(now=100.0 + r) == []
+    assert len(router.nodes) == 2
+    router.close()
+
+
+# -------------------------------------------------------------- scale-in
+def test_drain_rehomes_everything_and_decommissions(tiny_factory,
+                                                    spool_dir):
+    """The scale-in acceptance property: draining a node mass-migrates
+    every tenant (including a WARM one walked down to a migratable
+    rung), loses nothing, leaves survivors GC-clean, and removes the
+    node from the fabric."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    iids = [f"t{i}" for i in range(4)]
+    snaps = {iid: _snapshot(_tenant(router, n0, iid, seed=i))
+             for i, iid in enumerate(iids)}
+    for iid in iids[1:]:
+        n0.manager.descend(iid, Rung.HIBERNATED)
+    # t0 stays WARM: drain must walk it down itself
+
+    acts = router.drain_node("n0", now=0.0)
+    assert ("scale_in", "n0") in acts
+    assert len([a for a in acts if a[0] == "drain_migrate"]) == 4
+    assert router.tenants_lost == 0
+    assert "n0" not in router.nodes and not router._draining
+    for iid in iids:
+        assert router.placement[iid] == "n1"
+        _assert_identical(_full_wake(n1, iid), snaps[iid])
+    assert n1.store.orphan_digests(0.0) == []
+    stats = router.migration_stats()
+    assert stats["scale_ins"] == 1 and stats["nodes"] == 1
+    router.close()
+
+
+def test_drain_refusals(tiny_factory, spool_dir):
+    """No absorbing peer or a non-ALIVE source: drain refuses up front
+    rather than stranding tenants halfway."""
+    router, (n0,) = _cluster(tiny_factory, spool_dir, n=1)
+    _tenant(router, n0, "t0")
+    with pytest.raises(MigrationError, match="no other node"):
+        router.drain_node("n0", now=0.0)
+    router.close()
+
+    router2, (m0, m1) = _cluster(tiny_factory, spool_dir + "/b")
+    router2.check_health(0.0)
+    m0.kill()
+    with pytest.raises(MigrationError, match="not ALIVE"):
+        router2.drain_node("n0", now=1.0)
+    router2.close()
+
+
+def test_drain_excluded_as_target_but_still_counted_alive(tiny_factory,
+                                                          spool_dir):
+    """A draining node leaves the placement/replication target set but
+    stays in the recovery/repair set — the fencing primitive."""
+    router, (n0, n1) = _cluster(tiny_factory, spool_dir)
+    router._draining.add("n0")
+    assert [n.node_id for n in router.target_nodes()] == ["n1"]
+    assert {n.node_id for n in router.alive_nodes()} == {"n0", "n1"}
+    assert router.place("fresh", ARCH).node_id == "n1"
+    router._draining.discard("n0")
+    router.close()
+
+
+def test_drain_aborts_cleanly_when_node_dies_mid_drain(tiny_factory,
+                                                       spool_dir):
+    """The race the detector fences: the node dies between two drain
+    migrations.  The drain stops, hands the remainder to replicated
+    recovery, and not one tenant is lost or double-homed."""
+    router, (n0, n1, n2) = _cluster(tiny_factory, spool_dir, n=3,
+                                    policy=POLICY)
+    iids = [f"t{i}" for i in range(4)]
+    snaps = {iid: _snapshot(_tenant(router, n0, iid, seed=10 + i))
+             for i, iid in enumerate(iids)}
+    _hibernate_and_replicate(router, n0, iids)
+    router.check_health(0.0)
+
+    # kill the source at the *second* migration's post-ship checkpoint
+    inj = FaultInjector(seed=7).arm("migrate.shipped",
+                                    FaultInjector.kill_node(n0), hit=2)
+    with inj:
+        acts = router.drain_node("n0", now=0.0)
+    assert ("drain_aborted", "n0") in acts
+    assert ("scale_in", "n0") not in acts
+    assert router.tenants_lost == 0
+    assert router.detector.is_dead("n0")
+    assert "n0" in router.nodes          # aborted, not decommissioned
+    assert not router._draining
+    homes = {iid: router.placement[iid] for iid in iids}
+    assert set(homes.values()) <= {"n1", "n2"}
+    for iid in iids:
+        home = router.nodes[homes[iid]]
+        _assert_identical(_full_wake(home, iid), snaps[iid])
+    router.close()

@@ -1,0 +1,216 @@
+"""Predictive control plane: seasonal forecaster correctness, graceful
+fallback on sparse/adversarial traffic, flash-crowd detection, and the
+pre-inflate daemon acting through the low-priority wake pipeline."""
+import numpy as np
+
+from repro.core.forecast import (ForecastConfig, ForecastDaemon,
+                                 TrafficForecaster)
+from repro.core.governor import GovernorConfig
+from repro.core.manager import InstanceManager, ManagerConfig
+from repro.core.state import ContainerState, Rung
+
+S = ContainerState
+ARCH = "llama3.2-3b"
+PERIOD, BINS = 100.0, 10
+
+
+def _fc(**kw):
+    kw.setdefault("season_period_s", PERIOD)
+    kw.setdefault("n_bins", BINS)
+    kw.setdefault("min_periods", 2)
+    kw.setdefault("confidence_arrivals", 12)
+    return TrafficForecaster(ForecastConfig(**kw))
+
+
+def _gov_cfg(**fc_kw):
+    fc_kw.setdefault("season_period_s", PERIOD)
+    fc_kw.setdefault("n_bins", BINS)
+    fc_kw.setdefault("min_periods", 2)
+    fc_kw.setdefault("confidence_arrivals", 8)
+    fc_kw.setdefault("preinflate_margin_s", 10.0)
+    fc_kw.setdefault("preinflate_min_confidence", 0.2)
+    return GovernorConfig(forecast=ForecastConfig(**fc_kw))
+
+
+def _mgr(tiny_factory, spool_dir, gov_cfg=None):
+    return InstanceManager(
+        ManagerConfig(spool_dir=spool_dir, wake_mode="reap",
+                      governor_policy=gov_cfg), tiny_factory)
+
+
+def _learn_window(observe, periods=3):
+    """Arrivals in phase window [50, 60) of each learning period."""
+    for p in range(periods):
+        for ph in (50.0, 52.0, 54.0, 56.0, 58.0):
+            observe("t0", p * PERIOD + ph)
+
+
+# --------------------------------------------------------------- fallback
+def test_empty_history_returns_fallback_unchanged():
+    """A never-observed key is pure reactive: the caller's fallback
+    comes back verbatim (including None), confidence is zero, and no
+    burst is flagged."""
+    fc = _fc()
+    assert fc.predicted_gap("ghost", 5.0, 42.0) == 42.0
+    assert fc.predicted_gap("ghost", 5.0, None) is None
+    assert fc.confidence("ghost", 5.0) == 0.0
+    assert fc.seasonal_gap("ghost", 5.0) is None
+    assert not fc.in_burst("ghost", 5.0)
+    assert fc.rate("ghost", 5.0) == 0.0
+
+
+def test_single_arrival_degrades_to_fallback():
+    """One arrival is not a season: no completed period means zero
+    confidence, so the blend returns the memoryless estimate exactly."""
+    fc = _fc()
+    fc.observe("t0", 10.0)
+    assert fc.predicted_gap("t0", 12.0, 30.0) == 30.0
+    assert fc.confidence("t0", 12.0) == 0.0
+    assert not fc.in_burst("t0", 12.0)
+    fc.forget("t0")
+    assert fc.predicted_gap("t0", 12.0, 30.0) == 30.0
+
+
+# --------------------------------------------------------------- seasonal
+def test_seasonal_learning_predicts_active_window():
+    """Three learned periods of a [50, 60) active window: sitting at
+    phase 45 the model predicts the next arrival when the hot bin
+    starts, with high confidence — the pre-inflate signal."""
+    fc = _fc()
+    _learn_window(fc.observe)
+    now = 3 * PERIOD + 45.0          # quiet bin, hot window 5s away
+    gap = fc.seasonal_gap("t0", now)
+    assert gap is not None and 4.0 <= gap <= 12.0
+    # confidence is judged at the bin the predicted arrival lands in,
+    # not the (deliberately quiet) current bin
+    assert fc.confidence("t0", now) > 0.5
+    blended = fc.predicted_gap("t0", now, 80.0)
+    assert blended < 0.5 * 80.0
+    # mid quiet half of the period the same model predicts "far away"
+    far = fc.seasonal_gap("t0", 3 * PERIOD + 65.0)
+    assert far is not None and far > 50.0
+
+
+def test_antiseasonal_traffic_not_much_worse_than_ewma():
+    """Adversarial anti-seasonal trace (the active window alternates
+    phase every period): the blend's mean absolute gap error stays
+    within 1.5x of the pure EWMA fallback — graceful degradation, never
+    a cliff."""
+    rng = np.random.default_rng(11)
+    fc = _fc(confidence_arrivals=8)
+    evs, t = [], 0.0
+    for p in range(8):
+        start = (0.0 if p % 2 == 0 else 50.0) + p * PERIOD
+        t = start
+        while t < start + 20.0:
+            t += float(rng.exponential(3.0))
+            evs.append(t)
+    evs.sort()
+    ewma, last = None, None
+    err_fc, err_ewma = [], []
+    for t in evs:
+        if last is not None:
+            actual = t - last
+            if ewma is not None:
+                pred = fc.predicted_gap("t0", last, ewma)
+                err_fc.append(abs(pred - actual))
+                err_ewma.append(abs(ewma - actual))
+            ewma = actual if ewma is None else \
+                0.3 * actual + 0.7 * ewma
+        fc.observe("t0", t)
+        last = t
+    assert np.mean(err_fc) <= 1.5 * np.mean(err_ewma) + 1e-9
+
+
+# ------------------------------------------------------------ flash crowd
+def test_burst_detection_fires_and_subsides():
+    fc = _fc(short_window_s=2.0, long_window_s=30.0, burst_ratio=3.0,
+             burst_min_arrivals=4)
+    for t in range(0, 200, 20):          # sparse background
+        fc.observe("t0", float(t))
+    assert not fc.in_burst("t0", 200.0)
+    for i in range(8):                   # the crowd lands
+        fc.observe("t0", 300.0 + i * 0.2)
+    assert fc.in_burst("t0", 301.6)
+    assert fc.burst_factor("t0", 301.6) >= 3.0
+    # during the burst the predicted gap collapses to the observed rate
+    assert fc.predicted_gap("t0", 301.6, 60.0) < 1.0
+    # the short window drains: the flag drops, no sticky state
+    assert not fc.in_burst("t0", 330.0)
+    assert fc.stats()["bursts_flagged"] > 0
+
+
+# ---------------------------------------------------------- governor wiring
+def test_governor_blends_and_falls_back(tiny_factory, spool_dir):
+    """With a forecaster configured the governor's predicted_gap blends
+    seasonal predictions, but a tenant with no history gets exactly the
+    reactive estimate."""
+    mgr = _mgr(tiny_factory, spool_dir, _gov_cfg())
+    mgr.cold_start("t0", ARCH)
+    gov = mgr.governor
+    assert gov.forecaster is not None
+    # no history: reactive idle-time fallback, to the millisecond
+    mgr.instances["t0"].last_used = 1.0
+    assert gov.predicted_gap("t0", 5.0, last_used=1.0) == 4.0
+    # arrivals flow into the forecaster via observe_arrival
+    _learn_window(lambda iid, t: gov.observe_arrival(iid, now=t))
+    assert gov.forecaster.observations == 15
+    now = 3 * PERIOD + 45.0
+    reactive_only = _mgr(tiny_factory, spool_dir + "/reactive").governor
+    assert gov.predicted_gap("t0", now) < 20.0   # seasonal pull-in
+    assert reactive_only.forecaster is None
+
+
+def test_wake_footprint_tracks_descents_and_resets(tiny_factory, spool_dir):
+    """Every descent accumulates the bytes a future wake must restore;
+    the wake resets it — the elasticity demand model reads this."""
+    mgr = _mgr(tiny_factory, spool_dir)
+    mgr.cold_start("t0", ARCH)
+    gov = mgr.governor
+    assert gov.inflate_bytes_estimate("t0") == 0
+    mgr.descend("t0", Rung.HIBERNATED)
+    est = gov.inflate_bytes_estimate("t0")
+    assert est > 0
+    mgr.ensure_awake("t0")
+    inst = mgr.instances["t0"]
+    if inst.wake_pipeline is not None:
+        inst.wake_pipeline.wait(60)
+    inst.quiesce_bg()
+    assert gov.inflate_bytes_estimate("t0") == 0
+
+
+# ----------------------------------------------------------------- daemon
+def test_daemon_preinflates_ahead_of_learned_window(tiny_factory,
+                                                    spool_dir):
+    """The daemon wakes a hibernated tenant when the learned window is
+    within the margin — and leaves it alone in the quiet phase."""
+    mgr = _mgr(tiny_factory, spool_dir, _gov_cfg())
+    mgr.cold_start("t0", ARCH)
+    gov = mgr.governor
+    _learn_window(lambda iid, t: gov.observe_arrival(iid, now=t))
+    mgr.descend("t0", Rung.HIBERNATED)
+    daemon = ForecastDaemon(mgr)
+    # deep in the quiet phase: the window is ~40s away, margin is 10
+    assert daemon.step(3 * PERIOD + 10.0) == []
+    assert mgr.instances["t0"].state == S.HIBERNATE
+    # just ahead of the window: pre-inflate fires
+    assert daemon.step(3 * PERIOD + 45.0) == ["t0"]
+    inst = mgr.instances["t0"]
+    assert inst.state != S.HIBERNATE
+    if inst.wake_pipeline is not None:
+        inst.wake_pipeline.wait(60)
+    inst.quiesce_bg()
+    assert daemon.prewarmed_tenants == 1
+    # already awake: the next pass has nothing to do
+    assert daemon.step(3 * PERIOD + 46.0) == []
+
+
+def test_daemon_noop_without_forecaster(tiny_factory, spool_dir):
+    """Reactive governor (forecast=None): the daemon is a strict no-op
+    — pre-PR-9 behaviour is the benchmark baseline."""
+    mgr = _mgr(tiny_factory, spool_dir)
+    mgr.cold_start("t0", ARCH)
+    mgr.descend("t0", Rung.HIBERNATED)
+    daemon = ForecastDaemon(mgr)
+    assert daemon.step(1.0) == []
+    assert mgr.instances["t0"].state == S.HIBERNATE

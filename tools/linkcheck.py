@@ -1,0 +1,91 @@
+"""Relative-link and anchor checker for the docs tree.
+
+Walks the given markdown files, extracts every inline link, and fails
+on: relative links to files that don't exist, and ``#anchor`` fragments
+(same-file or cross-file) that don't match any heading's GitHub-style
+slug.  External (http/https/mailto) links are *not* fetched — CI must
+not flake on someone else's server.
+
+Usage: ``python tools/linkcheck.py README.md docs/*.md``
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor algorithm: lowercase, drop punctuation, spaces
+    become hyphens (markdown emphasis/code markers stripped first)."""
+    text = re.sub(r"[*_`]|\[|\]|\(.*?\)", "", heading).strip()
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    """Anchor slugs of every heading outside code fences."""
+    out = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(slugify(m.group(1)))
+    return out
+
+
+def links_of(path: Path):
+    """(line_no, target) for every inline link outside code fences."""
+    in_fence = False
+    for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(),
+                             start=1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield i, m.group(1)
+
+
+def check(files) -> int:
+    anchor_cache = {}
+
+    def anchors(p: Path) -> set:
+        if p not in anchor_cache:
+            anchor_cache[p] = anchors_of(p)
+        return anchor_cache[p]
+
+    errors = []
+    for f in files:
+        f = Path(f)
+        for line_no, target in links_of(f):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            ref, _, frag = target.partition("#")
+            dest = (f.parent / ref).resolve() if ref else f.resolve()
+            if ref and not dest.exists():
+                errors.append(f"{f}:{line_no}: broken link -> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if frag not in anchors(dest):
+                    errors.append(
+                        f"{f}:{line_no}: missing anchor -> {target}")
+    for e in errors:
+        print(e)
+    print(f"linkcheck: {len(errors)} error(s) in {len(list(files))} file(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1:]))
