@@ -25,6 +25,8 @@
                      and container state over loopback HTTP, overload 429s
   recovery         — failure domain: kill a node, re-home MTTR from
                      replicated segments, post-recovery wake p99
+  zygote_cold_start— zygote pool: fork-admission vs cold-start TTFT for
+                     brand-new tenants (dense/MoE/SSM), byte identity
   roofline         — brief: per-(arch x shape x mesh) roofline table
 
 `python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`
@@ -53,7 +55,8 @@ def main(argv=None):
                             gateway_latency, governor_density,
                             latency_states, memory_states, prefix_density,
                             reap_ablation, recovery, roofline, sharing,
-                            swap_throughput, wake_latency)
+                            swap_throughput, wake_latency,
+                            zygote_cold_start)
     suites = [
         ("allocator", allocator),
         ("swap_throughput", swap_throughput),
@@ -67,6 +70,7 @@ def main(argv=None):
         ("prefix_density", prefix_density),
         ("gateway_latency", gateway_latency),
         ("recovery", recovery),
+        ("zygote_cold_start", zygote_cold_start),
         ("dedup_store", dedup_store),
         ("sharing", sharing),
         ("reap_ablation", reap_ablation),

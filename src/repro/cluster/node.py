@@ -104,6 +104,20 @@ class Node:
         inv = self.prefix_inventory()
         return sum(inv.get(d, 0) for d in digests)
 
+    def zygote_families(self) -> Dict[str, int]:
+        """``{family: live zygote count}`` this node can fork from — the
+        node's advertisement to the router's zygote-affinity placement
+        term (empty when the manager runs without a pool)."""
+        zp = self.manager.zygotes
+        return zp.families() if zp is not None else {}
+
+    def zygote_bytes(self, arch_key: str) -> int:
+        """Init bytes a new tenant of ``arch_key`` placed here would
+        avoid by forking a live zygote instead of cold-starting (0
+        without a pool or a live donor of the family)."""
+        zp = self.manager.zygotes
+        return zp.zygote_bytes(arch_key) if zp is not None else 0
+
     def imminent_wake_burden_s(self, now: float,
                                horizon_s: float = 5.0) -> float:
         """Summed predicted wake cost (seconds) of this node's deflated

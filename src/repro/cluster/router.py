@@ -83,6 +83,11 @@ class ClusterPolicy:
     #: new sessions COW-adopt instead of prefilling (TTFT win), so it
     #: outranks an equally-empty node without the prefixes
     prefix_affinity_weight: float = 1.0
+    #: weight of zygote affinity in placement scoring: a node holding a
+    #: live fork donor of the tenant's family admits it by warm fork
+    #: (memcpy + inherited executables) instead of a cold init, so it
+    #: outranks an equally-empty node without one
+    zygote_affinity_weight: float = 1.0
     #: placement looks this far ahead for imminent wakes (seconds)
     imminent_horizon_s: float = 5.0
     #: after migration fails to clear a sustained breach, TERMINATED
@@ -363,16 +368,21 @@ class ClusterRouter:
             prefix_digests = self.deployment_prefix_digests(arch_key)
         affinity = node.digest_overlap_bytes(digests)
         prefix_affinity = node.prefix_overlap_bytes(prefix_digests)
+        zygote_affinity = node.zygote_bytes(arch_key)
         headroom = max(node.headroom_bytes(), 0)
         burden = node.imminent_wake_burden_s(
             now, self.policy.imminent_horizon_s)
         return (headroom + self.policy.affinity_weight * affinity
-                + self.policy.prefix_affinity_weight * prefix_affinity) \
+                + self.policy.prefix_affinity_weight * prefix_affinity
+                + self.policy.zygote_affinity_weight * zygote_affinity) \
             / (1.0 + burden)
 
     def place(self, instance_id: str, arch_key: str, *,
               shared_paths=None, now: Optional[float] = None) -> Node:
-        """Pick a node for a new tenant and cold-start it there."""
+        """Pick a node for a new tenant and admit it there — by warm
+        fork when the node holds a live zygote of the family (the
+        zygote-affinity term steered placement toward one), by classic
+        cold start otherwise."""
         now = time.monotonic() if now is None else now
         with self._lock:
             if instance_id in self.placement:
@@ -387,9 +397,13 @@ class ClusterRouter:
                            n, arch_key, now, digests=digests,
                            prefix_digests=pfx))
             self.placement[instance_id] = best.node_id
-        best.engine.start_instance(instance_id, arch_key,
-                                   shared_paths=shared_paths)
-        self.log.append((now, "place", instance_id, best.node_id))
+        if best.engine.fork_instance(instance_id, arch_key,
+                                     shared_paths=shared_paths) is not None:
+            self.log.append((now, "place_fork", instance_id, best.node_id))
+        else:
+            best.engine.start_instance(instance_id, arch_key,
+                                       shared_paths=shared_paths)
+            self.log.append((now, "place", instance_id, best.node_id))
         return best
 
     def node_of(self, instance_id: str) -> Optional[Node]:

@@ -409,6 +409,7 @@ class ForecastDaemon:
         self.cfg = cfg or (fc.cfg if fc is not None else ForecastConfig())
         self.prewarmed_tenants = 0
         self.prewarmed_prefixes = 0
+        self.preforked_zygotes = 0
         self.log: List[tuple] = []
         self._last_preinflate: Dict[str, float] = {}
 
@@ -478,6 +479,36 @@ class ForecastDaemon:
                 self.log.append((now, "forecast_wake", iid,
                                  "burst" if burst else "seasonal"))
                 acted.append(iid)
+        acted += self._prefork_zygotes(now)
+        return acted
+
+    def _prefork_zygotes(self, now: float) -> List[str]:
+        """Spawn fork donors ahead of predicted *new-tenant* arrivals.
+
+        The zygote pool predicts per-family new-tenant admission gaps
+        (its EWMA blended with the forecaster's synthetic
+        ``__newtenant__:family`` streams); families due within the
+        pre-fork margin and missing a live donor get one spawned here —
+        the same pressure-aware make-room-first discipline as tenant
+        pre-inflates, so a pre-fork never lands into a breach the
+        governor would immediately reclaim."""
+        zp = getattr(self.manager, "zygotes", None)
+        if zp is None:
+            return []
+        acted: List[str] = []
+        gov = self.manager.governor
+        for family in zp.prefork_candidates(now):
+            if gov.budget_bytes is not None and zp.cfg.charge_governor:
+                if gov.pressure_bytes() > 0:
+                    gov.step(now=now)
+                    if gov.pressure_bytes() > 0:
+                        continue
+            inst = zp.ensure(family)
+            if inst is not None:
+                self.preforked_zygotes += 1
+                self.log.append((now, "zygote_prefork", family,
+                                 inst.instance_id))
+                acted.append(inst.instance_id)
         return acted
 
     def _revive_prefixes(self, instance_id: str) -> None:

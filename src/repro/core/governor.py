@@ -41,7 +41,7 @@ S = ContainerState
 #: deliberately absent: an in-transfer tenant is fenced — the state
 #: machine rejects every deflate/evict event on it.
 _IDLE_STATES = frozenset({S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL,
-                          S.HIBERNATE})
+                          S.HIBERNATE, S.ZYGOTE})
 
 #: states a cluster migration may ship from: the tenant's anon state is
 #: (or can cheaply be flushed) on the CAS/REAP disk tier
@@ -54,7 +54,7 @@ _APPLICABLE_FROM = {
     Rung.MMAP_CLEAN: frozenset({S.WARM}),
     Rung.PARTIAL: frozenset({S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL}),
     Rung.HIBERNATED: frozenset({S.WARM, S.WOKEN, S.MMAP_CLEAN, S.PARTIAL}),
-    Rung.TERMINATED: frozenset({S.HIBERNATE}),
+    Rung.TERMINATED: frozenset({S.HIBERNATE, S.ZYGOTE}),
 }
 
 
@@ -252,7 +252,14 @@ class MemoryGovernor:
         with self.manager._lock:
             meta = sum(i.metadata_bytes()
                        for i in self.manager.instances.values())
-        return self.manager.resident_bytes() + meta
+        total = self.manager.resident_bytes() + meta
+        zp = getattr(self.manager, "zygotes", None)
+        if zp is not None and not zp.cfg.charge_governor:
+            # operator chose to run the pool off-budget: exempt zygote
+            # anon + metadata bytes (shared base weights stay charged —
+            # live tenants share those buffers)
+            total -= zp.uncharged_bytes()
+        return total
 
     def pressure_bytes(self, budget_bytes: Optional[int] = None) -> int:
         """Bytes over budget right now (<= 0 means no pressure)."""
@@ -303,8 +310,17 @@ class MemoryGovernor:
             for inst in insts:
                 if inst.state not in _IDLE_STATES:
                     continue
-                gap = self.predicted_gap(inst.instance_id, now,
-                                         last_used=inst.last_used)
+                if inst.state is S.ZYGOTE:
+                    # a zygote's bytes are priced against their *fork-
+                    # avoidance* value: the predicted gap until the
+                    # family's next new-tenant admission plays the role
+                    # the tenant's next-request gap plays below — a
+                    # family forking often keeps its donor, a stale one
+                    # gives its bytes up first
+                    gap = self._zygote_gap(inst, now)
+                else:
+                    gap = self.predicted_gap(inst.instance_id, now,
+                                             last_used=inst.last_used)
                 for rung_to, benefit in self._candidates(inst, now, need):
                     if benefit <= 0:
                         continue
@@ -378,7 +394,22 @@ class MemoryGovernor:
                 # the tenant's swap-store segment refs (disk GC)
                 out.append((Rung.TERMINATED,
                             min(inst.metadata_bytes(), need)))
+        elif state == S.ZYGOTE:
+            # a zygote has exactly one descent: retire (it holds no
+            # tenant state to deflate — its value IS being inflated).
+            # No idle gate: fork-avoidance economics, not idleness,
+            # decide, via the gap term in ``step``'s scoring.
+            out.append((Rung.TERMINATED,
+                        min(self._anon_resident_bytes(inst)
+                            + self._mmap_benefit(inst)
+                            + inst.metadata_bytes(), need)))
         return out
+
+    def _zygote_gap(self, inst, now: float) -> float:
+        zp = getattr(self.manager, "zygotes", None)
+        if zp is None or inst.arch_key is None:
+            return 1.0
+        return zp.predicted_fork_gap(inst.arch_key, now)
 
     # ------------------------------------------------------- cluster tier
     def migration_candidates(self, now: Optional[float] = None
@@ -441,9 +472,13 @@ class MemoryGovernor:
             # must neither evict a live tenant nor fire an illegal event
             if inst.state not in _APPLICABLE_FROM[rung_to]:
                 return None
-            if rung_to == Rung.TERMINATED and (
-                    self.cfg.terminate_idle_s is None
-                    or (now - inst.last_used) <= self.cfg.terminate_idle_s):
+            if rung_to == Rung.TERMINATED and inst.state is not S.ZYGOTE \
+                    and (self.cfg.terminate_idle_s is None
+                         or (now - inst.last_used)
+                         <= self.cfg.terminate_idle_s):
+                # the idle gate protects *tenants* (losing one costs a
+                # cold start); a zygote retire loses nothing a re-spawn
+                # cannot rebuild, so it is gated by scoring alone
                 return None
             before = self._anon_resident_bytes(inst) \
                 + self._mmap_benefit(inst)
@@ -469,6 +504,8 @@ class MemoryGovernor:
                 freed = before
             else:                        # TERMINATED
                 freed = inst.metadata_bytes()
+                if inst.state is S.ZYGOTE:
+                    freed += before      # a retire frees resident bytes
                 # descend(TERMINATED) evicts (also forgets our arrivals)
                 self.manager.descend(iid, rung_to)
             act = GovernorAction(iid, rung_from, rung_to, freed, score,

@@ -30,6 +30,7 @@ from repro.core.state import (DEFLATE_EVENT_FOR, ContainerState, Event,
                               Rung)
 from repro.core.store import StorePolicy, SwapStore
 from repro.core.prefix import PREFIX_OWNER, PrefixRegistry
+from repro.core.zygote import ZygoteConfig, ZygotePool, is_zygote_id
 
 #: ladder states a wake (request-driven or predictive) climbs out of
 WAKEABLE_STATES = (ContainerState.HIBERNATE, ContainerState.PARTIAL,
@@ -52,6 +53,9 @@ class SharedWeightsRegistry:
 
     def acquire(self, base_id: str, inst: Optional[ModelInstance] = None
                 ) -> Dict[str, np.ndarray]:
+        """Incref ``base_id`` (loading at 0->1) and, when ``inst`` is
+        given, map the shared buffers into its weight table — every
+        sharer sees the *same* ndarrays, the mmap analogue."""
         if base_id not in self._weights:
             self._weights[base_id] = self.loader(base_id)
             self.reload_count += 1
@@ -71,14 +75,18 @@ class SharedWeightsRegistry:
         return sum(a.nbytes for a in w.values())
 
     def refcount(self, base_id: str) -> int:
+        """Current sharer count for ``base_id`` (0 if never acquired)."""
         return self._refs.get(base_id, 0)
 
     def is_loaded(self, base_id: str) -> bool:
+        """True while the shared buffers are resident (refcount > 0)."""
         return base_id in self._weights
 
 
 @dataclass
 class ManagerConfig:
+    """Per-node sizing and policy for one :class:`InstanceManager`."""
+
     spool_dir: str = "/tmp/repro_spool"
     pool_capacity_pages: int = 1 << 15
     pool_page_elems: int = 16384
@@ -130,9 +138,22 @@ class ManagerConfig:
     #: disables the daemon; requires ``dedup_store``.
     scrub_interval_s: Optional[float] = None
     scrub_bytes_per_round: int = 64 << 20
+    #: zygote fork donors (:mod:`repro.core.zygote`): a
+    #: :class:`~repro.core.zygote.ZygoteConfig` keeps a pool of
+    #: pre-initialized per-family instances so a brand-new tenant is
+    #: admitted by warm fork instead of cold init; None disables the pool
+    #: (``fork_start`` then always falls back to ``cold_start``)
+    zygote_pool: Optional[ZygoteConfig] = None
 
 
 class InstanceManager:
+    """The per-node "Serverless Platform" control plane: owns the
+    instance table, the shared-weight registry, the swap/CAS tier, the
+    wake pipeline, and the memory governor.  Tenants enter via
+    ``cold_start`` or ``fork_start``, descend the deflation ladder via
+    ``descend``, and wake via ``ensure_awake``; all entry points are
+    safe under the AsyncPlatform's worker pool."""
+
     def __init__(self, cfg: ManagerConfig,
                  factory: Callable[[str], tuple],
                  shared_loader: Optional[Callable] = None):
@@ -175,6 +196,15 @@ class InstanceManager:
         #: that arrived wanting one and found it already done/in flight
         self.wakes_performed = 0
         self.wakes_deduped = 0
+        #: zygote fork donors; None when the pool is not configured
+        self.zygotes: Optional[ZygotePool] = \
+            ZygotePool(self, cfg.zygote_pool) \
+            if cfg.zygote_pool is not None else None
+        #: fork-storm accounting, mirroring the wake counters: forks
+        #: actually performed vs callers that found the tenant already
+        #: admitted by a concurrent fork
+        self.forks_performed = 0
+        self.forks_deduped = 0
         #: eviction hook the platform layer registers so governor-driven
         #: TERMINATED descents also drop its per-tenant state (request
         #: queue entry, engine serve lock) — without it, tenant churn
@@ -191,6 +221,10 @@ class InstanceManager:
     # ------------------------------------------------------------- lifecycle
     def cold_start(self, instance_id: str, arch_key: str,
                    shared_paths=None) -> ModelInstance:
+        """① Admit a tenant the expensive way: run the factory (init or
+        checkpoint load), acquire the shared base weights, and enter the
+        state graph through ``COLD_START`` — the path ``fork_start``
+        exists to avoid.  Returns the installed instance."""
         model_cfg, params = self.factory(arch_key)
         inst = ModelInstance(
             instance_id, model_cfg, params, pool=self.pool,
@@ -205,8 +239,78 @@ class InstanceManager:
         inst.sm.fire(Event.COLD_START)
         with self._lock:
             self.instances[instance_id] = inst
+        if self.zygotes is not None and not is_zygote_id(instance_id):
+            # a cold start IS a new-tenant admission the pool missed —
+            # it trains the same fork-avoidance signal a fork does
+            self.zygotes.note_admission(arch_key)
         self.events.append((time.monotonic(), "cold_start", instance_id))
         return inst
+
+    def fork_start(self, instance_id: str, arch_key: str,
+                   shared_paths=None) -> Optional[ModelInstance]:
+        """Admit a brand-new tenant by specializing a zygote (warm fork).
+
+        Returns None when no pool is configured or no live zygote of the
+        family exists — the caller falls back to ``cold_start``.  The
+        fork order is refcount-safe: the tenant acquires its own
+        shared-registry ref *before* the donor's is released, so the
+        shared base never dips to refcount 0 (no checkpoint re-read, and
+        retiring the donor can never free a forked tenant's pages).  The
+        tenant inherits the donor's compiled executables (same family ⇒
+        same model config object from the factory cache) and copies its
+        anonymous weights — a memcpy, not an init.  Concurrent callers
+        for one tenant dedup on the per-instance wake lock: exactly one
+        fork happens, late arrivals get the installed instance
+        (``forks_deduped``).
+        """
+        if self.zygotes is None:
+            return None
+        with self._wake_lock(instance_id):
+            with self._lock:
+                existing = self.instances.get(instance_id)
+            if existing is not None:
+                self.forks_deduped += 1
+                return existing
+            zyg = self.zygotes.take(arch_key)
+            if zyg is None:
+                return None
+            inst = ModelInstance(
+                instance_id, zyg.cfg, zyg.params_pytree(), pool=self.pool,
+                spool_dir=self.cfg.spool_dir,
+                shared_paths=shared_paths if self.shared else None,
+                base_id=arch_key if self.shared else None,
+                store=self.store,
+                metadata_bytes=self.cfg.husk_metadata_bytes,
+                arch_key=arch_key)
+            if self.shared and inst.base_id and inst.shared_paths:
+                self.shared.acquire(inst.base_id, inst)
+            inst.compiled = zyg.compiled
+            inst.sm.fire(Event.FORK)
+            with self._lock:
+                self.instances[instance_id] = inst
+            self._consume_zygote(zyg)
+            self.zygotes.note_admission(arch_key)
+            self.zygotes.forked += 1
+            self.forks_performed += 1
+            self.events.append((time.monotonic(), "fork", instance_id,
+                                zyg.instance_id))
+            return inst
+
+    def _consume_zygote(self, zyg: ModelInstance) -> None:
+        # the donor dies by being forked: (ZYGOTE, FORK) -> DEAD.  Its
+        # shared ref is released AFTER the tenant took one (fork_start
+        # ordering), so release never drops the base to zero here.
+        zid = zyg.instance_id
+        with self._lock:
+            self.instances.pop(zid, None)
+            self._wake_locks.pop(zid, None)
+        self.hib._release_mmap(zyg)
+        zyg.sm.fire(Event.FORK)
+        zyg.terminate()
+        self.governor.forget(zid)
+        if self.zygotes is not None:
+            self.zygotes.note_evicted(zid)
+        self.events.append((time.monotonic(), "zygote_consumed", zid))
 
     def descend(self, instance_id: str, rung, *, keys=None):
         """Walk one tenant down the deflation ladder to ``rung``.
@@ -353,6 +457,9 @@ class InstanceManager:
                             inst.instance_id))
 
     def evict(self, instance_id: str) -> None:
+        """TERMINATED: destroy the container — release its shared mmap
+        ref, its prefix sharer slots, and its swap files (§3.4); zygotes
+        retire through here too (``(ZYGOTE, EVICT) -> DEAD``)."""
         with self._lock:
             inst = self.instances.pop(instance_id)
             self._wake_locks.pop(instance_id, None)
@@ -367,12 +474,18 @@ class InstanceManager:
             self.prefix_registry.forget_owner(instance_id)
         inst.terminate()                       # swap files deleted (§3.4)
         self.governor.forget(instance_id)
+        if self.zygotes is not None:
+            self.zygotes.note_evicted(instance_id)
         if self.on_evict is not None:
             self.on_evict(instance_id)
         self.events.append((time.monotonic(), "evict", instance_id))
 
     # ------------------------------------------------------------- policy
     def resident_bytes(self) -> int:
+        """Deployment-wide resident application bytes, PSS-accounted:
+        private weights + proportional pool shares per tenant, shared
+        base weights once per loaded ``base_id``, the prefix registry's
+        own pinned share once."""
         tot = 0
         seen_shared = set()
         with self._lock:
@@ -414,5 +527,6 @@ class InstanceManager:
         return acted
 
     def states(self) -> Dict[str, str]:
+        """``{instance_id: state value}`` snapshot of the table."""
         with self._lock:
             return {k: v.state.value for k, v in self.instances.items()}

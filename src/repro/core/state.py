@@ -41,6 +41,7 @@ class ContainerState(enum.Enum):
     HIBERNATE_RUNNING = "hib_running"    # woken by a request, processing
     WOKEN = "woken"                      # request finished, partially inflated
     MIGRATING = "migrating"              # snapshot in transit to another node
+    ZYGOTE = "zygote"                    # pre-initialized, unowned fork donor
     DEAD = "dead"                        # evicted / terminated
 
 
@@ -66,6 +67,8 @@ class Event(enum.Enum):
     MIGRATE = "migrate"                  # cluster: ship snapshot to a peer node
     MIGRATE_DONE = "migrate_done"        # transfer committed on the target
     MIGRATE_ABORT = "migrate_abort"      # transfer failed: state stays local
+    ZYGOTE_SPAWN = "zygote_spawn"        # pool pre-initializes a fork donor
+    FORK = "fork"                        # new tenant specializes a zygote
 
 
 S, E = ContainerState, Event
@@ -121,6 +124,15 @@ TRANSITIONS: Dict[Tuple[ContainerState, Event], Tuple[ContainerState, str]] = {
     (S.HIBERNATE, E.MIGRATE):          (S.MIGRATING, "(10)"),
     (S.MIGRATING, E.MIGRATE_DONE):     (S.DEAD, "(11)"),
     (S.MIGRATING, E.MIGRATE_ABORT):    (S.HIBERNATE, "(11')"),
+    # --- zygote pool: a pre-initialized, tenant-less fork donor.  A
+    # ZYGOTE never serves (REQUEST is deliberately NOT legal here) — it
+    # exists only to be consumed by a fork or retired by the governor.
+    # The forked *tenant* enters the graph through (COLD, FORK), so its
+    # history distinguishes a warm fork from a true cold start.
+    (S.COLD, E.ZYGOTE_SPAWN):          (S.ZYGOTE, "(z1)"),
+    (S.COLD, E.FORK):                  (S.WARM, "(z2)"),
+    (S.ZYGOTE, E.FORK):                (S.DEAD, "(z3)"),
+    (S.ZYGOTE, E.EVICT):               (S.DEAD, "retire"),
 }
 
 #: states in which the instance holds *no* device memory for app state
@@ -144,6 +156,9 @@ RUNG_OF: Dict[ContainerState, Rung] = {
     # migrate_out flushes anon state to disk before the state flips, so a
     # MIGRATING instance holds hibernated-rung memory (metadata only)
     S.MIGRATING: Rung.HIBERNATED,
+    # a zygote is fully inflated (that is its whole value); its bytes are
+    # priced by the governor against fork avoidance, not wake cost
+    S.ZYGOTE: Rung.WARM,
     S.DEAD: Rung.TERMINATED,
     S.COLD: Rung.TERMINATED,
 }

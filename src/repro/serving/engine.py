@@ -158,6 +158,11 @@ class ServingEngine:
         self.trace = LatencyTrace()
         self._locks: Dict[str, threading.RLock] = {}
         self._locks_guard = threading.Lock()
+        # the zygote pool compiles through the engine: spawned donors get
+        # their prefill executables pre-built so a fork inherits them
+        zp = manager.zygotes
+        if zp is not None and zp.precompile is None:
+            zp.precompile = self.precompile_prefill
 
     def instance_lock(self, instance_id: str) -> threading.RLock:
         """Per-instance serve lock: held for the whole of ``serve_batch``;
@@ -185,6 +190,44 @@ class ServingEngine:
             inst.kv = PagedKVCache(instance_id, inst.cfg, self.manager.pool,
                                    registry=self.manager.prefix_registry)
         return inst
+
+    def fork_instance(self, instance_id: str, arch_key: str,
+                      shared_paths=None) -> Optional[ModelInstance]:
+        """Fork admission: specialize a live zygote of ``arch_key`` into
+        a new tenant (warm weights memcpy, inherited compiled prefill,
+        shared base by refcount) and attach a fresh paged cache.  Returns
+        None when no zygote is available — callers fall back to
+        ``start_instance``.  A concurrent fork of the same tenant dedups
+        below (the returned instance may already carry a cache)."""
+        with self.trace.span("fork_start"):
+            inst = self.manager.fork_start(instance_id, arch_key,
+                                           shared_paths=shared_paths)
+            if inst is not None and inst.kv is None:
+                inst.kv = PagedKVCache(instance_id, inst.cfg,
+                                       self.manager.pool,
+                                       registry=self.manager.prefix_registry)
+        return inst
+
+    def precompile_prefill(self, inst: ModelInstance) -> None:
+        """Pre-build the prefill executables for a zygote — the cold-start
+        cost a fork skips.  Each configured prompt length is compiled by
+        an actual dummy dispatch (jit tracing alone would defer the XLA
+        compile to the first real request); lengths that cannot run on
+        dummy inputs (frontend archs wanting embeds/frames) are skipped —
+        the fork still wins on init, just not on compile."""
+        zp = self.manager.zygotes
+        lens = zp.cfg.precompile_prompt_lens if zp is not None else (8,)
+        params = inst.params_pytree()
+        for L in lens:
+            try:
+                fn = self._compiled(inst, "prefill", 1, int(L),
+                                    False, False)
+                logits, _, _ = fn(params,
+                                  jnp.zeros((1, int(L)), jnp.int32),
+                                  None, None)
+                jax.block_until_ready(logits)
+            except Exception:
+                continue
 
     def _compiled(self, inst: ModelInstance, kind: str, B: int, Sb: int,
                   has_embeds: bool, has_frames: bool):

@@ -211,7 +211,11 @@ class FrontDoor:
     node's :class:`~repro.serving.scheduler.AsyncPlatform` or a
     :class:`~repro.cluster.router.ClusterRouter` (which places unknown
     tenants cluster-wide).  ``arch_of`` registrations flow to the target
-    so cold starts resolve their model architecture."""
+    so first-request admission resolves the model architecture — and,
+    when the target's node holds a live zygote of that family, admits
+    the unknown tenant by warm fork instead of a cold init (the
+    platform's serve path and the router's ``place`` both try
+    ``fork_instance`` first)."""
 
     def __init__(self, target, *,
                  policy: Optional[FrontDoorPolicy] = None):
@@ -241,7 +245,8 @@ class FrontDoor:
         return self.target.arch_of
 
     def register(self, instance_id: str, arch_key: str) -> None:
-        """Bind a tenant to a model architecture for cold starts."""
+        """Bind a tenant to a model architecture for admission (cold
+        start, or warm fork when a zygote of the family is live)."""
         self.target.arch_of.setdefault(instance_id, arch_key)
 
     def _platform_for(self, instance_id: str):

@@ -303,8 +303,15 @@ class AsyncPlatform:
         try:
             mgr = self.engine.manager
             if iid not in mgr.instances and iid not in mgr.migrated:
-                self.engine.start_instance(iid, self.arch_of[iid])
-                self.log.append((time.monotonic(), "cold_start", iid))
+                # first request of an unknown tenant: specialize a zygote
+                # (warm fork) when the pool holds one for this family;
+                # fall back to the classic cold init otherwise
+                arch = self.arch_of[iid]
+                if self.engine.fork_instance(iid, arch) is not None:
+                    self.log.append((time.monotonic(), "fork_start", iid))
+                else:
+                    self.engine.start_instance(iid, arch)
+                    self.log.append((time.monotonic(), "cold_start", iid))
             t0 = time.monotonic()
             resps = self.engine.serve_batch(iid, reqs)
             per_req = (time.monotonic() - t0) / max(len(reqs), 1)
@@ -401,6 +408,12 @@ class AsyncPlatform:
             for iid in self._forecast_daemon.step(now):
                 self.log.append((now, "forecast_wake", iid))
                 acted.append(iid)
+        # zygote TTL: retire donors idle past retire_idle_s even without
+        # memory pressure (the governor handles the pressure-driven case)
+        if mgr.zygotes is not None:
+            for zid in mgr.zygotes.reap_idle(now):
+                self.log.append((now, "zygote_retire", zid))
+                acted.append(zid)
         return acted
 
 
